@@ -1,0 +1,43 @@
+"""Shared benchmark helpers: timing, CSV rows, device sync."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+
+def sync(tree):
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return tree
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kwargs) -> Dict[str, float]:
+    for _ in range(warmup):
+        sync(fn(*args, **kwargs))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        sync(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    arr = np.asarray(times)
+    return {"mean_s": float(arr.mean()), "min_s": float(arr.min()),
+            "p50_s": float(np.percentile(arr, 50))}
+
+
+class Report:
+    """Collects ``name,us_per_call,derived`` CSV rows."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, seconds: float, derived: str = ""):
+        self.rows.append(f"{name},{seconds * 1e6:.1f},{derived}")
+        print(self.rows[-1], flush=True)
+
+    def dump(self):
+        return "\n".join(["name,us_per_call,derived"] + self.rows)

@@ -1,0 +1,45 @@
+"""Paper §1 "Online training" — Embedding Training Cache staging throughput.
+
+Measures rows/s for the host-side staging step (pull + evict + remap)
+against both PS tiers (StagedPS host-memory, CachedPS disk memmap), at
+several cache capacities, plus the hit behaviour on a Zipf stream."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Report
+from repro.configs.base import EmbeddingTableConfig
+from repro.core.etc.cache import EmbeddingTrainingCache
+from repro.core.etc.parameter_server import CachedPS, StagedPS
+
+
+def _zipf_ids(rng, vocab, size, a=1.2):
+    u = rng.random(size)
+    x = (u * ((vocab + 1.0) ** (1 - a) - 1.0) + 1.0) ** (1 / (1 - a))
+    return np.clip(np.floor(x).astype(np.int64) - 1, 0, vocab - 1) \
+        .astype(np.int32)
+
+
+def run(report: Report, tmp_root: str = "artifacts/bench_etc"):
+    vocab, dim, batch = 500_000, 64, 1024
+    tabs = [EmbeddingTableConfig("t0", vocab, dim, hotness=2)]
+    rng = np.random.default_rng(0)
+
+    for ps_name, ps in (("staged", StagedPS(tabs)),
+                        ("cached", CachedPS(tabs, tmp_root))):
+        for cap in (4096, 65536):
+            etc = EmbeddingTrainingCache(tabs, capacity=cap, ps=ps)
+            params = etc.init_params()
+            steps, t0 = 8, time.perf_counter()
+            rows_seen = 0
+            for s in range(steps):
+                cat = _zipf_ids(rng, vocab, (batch, 1, 2))
+                params, _ = etc.prepare(params, cat)
+                rows_seen += (cat >= 0).sum()
+            dt = time.perf_counter() - t0
+            report.add(
+                f"etc_staging.{ps_name}.cap{cap}", dt / steps,
+                f"ids_per_s={rows_seen / dt:.0f} pulls={etc.pulls} "
+                f"evictions={etc.evictions}")

@@ -1,0 +1,119 @@
+"""Paper §3 claim — HPS inference speedup, batch-size dependent (5–62x).
+
+Three inference embedding paths over a Zipf request stream:
+
+  cpu_baseline — per-request python-dict lookups + numpy dense net
+                 (the "CPU baseline implementation" of the paper),
+  hps          — L1 device cache (hot hits) + VDB/PDB fall-through, jitted
+                 dense net,
+  device_full  — entire table resident on device (upper bound).
+
+Reported per batch size, mirroring the paper's batch-dependent speedup
+curve."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Report, time_fn
+from repro.configs.registry import RECSYS_ARCHS
+from repro.core.hps.hps import HPS
+from repro.core.hps.persistent_db import PersistentDB
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.mesh import make_test_mesh
+from repro.models.recsys.model import RecsysModel
+from repro.serve.server import InferenceServer, deploy_from_training
+
+
+class CpuBaseline:
+    """Dict-of-rows lookup + numpy MLP — no device, no cache."""
+
+    def __init__(self, model, params):
+        self.model = model
+        logical = model.embedding.export_logical(params["embedding"])
+        self.tables = {}
+        g = model.embedding.groups["dp"]
+        mega = np.asarray(logical["dp"])
+        for i, (t, off) in enumerate(zip(g.tables, g.offsets)):
+            end = g.offsets[i + 1] if i + 1 < g.num_tables else g.total_rows
+            self.tables[i] = {j: mega[off + j] for j in range(end - off)}
+        self.dense_params = jax.tree.map(
+            np.asarray, {k: v for k, v in params.items()
+                         if k != "embedding"})
+
+    def predict(self, dense, cat):
+        b, t, h = cat.shape
+        d = next(iter(self.tables[0].values())).shape[0]
+        emb = np.zeros((b, t, d), np.float32)
+        for bi in range(b):
+            for ti in range(t):
+                for hi in range(h):
+                    v = cat[bi, ti, hi]
+                    if v >= 0:
+                        emb[bi, ti] += self.tables[ti][int(v)]
+        # numpy dense net (bottom mlp + interaction + top mlp)
+        p = self.dense_params
+        x = dense
+        i = 0
+        while f"w{i}" in p["bottom"]:
+            x = np.maximum(x @ p["bottom"][f"w{i}"] + p["bottom"][f"b{i}"],
+                           0)
+            i += 1
+        feats = np.concatenate([x[:, None, :], emb], axis=1)
+        gram = np.einsum("bfd,bgd->bfg", feats, feats)
+        iu, ju = np.tril_indices(feats.shape[1], -1)
+        top_in = np.concatenate([x, gram[:, iu, ju]], axis=1)
+        i = 0
+        h_ = top_in
+        n = len(p["top"]) // 2
+        while f"w{i}" in p["top"]:
+            h_ = h_ @ p["top"][f"w{i}"] + p["top"][f"b{i}"]
+            if i < n - 1:
+                h_ = np.maximum(h_, 0)
+            i += 1
+        return 1 / (1 + np.exp(-h_[:, 0]))
+
+
+def run(report: Report, tmp_root: str = "artifacts/bench_hps"):
+    cfg0 = RECSYS_ARCHS["dlrm-criteo"]
+    tables = tuple(dataclasses.replace(
+        t, vocab_size=min(t.vocab_size, 30000), dim=32,
+        strategy="data_parallel") for t in cfg0.tables[:8])
+    cfg = dataclasses.replace(cfg0, tables=tables, embedding_dim=32,
+                              bottom_mlp=(64, 32),
+                              top_mlp=(128, 64, 1))
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        model = RecsysModel(cfg, mesh, global_batch=64)
+        params = model.init(jax.random.PRNGKey(0))
+        pdb = PersistentDB(tmp_root)
+        deploy_from_training(model, params, pdb, "dlrm-bench")
+        hps = HPS("dlrm-bench", cfg.tables, pdb, cache_capacity=4096)
+        dense_params = {k: v for k, v in params.items()
+                        if k != "embedding"}
+        server = InferenceServer(model, dense_params, hps)
+        baseline = CpuBaseline(model, params)
+
+        for batch_size in (1, 16, 256, 2048):
+            ds = SyntheticCTR(cfg, batch_size)
+            b = ds.batch(0)
+            # warm the cache with the zipf head
+            for s in range(3):
+                w = ds.batch(s + 100)
+                server.predict(w["dense"], w["cat"])
+
+            t_hps = time_fn(lambda: server.predict(b["dense"], b["cat"]),
+                            iters=5)["min_s"]
+            t_cpu = time_fn(lambda: baseline.predict(b["dense"], b["cat"]),
+                            warmup=1, iters=3)["min_s"]
+            report.add(f"hps_infer.b{batch_size}.hps", t_hps,
+                       f"qps={batch_size / t_hps:.0f}")
+            report.add(f"hps_infer.b{batch_size}.cpu_baseline", t_cpu,
+                       f"qps={batch_size / t_cpu:.0f}")
+            report.add(f"hps_infer.b{batch_size}.speedup", t_cpu / t_hps,
+                       f"x={t_cpu / t_hps:.1f}")
+        hit = np.mean(list(hps.stats()["l1_hit_rate"].values()))
+        report.add("hps_infer.l1_hit_rate", hit, f"rate={hit:.3f}")

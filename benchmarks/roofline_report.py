@@ -1,0 +1,97 @@
+"""Aggregate the dry-run artifacts into the §Roofline table.
+
+Reads ``artifacts/dryrun/*.json`` and emits a markdown table with the
+three roofline terms, the dominant bottleneck, the model-FLOPs ratio, and
+the roofline fraction (model_flops-based MFU bound at the step-time lower
+bound)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.launch.hlo_analysis import PEAK_FLOPS
+
+
+def load_records(outdir: str = "artifacts/dryrun",
+                 variant: Optional[str] = "baseline") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if variant and r.get("variant") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_fraction(rec: Dict) -> Optional[float]:
+    """Useful-FLOPs MFU at the roofline lower bound: how close the step
+    would run to peak if it hit every roofline term simultaneously."""
+    a = rec.get("analysis")
+    if not a or rec.get("status") != "ok":
+        return None
+    step = a["step_s_lower_bound"]
+    if step <= 0:
+        return None
+    useful = rec["model_flops"] / rec["n_devices"]
+    return useful / step / PEAK_FLOPS
+
+
+def fmt_row(rec: Dict) -> str:
+    a = rec.get("analysis", {})
+    mem = rec.get("memory", {})
+    if rec.get("status") == "skipped":
+        return (f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                f"skipped ({rec.get('reason', '')[:40]}…) "
+                "| | | | | |")
+    if rec.get("status") != "ok":
+        return (f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                f"ERROR | | | | | |")
+    rf = roofline_fraction(rec)
+    return ("| {arch} | {shape} | {mesh} | {tc:.2f} | {tm:.2f} | {tn:.2f} "
+            "| {dom} | {ratio:.2f} | {rf:.1%} |").format(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        tc=a["compute_s"] * 1e3, tm=a["memory_s"] * 1e3,
+        tn=a["collective_s"] * 1e3, dom=a["dominant"],
+        ratio=rec.get("model_flops_ratio") or 0.0, rf=rf or 0.0)
+
+
+HEADER = ("| arch | shape | mesh | Tcompute (ms) | Tmemory (ms) | "
+          "Tcollective (ms) | dominant | model/HLO FLOPs | roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def table(outdir: str = "artifacts/dryrun", mesh: Optional[str] = None,
+          variant: Optional[str] = "baseline") -> str:
+    rows = [HEADER]
+    for r in load_records(outdir, variant):
+        if mesh and r.get("mesh") != mesh:
+            continue
+        rows.append(fmt_row(r))
+    return "\n".join(rows)
+
+
+def run(report):
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if not ok:
+        report.add("roofline.no_artifacts", 0.0,
+                   "run repro.launch.dryrun first")
+        return
+    for r in ok:
+        if r["mesh"] != "single":
+            continue
+        a = r["analysis"]
+        rf = roofline_fraction(r)
+        report.add(
+            f"roofline.{r['arch']}.{r['shape']}",
+            a["step_s_lower_bound"],
+            f"dom={a['dominant']} frac={rf:.3f} ratio="
+            f"{r.get('model_flops_ratio') or 0:.2f}")
+
+
+if __name__ == "__main__":
+    import sys
+    print(table(mesh=sys.argv[1] if len(sys.argv) > 1 else None))

@@ -1,0 +1,93 @@
+"""Embedding Training Cache demo (paper §1 "Online training"):
+
+train a model whose embedding tables DO NOT FIT in (simulated) device
+memory — the ETC stages 4k-row working sets against a disk-backed
+parameter server, exactly HugeCTR's Staged-PS/Cached-PS hierarchy.
+
+Run:  PYTHONPATH=src python examples/etc_terabyte_training.py
+"""
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EmbeddingTableConfig, TrainConfig
+from repro.core.etc.cache import EmbeddingTrainingCache, cached_lookup
+from repro.core.etc.parameter_server import CachedPS
+from repro.optim.sparse import rowwise_adagrad
+
+
+def main():
+    # 2 tables × 1M rows × 64 dims = 512 MB of f32 "model" vs a 4k-row cache
+    vocab, dim, cap, batch = 1_000_000, 64, 1024, 512
+    tabs = [EmbeddingTableConfig(f"t{i}", vocab, dim, hotness=2)
+            for i in range(2)]
+
+    with tempfile.TemporaryDirectory() as root:
+        t0 = time.time()
+        ps = CachedPS(tabs, root)      # disk-backed ground truth
+        print(f"initialized {2 * vocab * dim * 4 / 2**20:.0f} MiB of "
+              f"disk-backed tables in {time.time() - t0:.1f}s")
+        etc = EmbeddingTrainingCache(tabs, capacity=cap, ps=ps)
+        params = etc.init_params()
+        print(f"device-resident cache: "
+              f"{params['cache'].nbytes / 2**20:.1f} MiB "
+              f"({cap} rows/table vs {vocab} total)")
+
+        opt = rowwise_adagrad(TrainConfig(learning_rate=0.05))
+        rng = np.random.default_rng(0)
+        target_w = rng.normal(size=(dim,)).astype(np.float32)
+
+        @jax.jit
+        def train_step(params, remapped, labels):
+            def loss_fn(p):
+                pooled = cached_lookup(p, remapped)      # [B, T, D]
+                logit = pooled.sum(1) @ jnp.asarray(target_w)
+                return jnp.mean(
+                    jnp.maximum(logit, 0) - logit * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+            loss, g = jax.value_and_grad(loss_fn)(params)
+            t, c, d_ = params["cache"].shape
+            new_p, new_s = opt.update(
+                {"x": g["cache"].reshape(t * c, d_)},
+                {"acc": {"x": params["acc"].reshape(t * c)}},
+                {"x": params["cache"].reshape(t * c, d_)})
+            return {"cache": new_p["x"].reshape(t, c, d_),
+                    "acc": new_s["acc"]["x"].reshape(t, c)}, loss
+
+        def zipf(size):
+            # a=1.6: hot head recurs often enough to learn within the demo
+            u = rng.random(size)
+            x = (u * ((vocab + 1.0) ** -0.6 - 1.0) + 1.0) ** (1 / -0.6)
+            return np.clip(np.floor(x).astype(np.int64) - 1, 0,
+                           vocab - 1).astype(np.int32)
+
+        losses = []
+        for i in range(60):
+            cat = zipf((batch, 2, 2))
+            params, remapped = etc.prepare(params, cat)  # host staging
+            # planted signal: per-id parity — learnable purely through the
+            # embedding rows, which is the point of the demo
+            labels = (cat[:, 0, 0] % 2 == 0).astype(np.float32)
+            params, loss = train_step(params, jnp.asarray(remapped),
+                                      jnp.asarray(labels))
+            losses.append(float(loss))
+            if i % 10 == 0:
+                print(f"step {i:3d} loss={losses[-1]:.4f} "
+                      f"pulls={etc.pulls} evictions={etc.evictions}")
+
+        etc.flush(params)
+        ps.flush()
+        first = float(np.mean(losses[:10]))
+        last = float(np.mean(losses[-10:]))
+        print(f"\nfinal: loss {first:.4f} -> {last:.4f} (10-step means); "
+              f"{etc.pulls} rows pulled, {etc.evictions} evicted; "
+              f"trained state persisted to disk ✓")
+        assert last < first, "hot-id signal must be learnable"
+
+
+if __name__ == "__main__":
+    main()

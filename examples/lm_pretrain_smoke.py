@@ -1,0 +1,73 @@
+"""Assigned-architecture driver: pick any of the 10 LM archs (reduced to
+CPU scale) and run a short pre-training loop with the hybrid (hot/cold)
+vocab embedding — the paper's technique applied to LM token tables.
+
+Run:  PYTHONPATH=src python examples/lm_pretrain_smoke.py --arch olmo-1b
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import LM_ARCHS, reduce_for_smoke
+from repro.launch.mesh import make_test_mesh
+from repro.models.lm.backbone import LMModel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=sorted(LM_ARCHS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = reduce_for_smoke(LM_ARCHS[args.arch])
+    mesh = make_test_mesh((1, 1))
+    print(f"arch={args.arch} (smoke-reduced): {cfg.num_layers}L "
+          f"d={cfg.d_model} vocab={cfg.vocab_size} "
+          f"pattern={cfg.block_pattern}")
+
+    with mesh:
+        model = LMModel(cfg, mesh, embed_mode="hybrid", hot_fraction=0.1,
+                        q_chunk=32, k_chunk=32, loss_chunk=32)
+        params = model.init(jax.random.PRNGKey(0))
+        print(f"embed mode={model.embed_mode}: hot={model.hot_rows} rows "
+              f"(replicated), cold={model.cold_rows} rows (sharded)")
+
+        lr = 3e-3
+
+        @jax.jit
+        def step(params, tokens):
+            def loss_fn(p):
+                return model.train_loss(p, {"tokens": tokens})
+            loss, g = jax.value_and_grad(loss_fn)(params)
+            new = jax.tree.map(lambda p, gg: p - lr * gg.astype(p.dtype),
+                               params, g)
+            return new, loss
+
+        rng = np.random.default_rng(0)
+        # zipf tokens so the hot cache actually serves most lookups
+        def batch():
+            u = rng.random((args.batch, args.seq))
+            a = 1.2
+            x = (u * ((cfg.vocab_size + 1.) ** (1 - a) - 1.) + 1.) \
+                ** (1 / (1 - a))
+            return jnp.asarray(np.clip(x.astype(np.int64) - 1, 0,
+                                       cfg.vocab_size - 1))
+
+        losses = []
+        for i in range(args.steps):
+            params, loss = step(params, batch())
+            losses.append(float(loss))
+            if i % 10 == 0:
+                print(f"step {i:3d}  loss={losses[-1]:.4f}")
+        print(f"\nloss {losses[0]:.4f} -> {losses[-1]:.4f} "
+              f"(ln V = {np.log(cfg.vocab_size):.2f})")
+        assert losses[-1] < losses[0], "no learning signal"
+        print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end driver: train a ~100M-parameter DLRM for a few hundred steps
+with the full production substrate — fault-tolerant Trainer, async atomic
+checkpoints, Zipf synthetic Criteo-like data, AUC eval, and an injected
+mid-run failure to demonstrate checkpoint-restore + deterministic replay.
+
+Run:  PYTHONPATH=src python examples/train_dlrm_e2e.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import RECSYS_ARCHS
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.mesh import make_test_mesh
+from repro.models.recsys.layers import auc
+from repro.models.recsys.model import RecsysModel
+from repro.train.trainer import Trainer
+
+
+def build_cfg():
+    """~100M parameters: 26 tables, capped vocabs, D=64."""
+    base = RECSYS_ARCHS["dlrm-criteo"]
+    tables = tuple(dataclasses.replace(
+        t, vocab_size=min(t.vocab_size, 60_000), dim=64)
+        for t in base.tables)
+    cfg = dataclasses.replace(base, tables=tables, embedding_dim=64,
+                              bottom_mlp=(256, 128, 64),
+                              top_mlp=(512, 256, 1))
+    n = cfg.total_embedding_params
+    print(f"model: {cfg.num_tables} tables, {n / 1e6:.1f}M embedding params")
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--ckpt-dir", default="artifacts/e2e_ckpt")
+    ap.add_argument("--inject-failure", action="store_true", default=True)
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    cfg = build_cfg()
+    mesh = make_test_mesh((1, 1))
+    data = SyntheticCTR(cfg, args.batch)
+
+    with mesh:
+        model = RecsysModel(cfg, mesh, global_batch=args.batch)
+        tcfg = TrainConfig(learning_rate=5e-3)
+        trainer = Trainer(model, tcfg, mesh, data.batch,
+                          ckpt_dir=args.ckpt_dir, ckpt_interval=50)
+        if args.inject_failure:
+            armed = {"on": True}
+
+            def inject(step):
+                if step == args.steps // 2 and armed["on"]:
+                    armed["on"] = False
+                    print(f"*** injecting node failure at step {step} ***")
+                    raise RuntimeError("injected failure")
+
+            trainer.failure_injector = inject
+
+        t0 = time.time()
+        out = trainer.train(args.steps, log_every=25)
+        dt = time.time() - t0
+
+    hist = out["history"]
+    print(f"\n{len(hist)} steps in {dt:.1f}s "
+          f"({args.batch * len(hist) / dt:.0f} samples/s)")
+    print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    print(f"stragglers flagged: {out['stragglers']}")
+
+    # -- eval AUC on held-out steps ----------------------------------------
+    import jax.numpy as jnp
+    params = out["params"]
+    logits_all, labels_all = [], []
+    fwd = jax.jit(model.apply)
+    for s in range(10_000, 10_005):
+        b = data.batch(s)
+        logits_all.append(np.asarray(fwd(
+            params, {k: jnp.asarray(v) for k, v in b.items()})))
+        labels_all.append(b["label"])
+    a = auc(np.concatenate(logits_all), np.concatenate(labels_all))
+    print(f"held-out AUC: {a:.4f} (planted-signal synthetic data)")
+    assert a > 0.6, "training failed to learn the planted signal"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Keras-like high-level API (paper §2).
+
+HugeCTR ships a Python API whose *look & feel* follows Keras so that
+"the tedious task of deploying individual training and inference jobs in
+an optimized manner on a specific hardware topology can be delegated" to
+the framework. Same idea here: declare tables + dense layers, call
+``compile()`` / ``fit()`` / ``predict()`` / ``deploy()`` — mesh
+construction, placement planning, sharding, jit, checkpoints all happen
+inside.
+
+    from repro.api import Model, SparseEmbedding, Dense
+
+    m = Model([
+        SparseEmbedding(vocab_sizes=[1000, 500, 200], dim=16, hotness=2),
+        Dense([64, 32, 1]),
+    ])
+    m.compile(optimizer="adamw", lr=1e-2)
+    hist = m.fit(data_fn, steps=100, ckpt_dir="/tmp/ckpt")
+    preds = m.predict(batch)
+    server = m.deploy("/tmp/pdb")          # -> HPS-backed server
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    EmbeddingTableConfig, RecsysConfig, TrainConfig,
+)
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+
+@dataclasses.dataclass
+class SparseEmbedding:
+    """Declarative embedding layer: one table per categorical feature.
+
+    ``strategy="auto"`` delegates placement (localized / distributed /
+    hybrid / replicated) to the planner, per table.
+    """
+    vocab_sizes: Sequence[int]
+    dim: int
+    hotness: int = 1
+    combiner: str = "sum"
+    strategy: str = "auto"
+    hot_fraction: float = 0.05
+
+    def to_tables(self):
+        return tuple(
+            EmbeddingTableConfig(f"f{i}", v, self.dim,
+                                 hotness=self.hotness,
+                                 combiner=self.combiner,
+                                 strategy=self.strategy,
+                                 hot_fraction=self.hot_fraction)
+            for i, v in enumerate(self.vocab_sizes))
+
+
+@dataclasses.dataclass
+class Dense:
+    """The dense tower (MLP over [dense_features; flattened embeddings])."""
+    units: Sequence[int]
+    num_dense_features: int = 13
+
+
+@dataclasses.dataclass
+class Interaction:
+    """DLRM-style pairwise-dot interaction between embedding vectors."""
+    bottom_mlp: Sequence[int] = (64, 16)
+    top_mlp: Sequence[int] = (64, 32, 1)
+    num_dense_features: int = 13
+
+
+class Model:
+
+    def __init__(self, layers: List, *, name: str = "model",
+                 mesh=None):
+        self.name = name
+        emb = [l for l in layers if isinstance(l, SparseEmbedding)]
+        if len(emb) != 1:
+            raise ValueError("exactly one SparseEmbedding layer required")
+        self._emb = emb[0]
+        dense = [l for l in layers if isinstance(l, (Dense, Interaction))]
+        if len(dense) != 1:
+            raise ValueError("exactly one Dense or Interaction layer "
+                             "required")
+        self._dense = dense[0]
+        n_dev = len(jax.devices())
+        self.mesh = mesh or (make_test_mesh((n_dev, 1)) if n_dev < 256
+                             else make_production_mesh())
+        self._model = None
+        self._params = None
+        self._opt_state = None
+        self._tcfg: Optional[TrainConfig] = None
+        self._trainer = None
+
+    # -- build ----------------------------------------------------------------
+
+    def _build_cfg(self, batch: int) -> RecsysConfig:
+        tables = self._emb.to_tables()
+        if isinstance(self._dense, Interaction):
+            bottom = tuple(self._dense.bottom_mlp)
+            if bottom[-1] != self._emb.dim:
+                bottom = bottom + (self._emb.dim,)
+            return RecsysConfig(
+                name=self.name, model="dlrm", tables=tables,
+                num_dense_features=self._dense.num_dense_features,
+                bottom_mlp=bottom, top_mlp=tuple(self._dense.top_mlp),
+                embedding_dim=self._emb.dim)
+        # plain Dense tower = DCN with zero cross layers (no wide branch,
+        # so the deployed server needs exactly one HPS)
+        units = tuple(self._dense.units)
+        if units[-1] == 1:
+            units = units[:-1] or (16,)
+        return RecsysConfig(
+            name=self.name, model="dcn", tables=tables,
+            num_dense_features=self._dense.num_dense_features,
+            bottom_mlp=(), top_mlp=units, embedding_dim=self._emb.dim,
+            num_cross_layers=0)
+
+    def compile(self, *, optimizer: str = "adamw", lr: float = 1e-3,
+                sparse_optimizer: str = "rowwise_adagrad",
+                batch_size: int = 256, mode: str = "gspmd"):
+        from repro.models.recsys.model import RecsysModel
+        self._tcfg = TrainConfig(learning_rate=lr,
+                                 dense_optimizer=optimizer,
+                                 sparse_optimizer=sparse_optimizer)
+        self.cfg = self._build_cfg(batch_size)
+        self.batch_size = batch_size
+        self._mode = mode
+        with self.mesh:
+            self._model = RecsysModel(self.cfg, self.mesh,
+                                      global_batch=batch_size)
+        return self
+
+    # -- train ------------------------------------------------------------------
+
+    def fit(self, data_fn: Callable[[int], Dict], steps: int, *,
+            ckpt_dir: Optional[str] = None, log_every: int = 0,
+            seed: int = 0) -> List[Dict]:
+        """``data_fn(step) -> {"dense", "cat", "label"}`` host batches."""
+        if self._model is None:
+            raise RuntimeError("call compile() first")
+        from repro.train.trainer import Trainer
+        with self.mesh:
+            self._trainer = Trainer(self._model, self._tcfg, self.mesh,
+                                    data_fn, ckpt_dir=ckpt_dir,
+                                    mode=self._mode)
+            out = self._trainer.train(steps, seed=seed,
+                                      log_every=log_every)
+        self._params = out["params"]
+        self._opt_state = out["opt_state"]
+        return out["history"]
+
+    # -- inference ----------------------------------------------------------------
+
+    def predict(self, batch: Dict) -> np.ndarray:
+        if self._params is None:
+            raise RuntimeError("fit() (or load) before predict()")
+        with self.mesh:
+            logits = jax.jit(self._model.apply)(
+                self._params,
+                {k: jnp.asarray(v) for k, v in batch.items()
+                 if k in ("dense", "cat")})
+        return np.asarray(jax.nn.sigmoid(logits))
+
+    def deploy(self, pdb_root: str, *, cache_capacity: int = 4096):
+        """Export to the HPS and return a ready InferenceServer."""
+        from repro.core.hps.hps import HPS
+        from repro.core.hps.persistent_db import PersistentDB
+        from repro.serve.server import InferenceServer, deploy_from_training
+        pdb = PersistentDB(pdb_root)
+        deploy_from_training(self._model, self._params, pdb, self.name)
+        hps = HPS(self.name, self.cfg.tables, pdb,
+                  cache_capacity=cache_capacity)
+        dense = {k: v for k, v in self._params.items()
+                 if k not in ("embedding",)}
+        wide_hps = None
+        return InferenceServer(self._model, dense, hps, wide_hps=wide_hps)
+
+    # -- persistence -----------------------------------------------------------------
+
+    def save(self, directory: str, step: int = 0):
+        from repro.train import checkpoint as ck
+        tree = {"params": self._trainer._export(self._params)
+                if self._trainer else self._params}
+        ck.save(directory, step, tree)
+
+    @property
+    def params(self):
+        return self._params

@@ -1,0 +1,217 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything the launcher needs to build a model, its sharding, and its
+input specs is declared here. Configs are plain frozen dataclasses so they
+hash/compare cleanly and can be embedded in dry-run artifact names.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Embedding tables (the paper's core object)
+# ---------------------------------------------------------------------------
+
+#: Communication/placement strategies from the paper (§1).
+LOCALIZED = "localized"      # whole table on one device, all-to-all after pool
+DISTRIBUTED = "distributed"  # rows striped across all devices (MP)
+HYBRID = "hybrid"            # hot rows replicated (DP), cold rows striped (MP)
+DATA_PARALLEL = "data_parallel"  # fully replicated (small tables)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingTableConfig:
+    """One categorical feature's embedding table."""
+    name: str
+    vocab_size: int
+    dim: int
+    #: number of ids per sample for this feature (1 = one-hot)
+    hotness: int = 1
+    #: "sum" | "mean" | "concat" (concat only valid for hotness == 1)
+    combiner: str = "sum"
+    #: placement strategy; "auto" lets the planner decide
+    strategy: str = "auto"
+    #: fraction of vocab treated as hot for HYBRID (planner may override)
+    hot_fraction: float = 0.05
+
+    @property
+    def param_count(self) -> int:
+        return self.vocab_size * self.dim
+
+
+# ---------------------------------------------------------------------------
+# Recsys models (DLRM / DCN / DeepFM / WDL)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    model: str                       # "dlrm" | "dcn" | "deepfm" | "wdl"
+    tables: Tuple[EmbeddingTableConfig, ...]
+    num_dense_features: int
+    bottom_mlp: Tuple[int, ...]
+    top_mlp: Tuple[int, ...]
+    embedding_dim: int               # shared D across tables (DLRM-style)
+    num_cross_layers: int = 3        # DCN only
+    dtype: str = "bf16"              # compute dtype
+
+    @property
+    def num_tables(self) -> int:
+        return len(self.tables)
+
+    @property
+    def total_embedding_params(self) -> int:
+        return sum(t.param_count for t in self.tables)
+
+
+# ---------------------------------------------------------------------------
+# LM-family architectures (assigned pool)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str                      # "dense"|"moe"|"audio"|"vlm"|"ssm"|"hybrid"
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm" | "nonparam_ln"
+    activation: str = "swiglu"       # "swiglu" | "gelu" | "relu_sq" | "geglu"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    # hybrid/ssm block pattern: e.g. ("rglru","rglru","local_attn") repeated
+    block_pattern: Tuple[str, ...] = ("attn",)
+    local_attn_window: int = 2048    # for "local_attn" blocks
+    # enc-dec (seamless): encoder layers, 0 = decoder-only
+    encoder_layers: int = 0
+    # modality frontend stub: ("audio", frames_dim) / ("vision", patch_dim)
+    frontend: Optional[str] = None   # None | "audio" | "vision"
+    frontend_seq: int = 0            # stub frontend sequence length
+    #: whether full quadratic attention is the only mixer (skips long_500k)
+    full_attention_only: bool = True
+    dtype: str = "bf16"
+    # sub-quadratic decode support (SSM state / bounded-window KV)
+    # derived: set in configs where applicable
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def dense_param_count(self) -> int:
+        """Rough non-embedding parameter count (for 6ND napkin math)."""
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        hd = self.resolved_head_dim
+        attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) \
+            + (self.num_heads * hd) * d
+        if self.moe is not None:
+            ffn = self.moe.num_experts * 3 * d * self.moe.expert_d_ff \
+                + d * self.moe.num_experts
+        elif self.activation in ("swiglu", "geglu"):
+            ffn = 3 * d * f
+        else:
+            ffn = 2 * d * f
+        total_layers = L + self.encoder_layers
+        return total_layers * (attn + ffn)
+
+    @property
+    def active_param_count(self) -> int:
+        """Active (per-token) params — differs from dense for MoE."""
+        if self.moe is None:
+            return self.dense_param_count
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) \
+            + (self.num_heads * hd) * d
+        ffn = self.moe.top_k * 3 * d * self.moe.expert_d_ff \
+            + d * self.moe.num_experts
+        return L * (attn + ffn)
+
+    @property
+    def embedding_param_count(self) -> int:
+        n = self.vocab_size * self.d_model
+        return n if self.tie_embeddings else 2 * n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str                 # "train_4k" | "prefill_32k" | ...
+    kind: str                 # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", "train", 4096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    ShapeConfig("decode_32k", "decode", 32768, 128),
+    ShapeConfig("long_500k", "decode", 524288, 1),
+)
+
+LM_SHAPE_BY_NAME = {s.name: s for s in LM_SHAPES}
+
+
+def shape_applicable(cfg: LMConfig, shape: ShapeConfig) -> bool:
+    """long_500k needs sub-quadratic attention (see DESIGN.md §5)."""
+    if shape.name == "long_500k" and cfg.full_attention_only:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Training hyper-params
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 1e-3
+    dense_optimizer: str = "adamw"    # "sgd" | "adam" | "adamw"
+    sparse_optimizer: str = "rowwise_adagrad"  # HugeCTR's default for tables
+    weight_decay: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    mixed_precision: bool = True      # bf16 compute, f32 master weights
+    grad_allreduce_dtype: str = "f32" # "bf16" enables compressed all-reduce
+    remat: str = "none"               # "none" | "full" | "dots"
+    microbatches: int = 1             # grad accumulation splits
+
+
+# ---------------------------------------------------------------------------
+# Mesh
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))

@@ -1,0 +1,5 @@
+"""Config module for ``--arch command-r-plus-104b`` (see registry for the source)."""
+from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+
+ARCH_ID = "command-r-plus-104b"
+CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]

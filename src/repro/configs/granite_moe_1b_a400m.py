@@ -1,0 +1,5 @@
+"""Config module for ``--arch granite-moe-1b-a400m`` (see registry for the source)."""
+from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+
+ARCH_ID = "granite-moe-1b-a400m"
+CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]

@@ -1,0 +1,5 @@
+"""Config module for ``--arch granite-moe-3b-a800m`` (see registry for the source)."""
+from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+
+ARCH_ID = "granite-moe-3b-a800m"
+CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]

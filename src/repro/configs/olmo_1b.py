@@ -1,0 +1,5 @@
+"""Config module for ``--arch olmo-1b`` (see registry for the source)."""
+from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+
+ARCH_ID = "olmo-1b"
+CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]

@@ -1,0 +1,5 @@
+"""Config module for ``--arch phi3-mini-3.8b`` (see registry for the source)."""
+from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+
+ARCH_ID = "phi3-mini-3.8b"
+CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]

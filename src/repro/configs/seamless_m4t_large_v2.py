@@ -1,0 +1,5 @@
+"""Config module for ``--arch seamless-m4t-large-v2`` (see registry for the source)."""
+from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+
+ARCH_ID = "seamless-m4t-large-v2"
+CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]

@@ -1,0 +1,8 @@
+from repro.core.embedding.collection import EmbeddingCollection
+from repro.core.embedding.frequency import FrequencyStats, apply_remap
+from repro.core.embedding.planner import plan, resolve_strategies
+
+__all__ = [
+    "EmbeddingCollection", "FrequencyStats", "apply_remap",
+    "plan", "resolve_strategies",
+]

@@ -1,0 +1,393 @@
+"""EmbeddingCollection — the public API of the paper's embedding engine.
+
+Groups tables by strategy (localized / distributed / hybrid / replicated),
+owns their mega-table parameters + shardings, and produces the pooled
+``[B, T, D]`` activations with one ``shard_map`` over the full mesh.
+
+Layouts
+-------
+Distributed (and hybrid-cold) mega-tables are stored either
+
+  * ``block``  — contiguous row ranges per device (natural GSPMD layout),
+    used with the all-gather + reduce-scatter comm strategy, or
+  * ``striped`` — row ``r`` lives on device ``r % N`` at slot ``r // N``
+    (HugeCTR's hash sharding, TPU-affine), used with the bucketed
+    all-to-all comm strategy so hot rows spread across devices.
+
+The physical array is always ``[R_pad, D]`` sharded over all mesh axes;
+``to_logical`` / ``from_logical`` convert for checkpoints and tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    DATA_PARALLEL, DISTRIBUTED, HYBRID, LOCALIZED, EmbeddingTableConfig,
+)
+from repro.core.embedding import strategies
+from repro.core.embedding.common import (
+    TableGroup, build_group, combiner_mask_denom, global_row_ids,
+    init_mega_table, pooled_local_lookup,
+)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+class EmbeddingCollection:
+
+    def __init__(self,
+                 tables: Sequence[EmbeddingTableConfig],
+                 mesh: Mesh,
+                 *,
+                 comm: str = "allgather_rs",   # or "all_to_all"
+                 capacity_factor: float = 2.0,
+                 compute_dtype=None,
+                 shard_axes: str = "all",      # or "model"
+                 pool_fn: Optional[Callable] = None):
+        """``shard_axes``:
+
+        * ``"all"``   — rows stripe over EVERY mesh axis (maximum memory
+          scaling; every device must then resolve the full global batch,
+          so ids all-gather over DP and the pooled reduce-scatter spans
+          all devices).
+        * ``"model"`` — rows stripe over the model axis only, replicated
+          across DP (HugeCTR's intra-node placement): each DP row resolves
+          only its own batch shard — no id gather, and the pooled psum
+          spans ``model`` instead of the world. §Perf dlrm iter 2: 16x
+          less redundant lookup work, collective term 20.3 -> ~2 ms.
+        """
+        for t in tables:
+            if t.strategy == "auto":
+                raise ValueError(
+                    f"table {t.name}: run planner.resolve_strategies first")
+        self.tables = tuple(tables)
+        self.mesh = mesh
+        self.comm = comm
+        self.capacity_factor = capacity_factor
+        self.compute_dtype = compute_dtype
+        self._pool = pool_fn or pooled_local_lookup
+
+        axes = tuple(mesh.axis_names)
+        self.all_axes = axes
+        self.model_axis = "model" if "model" in axes else axes[-1]
+        self.dp_axes = tuple(a for a in axes if a != self.model_axis)
+        self.n_devices = int(np.prod(mesh.devices.shape))
+        if shard_axes == "model":
+            self.shard_axes: Tuple[str, ...] = (self.model_axis,)
+            self.gather_axes: Tuple[str, ...] = ()
+        else:
+            self.shard_axes = axes
+            self.gather_axes = self.dp_axes
+        self.n_shards = int(np.prod([mesh.shape[a]
+                                     for a in self.shard_axes]))
+
+        by = lambda s: [(i, t) for i, t in enumerate(self.tables)
+                        if t.strategy == s]
+        self.groups: Dict[str, TableGroup] = {}
+
+        dp = by(DATA_PARALLEL)
+        if dp:
+            self.groups["dp"] = build_group(
+                DATA_PARALLEL, [t for _, t in dp], [i for i, _ in dp])
+
+        dist = by(DISTRIBUTED)
+        if dist:
+            self.groups["dist"] = build_group(
+                DISTRIBUTED, [t for _, t in dist], [i for i, _ in dist])
+
+        loc = by(LOCALIZED)
+        if loc:
+            if len(loc) % self.n_devices != 0:
+                raise ValueError(
+                    f"localized needs #tables ({len(loc)}) divisible by "
+                    f"#devices ({self.n_devices}); planner avoids this")
+            self.groups["loc"] = build_group(
+                LOCALIZED, [t for _, t in loc], [i for i, _ in loc])
+            self._loc_vmax = max(t.vocab_size for _, t in loc)
+
+        hyb = by(HYBRID)
+        self._hot_rows: Tuple[int, ...] = ()
+        if hyb:
+            hot_rows = tuple(
+                min(t.vocab_size,
+                    max(1, int(round(t.vocab_size * t.hot_fraction))))
+                for _, t in hyb)
+            self._hot_rows = hot_rows
+            hot_by_name = {t.name: h for (_, t), h in zip(hyb, hot_rows)}
+            self.groups["hot"] = build_group(
+                HYBRID, [t for _, t in hyb], [i for i, _ in hyb],
+                rows_fn=lambda t: hot_by_name[t.name])
+            self.groups["cold"] = build_group(
+                HYBRID, [t for _, t in hyb], [i for i, _ in hyb],
+                rows_fn=lambda t: t.vocab_size - hot_by_name[t.name])
+
+        # output column permutation: concat(group outputs) -> original order
+        order = []
+        for name in self._group_order():
+            order.extend(self.groups[name].table_indices)
+        inv = np.empty(len(self.tables), np.int32)
+        inv[np.asarray(order, np.int32)] = np.arange(len(order))
+        self._inv_perm = inv
+
+        self.layout = "striped" if comm == "all_to_all" else "block"
+
+    # -- group helpers ------------------------------------------------------
+
+    def _group_order(self):
+        # hot+cold produce ONE output column set (hybrid), listed once
+        names = [n for n in ("dp", "dist", "loc", "hot") if n in self.groups]
+        return names
+
+    def _padded_rows(self, g: TableGroup) -> int:
+        return _round_up(max(g.total_rows, self.n_shards), self.n_shards)
+
+    # -- params -------------------------------------------------------------
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Dict[str, jax.Array]:
+        params = {}
+        keys = jax.random.split(key, 8)
+        if "dp" in self.groups:
+            params["dp"] = init_mega_table(keys[0], self.groups["dp"], dtype)
+        if "dist" in self.groups:
+            params["dist"] = self._init_sharded(keys[1], self.groups["dist"],
+                                                dtype)
+        if "loc" in self.groups:
+            g = self.groups["loc"]
+            tabs = []
+            tkeys = jax.random.split(keys[2], g.num_tables)
+            for t, k in zip(g.tables, tkeys):
+                scale = 1.0 / np.sqrt(t.vocab_size)
+                tab = jax.random.uniform(k, (t.vocab_size, g.dim), dtype,
+                                         minval=-scale, maxval=scale)
+                pad = self._loc_vmax - t.vocab_size
+                if pad:
+                    tab = jnp.concatenate(
+                        [tab, jnp.zeros((pad, g.dim), dtype)], 0)
+                tabs.append(tab)
+            params["loc"] = jnp.stack(tabs)
+        if "hot" in self.groups:
+            params["hot"] = init_mega_table(keys[3], self.groups["hot"],
+                                            dtype)
+            params["cold"] = self._init_sharded(keys[4], self.groups["cold"],
+                                                dtype)
+        return params
+
+    def _init_sharded(self, key, g: TableGroup, dtype) -> jax.Array:
+        logical = init_mega_table(key, g, dtype)
+        rpad = self._padded_rows(g)
+        if rpad > g.total_rows:
+            logical = jnp.concatenate(
+                [logical, jnp.zeros((rpad - g.total_rows, g.dim), dtype)], 0)
+        if self.layout == "striped":
+            logical = logical[self._logical_of_physical(rpad)]
+        return logical
+
+    def _logical_of_physical(self, rpad: int) -> jax.Array:
+        n = self.n_shards
+        shard = rpad // n
+        p = jnp.arange(rpad)
+        return (p % shard) * n + p // shard
+
+    def _physical_of_logical(self, rpad: int) -> jax.Array:
+        n = self.n_shards
+        shard = rpad // n
+        r = jnp.arange(rpad)
+        return (r % n) * shard + r // n
+
+    def param_specs(self) -> Dict[str, P]:
+        specs = {}
+        if "dp" in self.groups:
+            specs["dp"] = P(None, None)
+        if "dist" in self.groups:
+            specs["dist"] = P(self.shard_axes, None)
+        if "loc" in self.groups:
+            specs["loc"] = P(self.all_axes, None, None)
+        if "hot" in self.groups:
+            specs["hot"] = P(None, None)
+            specs["cold"] = P(self.shard_axes, None)
+        return specs
+
+    def param_shardings(self) -> Dict[str, NamedSharding]:
+        return {k: NamedSharding(self.mesh, v)
+                for k, v in self.param_specs().items()}
+
+    # -- lookup -------------------------------------------------------------
+
+    def lookup(self, params: Dict[str, jax.Array], ids: jax.Array,
+               *, manual: bool = False) -> jax.Array:
+        """``ids [B, T, H]`` (per-table local ids, -1 pad) -> ``[B, T, D]``.
+
+        ``manual=True`` skips the shard_map wrapper — for callers that are
+        already inside a shard_map over the full mesh (the manual train
+        step); ``params``/``ids`` are then per-device blocks.
+        """
+        if manual:
+            return self._lookup_shard(params, ids)
+        fn = jax.shard_map(
+            functools.partial(self._lookup_shard),
+            mesh=self.mesh,
+            in_specs=(self.param_specs(), P(self.dp_axes, None, None)),
+            out_specs=P(self.dp_axes, None, None),
+            check_vma=False,
+        )
+        return fn(params, ids)
+
+    def _lookup_shard(self, params, ids):
+        outs = []
+        cd = self.compute_dtype
+        if "dp" in self.groups:
+            g = self.groups["dp"]
+            rows = global_row_ids(ids[:, np.asarray(g.table_indices), :], g)
+            outs.append(self._pool(params["dp"], rows, compute_dtype=cd))
+        if "dist" in self.groups:
+            g = self.groups["dist"]
+            rows = global_row_ids(ids[:, np.asarray(g.table_indices), :], g)
+            outs.append(self._dist_lookup(params["dist"], rows, g))
+        if "loc" in self.groups:
+            g = self.groups["loc"]
+            outs.append(strategies.localized(
+                params["loc"], ids[:, np.asarray(g.table_indices), :],
+                dp_axes=self.dp_axes, all_axes=self.all_axes,
+                model_axis=self.model_axis,
+                tables_per_shard=g.num_tables // self.n_devices,
+                compute_dtype=cd))
+        if "hot" in self.groups:
+            gh, gc = self.groups["hot"], self.groups["cold"]
+            tids = ids[:, np.asarray(gh.table_indices), :]
+            hot_n = jnp.asarray(self._hot_rows, jnp.int32)[None, :, None]
+            hot_off = jnp.asarray(gh.offsets, jnp.int32)[None, :, None]
+            cold_off = jnp.asarray(gc.offsets, jnp.int32)[None, :, None]
+            is_hot = (tids >= 0) & (tids < hot_n)
+            is_cold = tids >= hot_n
+            hot_rows = jnp.where(is_hot, tids + hot_off, -1)
+            cold_rows = jnp.where(is_cold, tids - hot_n + cold_off, -1)
+            pooled = self._pool(params["hot"], hot_rows, compute_dtype=cd)
+            pooled = pooled + self._dist_lookup(params["cold"], cold_rows, gc)
+            outs.append(pooled)
+        out = jnp.concatenate(outs, axis=1)[:, self._inv_perm, :]
+        # mean combiner renorm (per original table)
+        mean_mask = np.asarray(
+            [t.combiner == "mean" for t in self.tables])
+        if mean_mask.any():
+            denom = combiner_mask_denom(ids).astype(out.dtype)
+            out = jnp.where(jnp.asarray(mean_mask)[None, :, None],
+                            out / denom, out)
+        return out
+
+    def _dist_lookup(self, mega, rows, g: TableGroup):
+        rpad = self._padded_rows(g)
+        if self.comm == "all_to_all":
+            return strategies.distributed_a2a(
+                mega, rows, all_axes=self.shard_axes,
+                n_shards=self.n_shards,
+                capacity_factor=self.capacity_factor,
+                compute_dtype=self.compute_dtype)
+        return strategies.distributed_ag_rs(
+            mega, rows, dp_axes=self.gather_axes, all_axes=self.shard_axes,
+            model_axis=self.model_axis, shard_rows=rpad // self.n_shards,
+            compute_dtype=self.compute_dtype)
+
+    # -- layout conversion (checkpoint / oracle comparison) ------------------
+
+    def to_logical(self, params: Dict[str, jax.Array]
+                   ) -> Dict[str, jax.Array]:
+        if self.layout == "block":
+            return dict(params)
+        out = dict(params)
+        for k in ("dist", "cold"):
+            if k in params:
+                out[k] = params[k][self._physical_of_logical(
+                    params[k].shape[0])]
+        return out
+
+    def from_logical(self, params: Dict[str, jax.Array]
+                     ) -> Dict[str, jax.Array]:
+        if self.layout == "block":
+            return dict(params)
+        out = dict(params)
+        for k in ("dist", "cold"):
+            if k in params:
+                out[k] = params[k][self._logical_of_physical(
+                    params[k].shape[0])]
+        return out
+
+    def export_logical(self, params: Dict[str, jax.Array]
+                       ) -> Dict[str, jax.Array]:
+        """Physical -> logical *unpadded* arrays (checkpoint format).
+
+        The result is mesh-size independent: a checkpoint written on N
+        devices imports on M devices (elastic scaling).
+        """
+        logical = self.to_logical(params)
+        out = {}
+        for k, v in logical.items():
+            g = {"dp": "dp", "dist": "dist", "loc": "loc",
+                 "hot": "hot", "cold": "cold"}[k]
+            group = self.groups["hot" if g in ("hot",) else
+                                "cold" if g == "cold" else g]
+            if k in ("dist", "cold"):
+                out[k] = v[:group.total_rows]
+            else:
+                out[k] = v
+        return out
+
+    def import_logical(self, logical: Dict[str, jax.Array]
+                       ) -> Dict[str, jax.Array]:
+        """Inverse of :meth:`export_logical` for THIS mesh size."""
+        out = {}
+        for k, v in logical.items():
+            if k in ("dist", "cold"):
+                g = self.groups[k]
+                rpad = self._padded_rows(g)
+                v = jnp.pad(v, ((0, rpad - v.shape[0]), (0, 0)))
+            out[k] = v
+        return self.from_logical(out)
+
+    # -- reference oracle (pure, single-device) ------------------------------
+
+    def lookup_reference(self, params: Dict[str, jax.Array],
+                         ids: jax.Array) -> jax.Array:
+        """Strategy-free oracle on logical layouts, for tests."""
+        logical = self.to_logical(params)
+        outs = []
+        if "dp" in self.groups:
+            g = self.groups["dp"]
+            rows = global_row_ids(ids[:, np.asarray(g.table_indices), :], g)
+            outs.append(pooled_local_lookup(logical["dp"], rows))
+        if "dist" in self.groups:
+            g = self.groups["dist"]
+            rows = global_row_ids(ids[:, np.asarray(g.table_indices), :], g)
+            outs.append(pooled_local_lookup(logical["dist"], rows))
+        if "loc" in self.groups:
+            g = self.groups["loc"]
+            tids = ids[:, np.asarray(g.table_indices), :]
+            pooled = jax.vmap(
+                lambda tab, r: pooled_local_lookup(tab, r[:, None, :])[:, 0],
+                in_axes=(0, 1), out_axes=1)(logical["loc"], tids)
+            outs.append(pooled)
+        if "hot" in self.groups:
+            gh, gc = self.groups["hot"], self.groups["cold"]
+            tids = ids[:, np.asarray(gh.table_indices), :]
+            hot_n = jnp.asarray(self._hot_rows, jnp.int32)[None, :, None]
+            hot_off = jnp.asarray(gh.offsets, jnp.int32)[None, :, None]
+            cold_off = jnp.asarray(gc.offsets, jnp.int32)[None, :, None]
+            hot_rows = jnp.where((tids >= 0) & (tids < hot_n),
+                                 tids + hot_off, -1)
+            cold_rows = jnp.where(tids >= hot_n, tids - hot_n + cold_off, -1)
+            outs.append(pooled_local_lookup(logical["hot"], hot_rows)
+                        + pooled_local_lookup(logical["cold"], cold_rows))
+        out = jnp.concatenate(outs, axis=1)[:, self._inv_perm, :]
+        mean_mask = np.asarray([t.combiner == "mean" for t in self.tables])
+        if mean_mask.any():
+            denom = combiner_mask_denom(ids).astype(out.dtype)
+            out = jnp.where(jnp.asarray(mean_mask)[None, :, None],
+                            out / denom, out)
+        return out

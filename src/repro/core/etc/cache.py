@@ -1,0 +1,147 @@
+"""Embedding Training Cache (ETC) — train tables larger than device memory.
+
+The device holds a fixed-capacity row cache per table (``[C, D]`` params +
+``[C]`` row-wise optimizer state). Before each step the host:
+
+  1. collects the batch's unique ids per table,
+  2. evicts LRU rows to make space (writing params+state back to the PS),
+  3. pulls missing rows from the PS into free slots,
+  4. remaps batch ids -> cache slots.
+
+The device step then runs on the cache arrays exactly like a normal
+(small) embedding table — the trainer is oblivious. ``flush()`` writes
+every resident row back, completing the incremental-training story; the
+same dirty-row stream feeds the online-update Producer (HPS §3).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EmbeddingTableConfig
+
+
+class EmbeddingTrainingCache:
+
+    def __init__(self, tables: Sequence[EmbeddingTableConfig],
+                 capacity: int, ps):
+        for t in tables:
+            if t.vocab_size < capacity:
+                pass  # cache larger than table is fine, just wasteful
+        self.tables = tuple(tables)
+        self.capacity = capacity
+        self.ps = ps
+        # per table: id -> slot (ordered = LRU), free slot list
+        self._lru: List[OrderedDict] = [OrderedDict() for _ in tables]
+        self._free: List[List[int]] = [list(range(capacity))[::-1]
+                                       for _ in tables]
+        self.evictions = 0
+        self.pulls = 0
+
+    # -- device-side params --------------------------------------------------
+
+    def init_params(self) -> Dict[str, jax.Array]:
+        d = self.tables[0].dim
+        assert all(t.dim == d for t in self.tables)
+        return {
+            "cache": jnp.zeros((len(self.tables), self.capacity, d),
+                               jnp.float32),
+            "acc": jnp.zeros((len(self.tables), self.capacity),
+                             jnp.float32),
+        }
+
+    # -- the host-side staging step -------------------------------------------
+
+    def prepare(self, params: Dict[str, jax.Array], cat: np.ndarray
+                ) -> Tuple[Dict[str, jax.Array], np.ndarray]:
+        """Ensure residency for ``cat [B, T, H]``; returns remapped ids."""
+        cache = params["cache"]
+        acc = params["acc"]
+        remapped = np.full_like(cat, -1)
+        host_cache = None  # lazily materialized for eviction writeback
+        for ti, t in enumerate(self.tables):
+            ids = cat[:, ti, :]
+            uniq = np.unique(ids[ids >= 0])
+            lru, free = self._lru[ti], self._free[ti]
+            missing = [i for i in map(int, uniq) if i not in lru]
+            if len(uniq) > self.capacity:
+                raise ValueError(
+                    f"table {t.name}: batch needs {len(uniq)} unique rows "
+                    f"> cache capacity {self.capacity}")
+            # touch resident ids needed by THIS batch first, so the LRU
+            # eviction below cannot evict them (regression: KeyError on
+            # remap when a current-batch id was evicted to make room)
+            for i in map(int, uniq):
+                if i in lru:
+                    lru.move_to_end(i)
+            if len(missing) > len(free):
+                need = len(missing) - len(free)
+                if host_cache is None:
+                    host_cache = np.asarray(cache)
+                    host_acc = np.asarray(acc)
+                evict_ids, evict_slots = [], []
+                for _ in range(need):
+                    old_id, old_slot = lru.popitem(last=False)
+                    evict_ids.append(old_id)
+                    evict_slots.append(old_slot)
+                    free.append(old_slot)
+                self.ps.push(t.name, np.asarray(evict_ids),
+                             host_cache[ti, evict_slots])
+                if hasattr(self.ps, "push_state"):
+                    self.ps.push_state(t.name, np.asarray(evict_ids),
+                                       host_acc[ti, evict_slots])
+                self.evictions += need
+            if missing:
+                slots = [free.pop() for _ in missing]
+                rows = self.ps.pull(t.name, np.asarray(missing))
+                cache = cache.at[ti, np.asarray(slots)].set(
+                    jnp.asarray(rows))
+                acc = acc.at[ti, np.asarray(slots)].set(0.0)
+                for i, s in zip(missing, slots):
+                    lru[i] = s
+                self.pulls += len(missing)
+            # touch + remap
+            for b in range(ids.shape[0]):
+                for h in range(ids.shape[1]):
+                    v = int(ids[b, h])
+                    if v >= 0:
+                        lru.move_to_end(v)
+                        remapped[b, ti, h] = lru[v]
+        return {"cache": cache, "acc": acc}, remapped
+
+    def flush(self, params: Dict[str, jax.Array]) -> None:
+        host = np.asarray(params["cache"])
+        for ti, t in enumerate(self.tables):
+            lru = self._lru[ti]
+            if not lru:
+                continue
+            ids = np.fromiter(lru.keys(), np.int64, len(lru))
+            slots = np.fromiter(lru.values(), np.int64, len(lru))
+            self.ps.push(t.name, ids, host[ti, slots])
+
+    def dirty_rows(self, params: Dict[str, jax.Array], table_idx: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids, rows) currently resident — the online-update feed."""
+        host = np.asarray(params["cache"])
+        lru = self._lru[table_idx]
+        ids = np.fromiter(lru.keys(), np.int64, len(lru))
+        slots = np.fromiter(lru.values(), np.int64, len(lru))
+        return ids, host[table_idx, slots]
+
+
+def cached_lookup(params: Dict[str, jax.Array], remapped: jax.Array
+                  ) -> jax.Array:
+    """Pooled lookup on the cache arrays: ``remapped [B, T, H]`` slots."""
+    cache = params["cache"]                          # [T, C, D]
+
+    def per_table(tab, rows):
+        v = rows >= 0
+        s = jnp.where(v, rows, 0)
+        out = jnp.take(tab, s, axis=0)
+        return jnp.where(v[..., None], out, 0).sum(axis=-2)
+    return jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
+        cache, remapped)

@@ -1,0 +1,102 @@
+"""Training-side parameter servers for the Embedding Training Cache.
+
+Two tiers, mirroring the paper (§1 "Online training"):
+  * ``StagedPS``  — full tables in (distributed) host memory.
+  * ``CachedPS``  — full tables on disk / NFS via ``np.memmap``; host memory
+    only holds what is being exchanged.
+
+Both expose ``pull(table, ids) -> rows`` and ``push(table, ids, rows)``.
+Rows not yet trained are served from the initializer so pulls never fail.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import EmbeddingTableConfig
+
+
+class StagedPS:
+    """Host-memory PS. ``shards`` simulates spreading over cluster nodes."""
+
+    def __init__(self, tables: Sequence[EmbeddingTableConfig], *,
+                 seed: int = 0, shards: int = 1):
+        self.tables = {t.name: t for t in tables}
+        self.shards = shards
+        self._store: Dict[str, List[Dict[int, np.ndarray]]] = {
+            t.name: [dict() for _ in range(shards)] for t in tables}
+        self._rng = np.random.default_rng(seed)
+        self._init_scale = {t.name: 1.0 / np.sqrt(t.vocab_size)
+                            for t in tables}
+
+    def _shard(self, id_: int) -> int:
+        return id_ % self.shards
+
+    def _default_row(self, table: str) -> np.ndarray:
+        d = self.tables[table].dim
+        s = self._init_scale[table]
+        return self._rng.uniform(-s, s, d).astype(np.float32)
+
+    def pull(self, table: str, ids: np.ndarray) -> np.ndarray:
+        d = self.tables[table].dim
+        out = np.empty((len(ids), d), np.float32)
+        store = self._store[table]
+        for i, id_ in enumerate(ids):
+            sh = store[self._shard(int(id_))]
+            row = sh.get(int(id_))
+            if row is None:
+                row = self._default_row(table)
+                sh[int(id_)] = row
+            out[i] = row
+        return out
+
+    def push(self, table: str, ids: np.ndarray, rows: np.ndarray) -> None:
+        store = self._store[table]
+        for id_, row in zip(ids, rows):
+            store[self._shard(int(id_))][int(id_)] = \
+                np.asarray(row, np.float32)
+
+    def resident_rows(self, table: str) -> int:
+        return sum(len(s) for s in self._store[table])
+
+
+class CachedPS:
+    """Disk-backed PS: one memmap per table (scales to SSD/NFS capacity)."""
+
+    def __init__(self, tables: Sequence[EmbeddingTableConfig], root: str, *,
+                 seed: int = 0):
+        self.root = root
+        self.tables = {t.name: t for t in tables}
+        os.makedirs(root, exist_ok=True)
+        self._maps: Dict[str, np.memmap] = {}
+        rng = np.random.default_rng(seed)
+        for t in tables:
+            path = os.path.join(root, f"{t.name}.f32")
+            fresh = not os.path.exists(path)
+            mm = np.memmap(path, np.float32, "r+" if not fresh else "w+",
+                           shape=(t.vocab_size, t.dim))
+            if fresh:
+                s = 1.0 / np.sqrt(t.vocab_size)
+                chunk = 1 << 16
+                for lo in range(0, t.vocab_size, chunk):
+                    hi = min(t.vocab_size, lo + chunk)
+                    mm[lo:hi] = rng.uniform(-s, s, (hi - lo, t.dim)) \
+                        .astype(np.float32)
+                mm.flush()
+            self._maps[t.name] = mm
+        with open(os.path.join(root, "meta.json"), "w") as f:
+            json.dump({t.name: {"vocab": t.vocab_size, "dim": t.dim}
+                       for t in tables}, f)
+
+    def pull(self, table: str, ids: np.ndarray) -> np.ndarray:
+        return np.asarray(self._maps[table][ids], np.float32)
+
+    def push(self, table: str, ids: np.ndarray, rows: np.ndarray) -> None:
+        self._maps[table][ids] = rows
+
+    def flush(self):
+        for mm in self._maps.values():
+            mm.flush()

@@ -1,0 +1,125 @@
+"""GPU embedding cache (HPS level 1).
+
+Device-resident payload ``[C, D]`` + host-side index, following HugeCTR's
+split between the GDDR payload and its host-managed hash index (which is
+also the only TPU-viable layout — DESIGN.md §2). Features from the paper:
+optimized batched query, **dynamic insertion** (misses get cached), and an
+**asynchronous refresh** thread that re-pulls resident rows from the lower
+levels so online-training updates propagate without blocking queries.
+
+Eviction is LFU-with-aging (hot features stick, per the paper's intent).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DeviceEmbeddingCache:
+
+    def __init__(self, capacity: int, dim: int, *,
+                 fetch_fn: Callable[[np.ndarray], np.ndarray],
+                 decay: float = 0.99):
+        """``fetch_fn(missing_ids) -> rows`` pulls from VDB/PDB."""
+        self.capacity = capacity
+        self.dim = dim
+        self.fetch_fn = fetch_fn
+        self.decay = decay
+        self.payload = jnp.zeros((capacity, dim), jnp.float32)
+        self._slot_of: Dict[int, int] = {}
+        self._id_of = np.full(capacity, -1, np.int64)
+        self._freq = np.zeros(capacity, np.float64)
+        self._next_free = 0
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.RLock()
+        self._refresh_thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- query -----------------------------------------------------------------
+
+    def query(self, ids: np.ndarray) -> jax.Array:
+        """Batched lookup ``[n] -> [n, D]`` with dynamic insertion."""
+        with self._lock:
+            slots = np.empty(len(ids), np.int64)
+            missing_idx = []
+            for i, id_ in enumerate(map(int, ids)):
+                s = self._slot_of.get(id_, -1)
+                slots[i] = s
+                if s < 0:
+                    missing_idx.append(i)
+                else:
+                    self._freq[s] += 1.0
+            self.hits += len(ids) - len(missing_idx)
+            self.misses += len(missing_idx)
+            if missing_idx:
+                miss_ids = ids[missing_idx]
+                rows = self.fetch_fn(miss_ids)
+                ins = self._insert_locked(miss_ids, rows)
+                slots[missing_idx] = ins
+            return jnp.take(self.payload, jnp.asarray(slots), axis=0)
+
+    def _insert_locked(self, ids: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        slots = np.empty(len(ids), np.int64)
+        for k, (id_, row) in enumerate(zip(map(int, ids), rows)):
+            if id_ in self._slot_of:          # raced in by another query
+                slots[k] = self._slot_of[id_]
+                continue
+            if self._next_free < self.capacity:
+                s = self._next_free
+                self._next_free += 1
+            else:
+                self._freq *= self.decay      # aging
+                s = int(self._freq.argmin())
+                old = self._id_of[s]
+                if old >= 0:
+                    del self._slot_of[old]
+            self._slot_of[id_] = s
+            self._id_of[s] = id_
+            self._freq[s] = 1.0
+            slots[k] = s
+            self.payload = self.payload.at[s].set(jnp.asarray(row))
+        return slots
+
+    # -- refresh (async propagation of online updates) --------------------------
+
+    def refresh_once(self) -> int:
+        """Re-pull every resident row from the lower levels."""
+        with self._lock:
+            resident = np.asarray(
+                [i for i in self._id_of[:self._next_free] if i >= 0])
+            if len(resident) == 0:
+                return 0
+            slots = np.asarray([self._slot_of[int(i)] for i in resident])
+        rows = self.fetch_fn(resident)        # outside lock: slow IO
+        with self._lock:
+            # ids may have been evicted meanwhile; re-check
+            keep = [k for k, i in enumerate(map(int, resident))
+                    if self._slot_of.get(i) == slots[k]]
+            if keep:
+                self.payload = self.payload.at[
+                    jnp.asarray(slots[keep])].set(jnp.asarray(rows[keep]))
+            return len(keep)
+
+    def start_refresh(self, interval_s: float):
+        def loop():
+            while not self._stop.wait(interval_s):
+                self.refresh_once()
+        self._refresh_thread = threading.Thread(target=loop, daemon=True)
+        self._refresh_thread.start()
+
+    def stop_refresh(self):
+        self._stop.set()
+        if self._refresh_thread:
+            self._refresh_thread.join()
+            self._refresh_thread = None
+        self._stop.clear()
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0

@@ -1,0 +1,110 @@
+"""Hierarchical Parameter Server orchestration (paper §3).
+
+Lookup path per table: L1 device cache -> L2 volatile DB -> L3 persistent
+DB, with promotion on miss at every level. The online-update Consumer
+applies trainer messages to L2/L3; the L1 cache's async refresh cycle then
+picks them up (poll-based, configurable period — the paper's design).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EmbeddingTableConfig
+from repro.core.hps.embedding_cache import DeviceEmbeddingCache
+from repro.core.hps.message_bus import Consumer, MessageBus
+from repro.core.hps.persistent_db import PersistentDB
+from repro.core.hps.volatile_db import VolatileDB
+
+
+class HPS:
+
+    def __init__(self, model_name: str,
+                 tables: Sequence[EmbeddingTableConfig],
+                 pdb: PersistentDB, *,
+                 vdb: Optional[VolatileDB] = None,
+                 cache_capacity: int = 4096,
+                 bus: Optional[MessageBus] = None):
+        self.model_name = model_name
+        self.tables = tuple(tables)
+        self.pdb = pdb
+        self.vdb = vdb or VolatileDB()
+        self.caches: Dict[str, DeviceEmbeddingCache] = {}
+        for t in tables:
+            self.caches[t.name] = DeviceEmbeddingCache(
+                min(cache_capacity, t.vocab_size), t.dim,
+                fetch_fn=self._make_fetch(t.name))
+        self.consumer = Consumer(bus, model_name) if bus else None
+
+    # -- L2/L3 fall-through ------------------------------------------------------
+
+    def _make_fetch(self, table: str):
+        def fetch(ids: np.ndarray) -> np.ndarray:
+            mask, rows = self.vdb.query(table, ids)
+            if rows is None:
+                rows = np.zeros((len(ids), self._dim(table)), np.float32)
+            if not mask.all():
+                missing = ids[~mask]
+                fetched = self.pdb.fetch(self.model_name, table, missing)
+                rows[~mask] = fetched
+                self.vdb.insert(table, missing, fetched)  # promote
+            return rows
+        return fetch
+
+    def _dim(self, table: str) -> int:
+        return next(t.dim for t in self.tables if t.name == table)
+
+    # -- public lookup ------------------------------------------------------------
+
+    def lookup(self, cat: np.ndarray, hotness: Optional[List[int]] = None
+               ) -> jax.Array:
+        """``cat [B, T, H]`` (-1 pad) -> pooled ``[B, T, D]`` on device."""
+        b, t, h = cat.shape
+        outs = []
+        for ti, tab in enumerate(self.tables):
+            ids = cat[:, ti, :]
+            flat = ids.reshape(-1)
+            valid = flat >= 0
+            vecs = np.zeros((b * h, tab.dim), np.float32)
+            if valid.any():
+                got = self.caches[tab.name].query(flat[valid])
+                vecs[valid] = np.asarray(got)
+            pooled = vecs.reshape(b, h, tab.dim).sum(axis=1)
+            outs.append(pooled)
+        return jnp.asarray(np.stack(outs, axis=1))
+
+    # -- online updates -------------------------------------------------------------
+
+    def apply_updates(self) -> int:
+        """Poll the message bus into VDB+PDB (L1 refresh is separate)."""
+        if self.consumer is None:
+            return 0
+
+        def apply(table, ids, rows):
+            self.pdb.upsert(self.model_name, table, ids, rows)
+            self.vdb.insert(table, ids, rows)
+
+        return self.consumer.poll(apply)
+
+    def refresh_caches(self) -> int:
+        return sum(c.refresh_once() for c in self.caches.values())
+
+    def start_refresh(self, interval_s: float):
+        for c in self.caches.values():
+            c.start_refresh(interval_s)
+
+    def stop_refresh(self):
+        for c in self.caches.values():
+            c.stop_refresh()
+
+    # -- metrics ---------------------------------------------------------------------
+
+    def stats(self) -> Dict:
+        return {
+            "l1_hit_rate": {k: c.hit_rate for k, c in self.caches.items()},
+            "l2_hits": self.vdb.hits,
+            "l2_misses": self.vdb.misses,
+        }

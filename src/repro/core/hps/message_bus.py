@@ -1,0 +1,115 @@
+"""Kafka-analogue online-update path (paper §3 "Online model updating").
+
+``MessageBus`` holds one ordered queue per (model, table) topic.
+``Producer`` (training side) serializes, batches and publishes update
+messages; ``Consumer`` (inference side) discovers topics, subscribes with
+an offset, and applies polled updates to its local VDB shard + PDB —
+exactly the blue data-flow in the paper's Figure 2.
+"""
+from __future__ import annotations
+
+import io
+import struct
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _serialize(ids: np.ndarray, rows: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    n, d = rows.shape
+    buf.write(struct.pack("<II", n, d))
+    buf.write(np.ascontiguousarray(ids, np.int64).tobytes())
+    buf.write(np.ascontiguousarray(rows, np.float32).tobytes())
+    return buf.getvalue()
+
+
+def _deserialize(data: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    n, d = struct.unpack_from("<II", data, 0)
+    off = 8
+    ids = np.frombuffer(data, np.int64, n, off)
+    rows = np.frombuffer(data, np.float32, n * d, off + 8 * n).reshape(n, d)
+    return ids.copy(), rows.copy()
+
+
+class MessageBus:
+
+    def __init__(self):
+        self._topics: Dict[str, List[bytes]] = {}
+        self._lock = threading.Lock()
+
+    def topic(self, model: str, table: str) -> str:
+        return f"hps.{model}.{table}"
+
+    def publish(self, topic: str, message: bytes) -> int:
+        with self._lock:
+            q = self._topics.setdefault(topic, [])
+            q.append(message)
+            return len(q) - 1
+
+    def fetch(self, topic: str, offset: int, max_messages: int = 64
+              ) -> Tuple[List[bytes], int]:
+        with self._lock:
+            q = self._topics.get(topic, [])
+            out = q[offset:offset + max_messages]
+            return out, offset + len(out)
+
+    def topics(self) -> List[str]:
+        with self._lock:
+            return list(self._topics)
+
+
+class Producer:
+    """Message Producer API — batching + serialization (training side)."""
+
+    def __init__(self, bus: MessageBus, model: str, *,
+                 max_batch_rows: int = 4096):
+        self.bus = bus
+        self.model = model
+        self.max_batch_rows = max_batch_rows
+        self._pending: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {}
+
+    def send(self, table: str, ids: np.ndarray, rows: np.ndarray) -> None:
+        pend = self._pending.setdefault(table, [])
+        pend.append((np.asarray(ids), np.asarray(rows)))
+        if sum(len(i) for i, _ in pend) >= self.max_batch_rows:
+            self.flush(table)
+
+    def flush(self, table: Optional[str] = None) -> None:
+        tables = [table] if table else list(self._pending)
+        for t in tables:
+            pend = self._pending.pop(t, [])
+            if not pend:
+                continue
+            ids = np.concatenate([i for i, _ in pend])
+            rows = np.concatenate([r for _, r in pend])
+            self.bus.publish(self.bus.topic(self.model, t),
+                             _serialize(ids, rows))
+
+
+class Consumer:
+    """Message Source API — subscribe + apply (inference side)."""
+
+    def __init__(self, bus: MessageBus, model: str):
+        self.bus = bus
+        self.model = model
+        self._offsets: Dict[str, int] = {}
+
+    def discover(self) -> List[str]:
+        prefix = f"hps.{self.model}."
+        return [t for t in self.bus.topics() if t.startswith(prefix)]
+
+    def poll(self, apply_fn) -> int:
+        """``apply_fn(table, ids, rows)``; returns #messages applied."""
+        n = 0
+        for topic in self.discover():
+            table = topic.rsplit(".", 1)[1]
+            off = self._offsets.get(topic, 0)
+            msgs, off = self.bus.fetch(topic, off)
+            self._offsets[topic] = off
+            for m in msgs:
+                ids, rows = _deserialize(m)
+                apply_fn(table, ids, rows)
+                n += 1
+        return n

@@ -1,0 +1,64 @@
+"""Persistent database (HPS level 3) — full model copy on disk/SSD.
+
+The paper: *"PDB layers use hard-disks/SSDs to permanently store entire
+embedding tables ... backup and ultimate ground truth"*, with per-table
+key namespaces. One memmap per (model, table) namespace.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import EmbeddingTableConfig
+
+
+class PersistentDB:
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._maps: Dict[Tuple[str, str], np.memmap] = {}
+        self._meta: Dict[Tuple[str, str], Tuple[int, int]] = {}
+
+    def _key(self, model: str, table: str) -> Tuple[str, str]:
+        return (model, table)
+
+    def create_table(self, model: str, table: str, vocab: int, dim: int,
+                     initial: np.ndarray | None = None) -> None:
+        path = os.path.join(self.root, f"{model}__{table}.f32")
+        mm = np.memmap(path, np.float32, "w+", shape=(vocab, dim))
+        if initial is not None:
+            mm[:] = initial
+        mm.flush()
+        self._maps[self._key(model, table)] = mm
+        self._meta[self._key(model, table)] = (vocab, dim)
+        with open(os.path.join(self.root, f"{model}__{table}.json"),
+                  "w") as f:
+            json.dump({"vocab": vocab, "dim": dim}, f)
+
+    def open_table(self, model: str, table: str) -> None:
+        path = os.path.join(self.root, f"{model}__{table}.f32")
+        with open(os.path.join(self.root, f"{model}__{table}.json")) as f:
+            meta = json.load(f)
+        self._maps[self._key(model, table)] = np.memmap(
+            path, np.float32, "r+", shape=(meta["vocab"], meta["dim"]))
+        self._meta[self._key(model, table)] = (meta["vocab"], meta["dim"])
+
+    def fetch(self, model: str, table: str, ids: np.ndarray) -> np.ndarray:
+        return np.asarray(self._maps[self._key(model, table)][ids],
+                          np.float32)
+
+    def upsert(self, model: str, table: str, ids: np.ndarray,
+               rows: np.ndarray) -> None:
+        mm = self._maps[self._key(model, table)]
+        mm[ids] = rows
+
+    def flush(self):
+        for mm in self._maps.values():
+            mm.flush()
+
+    def table_shape(self, model: str, table: str) -> Tuple[int, int]:
+        return self._meta[self._key(model, table)]

@@ -1,0 +1,66 @@
+"""Volatile database (HPS level 2) — distributed CPU-memory cache.
+
+Stands in for the paper's Redis-cluster VDB: embedding rows live in the
+system memory of (simulated) cluster nodes, sharded by id hash, each shard
+bounded by a capacity with LRU eviction. Partial copies only — misses fall
+through to the persistent DB.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class VolatileDB:
+
+    def __init__(self, *, shards: int = 1, capacity_per_shard: int = 100000):
+        self.shards = shards
+        self.capacity = capacity_per_shard
+        # namespace (model, table) -> shard -> OrderedDict[id, row]
+        self._store: Dict[str, list] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def _ns(self, table: str) -> list:
+        if table not in self._store:
+            self._store[table] = [OrderedDict() for _ in range(self.shards)]
+        return self._store[table]
+
+    def query(self, table: str, ids: np.ndarray
+              ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Returns (found_mask, rows) — rows is None if nothing found."""
+        ns = self._ns(table)
+        mask = np.zeros(len(ids), bool)
+        rows = None
+        for i, id_ in enumerate(map(int, ids)):
+            shard = ns[id_ % self.shards]
+            row = shard.get(id_)
+            if row is not None:
+                shard.move_to_end(id_)
+                if rows is None:
+                    rows = np.zeros((len(ids), len(row)), np.float32)
+                rows[i] = row
+                mask[i] = True
+        self.hits += int(mask.sum())
+        self.misses += int((~mask).sum())
+        return mask, rows
+
+    def insert(self, table: str, ids: np.ndarray, rows: np.ndarray) -> None:
+        ns = self._ns(table)
+        for id_, row in zip(map(int, ids), rows):
+            shard = ns[id_ % self.shards]
+            if id_ in shard:
+                shard.move_to_end(id_)
+            elif len(shard) >= self.capacity:
+                shard.popitem(last=False)
+            shard[id_] = np.asarray(row, np.float32)
+
+    def evict(self, table: str, ids: np.ndarray) -> None:
+        ns = self._ns(table)
+        for id_ in map(int, ids):
+            ns[id_ % self.shards].pop(id_, None)
+
+    def size(self, table: str) -> int:
+        return sum(len(s) for s in self._ns(table))

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: DLRM dot-interaction (fwd + bwd).
+
+Computes the strict-lower-triangle of the feature Gram matrix per sample:
+``x [B, F, D] -> tri [B, P]``, ``P = F(F-1)/2``.
+
+TPU adaptation (DESIGN.md §2): the GPU version extracts the triangle with
+per-thread indexed writes. TPUs dislike gathers, so the compaction is a
+**selection matmul**: ``tri = flat_gram [B, F^2] @ S [F^2, P]`` where ``S``
+is a constant 0/1 matrix — the MXU eats it and everything stays in one
+kernel (gram matmul + compaction) per batch tile.
+
+Backward: ``dgram = dtri @ S^T``; ``dx = (dgram + dgram^T) @ x`` — again all
+matmuls, same tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def selection_matrix(f: int, self_interaction: bool = False) -> np.ndarray:
+    """0/1 matrix ``[F*F, P]`` selecting the (strict) lower triangle."""
+    i, j = np.tril_indices(f, 0 if self_interaction else -1)
+    p = len(i)
+    s = np.zeros((f * f, p), np.float32)
+    s[i * f + j, np.arange(p)] = 1.0
+    return s
+
+
+def _fwd_kernel(x_ref, s_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)            # [bB, F, D]
+    gram = jax.lax.dot_general(
+        x, x, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)       # [bB, F, F]
+    bb, f, _ = gram.shape
+    o_ref[...] = jnp.dot(gram.reshape(bb, f * f), s_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def _bwd_kernel(x_ref, dtri_ref, s_ref, dx_ref):
+    x = x_ref[...].astype(jnp.float32)            # [bB, F, D]
+    bb, f, d = x.shape
+    dgram = jnp.dot(dtri_ref[...], s_ref[...].T,
+                    preferred_element_type=jnp.float32).reshape(bb, f, f)
+    dgram = dgram + dgram.transpose(0, 2, 1)
+    dx_ref[...] = jax.lax.dot_general(
+        dgram, x, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def interaction_fwd(x: jax.Array, s: jax.Array, *, block_b: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    b, f, d = x.shape
+    p = s.shape[1]
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((f * f, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p), jnp.float32),
+        interpret=interpret,
+    )(x, s)
+
+
+def interaction_bwd(x: jax.Array, dtri: jax.Array, s: jax.Array, *,
+                    block_b: int = 128, interpret: bool = False) -> jax.Array:
+    b, f, d = x.shape
+    p = s.shape[1]
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, p), lambda i: (i, 0)),
+            pl.BlockSpec((f * f, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, f, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, d), jnp.float32),
+        interpret=interpret,
+    )(x, dtri, s)

@@ -1,0 +1,185 @@
+"""Jit-ready wrappers around the Pallas kernels (padding + custom_vjp).
+
+``interpret`` defaults to True off-TPU so the same call sites validate on
+CPU and run the compiled kernel on hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dot_interaction as _di
+from repro.kernels import embedding_lookup as _el
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Fused embedding lookup
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fused_embedding_lookup(table: jax.Array, rows: jax.Array,
+                           block_b: int = 128, block_v: int = 512
+                           ) -> jax.Array:
+    """``table [V, D]``, ``rows [B, H]`` (-1 pad) -> sum-pooled ``[B, D]``."""
+    return _lookup_impl(table, rows, block_b, block_v)
+
+
+def _lookup_impl(table, rows, block_b, block_v):
+    v, d = table.shape
+    b, h = rows.shape
+    bb = min(block_b, _round_up(b, 8))
+    bv = min(block_v, _round_up(v, 8))
+    vp, bp = _round_up(v, bv), _round_up(b, bb)
+    tpad = jnp.pad(table, ((0, vp - v), (0, 0)))
+    rpad = jnp.pad(rows, ((0, bp - b), (0, 0)), constant_values=-1)
+    out = _el.lookup_fwd(tpad, rpad, block_b=bb, block_v=bv,
+                         interpret=_interpret())
+    return out[:b]
+
+
+def _lookup_fwd_rule(table, rows, block_b, block_v):
+    return _lookup_impl(table, rows, block_b, block_v), (table.shape, rows)
+
+
+def _lookup_bwd_rule(block_b, block_v, res, dpooled):
+    table_shape, rows = res
+    v, d = table_shape
+    b, h = rows.shape
+    bb = min(block_b, _round_up(b, 8))
+    bv = min(block_v, _round_up(v, 8))
+    vp, bp = _round_up(v, bv), _round_up(b, bb)
+    rpad = jnp.pad(rows, ((0, bp - b), (0, 0)), constant_values=-1)
+    dpad = jnp.pad(dpooled.astype(jnp.float32), ((0, bp - b), (0, 0)))
+    dtab = _el.lookup_bwd((vp, d), rpad, dpad, block_b=bb, block_v=bv,
+                          interpret=_interpret())[:v]
+    return dtab.astype(jnp.float32), None
+
+
+fused_embedding_lookup.defvjp(_lookup_fwd_rule, _lookup_bwd_rule)
+
+
+def kernel_pool(mega: jax.Array, rows: jax.Array, *, combiner: str = "sum",
+                compute_dtype=None) -> jax.Array:
+    """Drop-in for ``common.pooled_local_lookup`` backed by the kernel.
+
+    ``rows [B, T, H]`` -> ``[B, T, D]`` (mega-table row ids, -1 pad).
+    """
+    b, t, h = rows.shape
+    out = fused_embedding_lookup(mega, rows.reshape(b * t, h))
+    out = out.reshape(b, t, -1)
+    if combiner == "mean":
+        denom = jnp.maximum((rows >= 0).sum(-1, keepdims=True), 1)
+        out = out / denom.astype(out.dtype)
+    if compute_dtype is not None:
+        out = out.astype(compute_dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DLRM dot interaction
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def dot_interaction(x: jax.Array, self_interaction: bool = False,
+                    block_b: int = 128) -> jax.Array:
+    """``x [B, F, D]`` -> pairwise-dot triangle ``[B, P]``."""
+    return _interaction_impl(x, self_interaction, block_b)
+
+
+def _interaction_impl(x, self_interaction, block_b):
+    b, f, d = x.shape
+    s = jnp.asarray(_di.selection_matrix(f, self_interaction))
+    bb = min(block_b, _round_up(b, 8))
+    bp = _round_up(b, bb)
+    xpad = jnp.pad(x, ((0, bp - b), (0, 0), (0, 0)))
+    out = _di.interaction_fwd(xpad, s, block_b=bb, interpret=_interpret())
+    return out[:b]
+
+
+def _interaction_fwd_rule(x, self_interaction, block_b):
+    return _interaction_impl(x, self_interaction, block_b), x
+
+
+def _interaction_bwd_rule(self_interaction, block_b, x, dtri):
+    b, f, d = x.shape
+    s = jnp.asarray(_di.selection_matrix(f, self_interaction))
+    bb = min(block_b, _round_up(b, 8))
+    bp = _round_up(b, bb)
+    xpad = jnp.pad(x, ((0, bp - b), (0, 0), (0, 0)))
+    dpad = jnp.pad(dtri.astype(jnp.float32), ((0, bp - b), (0, 0)))
+    # note: the symmetrization inside the bwd kernel doubles the diagonal,
+    # which is exactly d(x.x)/dx = 2x — correct for self_interaction too.
+    dx = _di.interaction_bwd(xpad, dpad, s, block_b=bb,
+                             interpret=_interpret())[:b]
+    return (dx.astype(x.dtype),)
+
+
+dot_interaction.defvjp(_interaction_fwd_rule, _interaction_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (fwd + bwd Pallas kernels)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512) -> jax.Array:
+    """``q [B, S, Hq, D]``, ``k/v [B, S, Hkv, D]`` -> ``[B, S, Hq, D]``.
+
+    Scores never touch HBM (VMEM-resident online softmax) — the Pallas
+    replacement for ``transformer.chunked_attention`` on TPU.
+    """
+    o, _ = _flash_fwd_impl(q, k, v, causal, window, block_q, block_k)
+    return o
+
+
+def _bhsd(x):
+    """[B, S, H, D] -> [B·H, S, D]."""
+    b, s, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+
+def _unbhsd(x, b):
+    bh, s, d = x.shape
+    return x.reshape(b, bh // b, s, d).transpose(0, 2, 1, 3)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, block_q, block_k):
+    from repro.kernels import flash_attention as fa
+    b = q.shape[0]
+    o, lse = fa.flash_fwd(_bhsd(q), _bhsd(k), _bhsd(v), causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          interpret=_interpret())
+    return _unbhsd(o, b), lse
+
+
+def _flash_fwd_rule(q, k, v, causal, window, block_q, block_k):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, window, block_q, block_k, res, do):
+    from repro.kernels import flash_attention as fa
+    q, k, v, o, lse = res
+    b = q.shape[0]
+    dq, dk, dv = fa.flash_bwd(
+        _bhsd(q), _bhsd(k), _bhsd(v), _bhsd(o), lse, _bhsd(do),
+        causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=_interpret())
+    return _unbhsd(dq, b), _unbhsd(dk, b), _unbhsd(dv, b)
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the test ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_lookup_ref(table: jax.Array, rows: jax.Array,
+                         combiner: str = "sum") -> jax.Array:
+    """``table [V, D]``, ``rows [B, H]`` int32 (-1 = pad) -> ``[B, D]``.
+
+    Sum (or mean) of the selected rows; duplicate ids within a sample
+    contribute multiply (count semantics).
+    """
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, 0)
+    vecs = jnp.take(table, safe, axis=0)
+    vecs = jnp.where(valid[..., None], vecs, 0).astype(jnp.float32)
+    pooled = vecs.sum(axis=1)
+    if combiner == "mean":
+        denom = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        pooled = pooled / denom.astype(pooled.dtype)
+    return pooled
+
+
+def embedding_grad_ref(table_shape, rows: jax.Array,
+                       dpooled: jax.Array) -> jax.Array:
+    """Adjoint of sum-pooled lookup: scatter-add ``dpooled`` rows."""
+    v, d = table_shape
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, v)  # out-of-range -> dropped
+    flat_rows = safe.reshape(-1)
+    contrib = jnp.broadcast_to(dpooled[:, None, :],
+                               rows.shape + (d,)).reshape(-1, d)
+    contrib = jnp.where(valid.reshape(-1, 1), contrib, 0)
+    out = jnp.zeros((v + 1, d), jnp.float32).at[flat_rows].add(
+        contrib.astype(jnp.float32))
+    return out[:v]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window=None) -> jax.Array:
+    """Naive softmax attention oracle: ``q [B, S, Hq, D]``,
+    ``k/v [B, S, Hkv, D]`` -> ``[B, S, Hq, D]`` (GQA by head grouping)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    sc = sc / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    i = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window is not None:
+        mask &= i[None, :] > i[:, None] - window
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, d).astype(q.dtype)
+
+
+def dot_interaction_ref(x: jax.Array, *, self_interaction: bool = False
+                        ) -> jax.Array:
+    """DLRM pairwise dot interaction.
+
+    ``x [B, F, D]`` -> strict lower triangle of ``x @ x^T``: ``[B, F(F-1)/2]``
+    (or with diagonal when ``self_interaction``).
+    """
+    gram = jnp.einsum("bfd,bgd->bfg", x.astype(jnp.float32),
+                      x.astype(jnp.float32))
+    f = x.shape[1]
+    i, j = jnp.tril_indices(f, 0 if self_interaction else -1)
+    return gram[:, i, j]

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces a JSON artifact under ``artifacts/dryrun/``
+holding ``memory_analysis``, ``cost_analysis`` (loop-blind, kept for
+cross-checking), the trip-count-aware HLO roofline terms, analytic model
+FLOPs, and the collective-bytes breakdown. ``--mesh both`` proves the
+single-pod (16×16) and multi-pod (2×16×16) shardings.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --arch dlrm-criteo --shape train_65k \
+      --variant a2a --comm all_to_all
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    LM_SHAPES, LM_SHAPE_BY_NAME, ShapeConfig, TrainConfig, shape_applicable,
+)
+from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import lm_input_specs, lm_step_fn, recsys_input_specs
+
+RECSYS_SHAPES = (ShapeConfig("train_65k", "train", 1, 65536),)
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (for the "useful compute" ratio)
+# ---------------------------------------------------------------------------
+
+def analytic_lm_flops(cfg, shape: ShapeConfig) -> float:
+    n_act = cfg.active_param_count
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    v = cfg.vocab_size
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        attn = 2.0 * shape.global_batch * cfg.num_heads * hd \
+            * (shape.seq_len ** 2) * (cfg.num_layers if not
+                                      cfg.block_pattern[0].startswith("rg")
+                                      else cfg.num_layers // 3)
+        return 6.0 * n_act * toks + 6.0 * d * v * toks + 3.0 * attn
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        attn = 2.0 * shape.global_batch * cfg.num_heads * hd \
+            * (shape.seq_len ** 2) * cfg.num_layers
+        return 2.0 * n_act * toks + attn
+    # decode: one token vs seq_len cache
+    b = shape.global_batch
+    s = min(shape.seq_len, 10 ** 9)
+    attn_layers = sum(1 for k in (cfg.block_pattern
+                                  * (cfg.num_layers //
+                                     len(cfg.block_pattern) + 1))
+                      [:cfg.num_layers] if "attn" in k)
+    window = cfg.local_attn_window if "local_attn" in cfg.block_pattern \
+        else s
+    attn = 4.0 * b * cfg.num_heads * hd * min(s, window) * attn_layers
+    return 2.0 * n_act * b + 2.0 * d * v * b + attn
+
+
+def analytic_recsys_flops(cfg, batch: int) -> float:
+    def mlp_flops(dims, in_dim):
+        f, cur = 0.0, in_dim
+        for o in dims:
+            f += 2.0 * batch * cur * o
+            cur = o
+        return f
+    t, d = cfg.num_tables, cfg.embedding_dim
+    f = mlp_flops(cfg.bottom_mlp, cfg.num_dense_features)
+    flat = cfg.num_dense_features + t * d
+    if cfg.model == "dlrm":
+        ft = t + 1
+        f += 2.0 * batch * ft * ft * d
+        f += mlp_flops(cfg.top_mlp, cfg.bottom_mlp[-1] + ft * (ft - 1) // 2)
+    else:
+        f += mlp_flops(cfg.top_mlp, flat)
+    return 3.0 * f   # fwd + bwd
+
+
+# ---------------------------------------------------------------------------
+# Cell runners
+# ---------------------------------------------------------------------------
+
+def _sharded_sds(tree, shardings):
+    return jax.tree.map(
+        lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),
+        tree, shardings)
+
+
+def run_lm_cell(arch: str, shape_name: str, mesh_kind: str,
+                outdir: str, *, variant: str = "baseline",
+                model_kwargs: Optional[Dict] = None,
+                dump_hlo: bool = False) -> Dict:
+    from repro.models.lm.backbone import LMModel
+    from repro.optim.optimizers import make as make_opt
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = LM_ARCHS[arch]
+    shape = LM_SHAPE_BY_NAME[shape_name]
+    record: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "variant": variant, "kind": shape.kind}
+    if not shape_applicable(cfg, shape):
+        record["status"] = "skipped"
+        record["reason"] = ("full-attention arch: O(S^2) at 524k seq "
+                            "is out of assignment scope (DESIGN.md §5)")
+        _write(outdir, record)
+        return record
+
+    kw = dict(model_kwargs or {})
+    # large-vocab archs need smaller loss chunks to bound logits memory
+    kw.setdefault("loss_chunk", 256 if cfg.vocab_size > 100_000 else 512)
+    kw.setdefault("q_chunk", 2048 if shape.seq_len >= 32768 else 1024)
+    kw.setdefault("k_chunk", 2048 if shape.seq_len >= 32768 else 1024)
+    if shape.kind == "train":
+        kw.setdefault("remat", "full")
+    model = LMModel(cfg, mesh, **kw)
+    record["embed_mode"] = model.embed_mode
+    record["fsdp"] = model.fsdp
+
+    with mesh:
+        t0 = time.time()
+        params_sds = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+        params_sds = _sharded_sds(params_sds, model.param_shardings())
+        step = lm_step_fn(model, shape)
+        specs = lm_input_specs(model, shape, mesh)
+        if shape.kind == "train":
+            tcfg = TrainConfig()
+            opt = make_opt("adamw", tcfg)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            rep = NamedSharding(mesh, P())
+            opt_sh = {"step": rep,
+                      "mu": model.param_shardings(),
+                      "nu": model.param_shardings()}
+            opt_sds = _sharded_sds(opt_sds, opt_sh)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_sds, opt_sds, specs["batch"])
+        elif shape.kind == "prefill":
+            lowered = jax.jit(step).lower(params_sds, specs["batch"])
+        else:
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(
+                params_sds, specs["tokens"], specs["cache"], specs["pos"])
+        record["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t0, 2)
+    _finish(record, compiled, analytic_lm_flops(cfg, shape), mesh,
+            outdir, dump_hlo)
+    return record
+
+
+def run_recsys_cell(arch: str, shape_name: str, mesh_kind: str,
+                    outdir: str, *, variant: str = "baseline",
+                    comm: str = "allgather_rs",
+                    embed_shard: str = "all",
+                    dump_hlo: bool = False) -> Dict:
+    from repro.models.recsys.model import RecsysModel
+    from repro.train.train_step import build_train_step, init_opt_state
+    from repro.data.pipeline import batch_shardings
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = RECSYS_ARCHS[arch]
+    shape = next(s for s in RECSYS_SHAPES if s.name == shape_name)
+    batch = shape.global_batch
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "variant": variant, "kind": "train", "comm": comm}
+    tcfg = TrainConfig()
+    with mesh:
+        t0 = time.time()
+        model = RecsysModel(cfg, mesh, global_batch=batch, comm=comm,
+                            embed_shard_axes=embed_shard)
+        params_sds = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+        params_sds = _sharded_sds(params_sds, model.param_shardings())
+        opt_sds = jax.eval_shape(
+            lambda p: init_opt_state(p, tcfg), params_sds)
+        rep = NamedSharding(mesh, P())
+
+        def opt_sharding(path, leaf):
+            # row-wise accumulators follow their table's row sharding
+            keys = [str(getattr(p, "key", "")) for p in path]
+            if "acc" in keys and len(leaf.shape) == 1:
+                tab = keys[-1]
+                group = keys[-2]
+                psh = model.param_shardings()
+                src = psh.get(group, {}).get(tab) if group in psh else None
+                if src is not None and len(src.spec) >= 1:
+                    return NamedSharding(mesh, P(src.spec[0]))
+            return rep
+
+        opt_sds = jax.tree_util.tree_map_with_path(
+            lambda pa, l: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=opt_sharding(pa, l)),
+            opt_sds)
+        b_sh = batch_shardings(mesh)
+        h = max(t.hotness for t in cfg.tables)
+        batch_sds = {
+            "dense": jax.ShapeDtypeStruct(
+                (batch, cfg.num_dense_features), jnp.float32,
+                sharding=b_sh["dense"]),
+            "cat": jax.ShapeDtypeStruct(
+                (batch, cfg.num_tables, h), jnp.int32, sharding=b_sh["cat"]),
+            "label": jax.ShapeDtypeStruct(
+                (batch,), jnp.float32, sharding=b_sh["label"]),
+        }
+        step = build_train_step(model, tcfg)
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+            params_sds, opt_sds, batch_sds)
+        record["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t0, 2)
+    _finish(record, compiled, analytic_recsys_flops(cfg, batch), mesh,
+            outdir, dump_hlo)
+    return record
+
+
+def _finish(record, compiled, model_flops, mesh, outdir, dump_hlo):
+    mem = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_estimate_bytes": mem.argument_size_in_bytes
+        + mem.output_size_in_bytes + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes,
+    }
+    try:
+        ca = compiled.cost_analysis()
+        record["xla_cost_analysis"] = {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+        }
+    except Exception:
+        record["xla_cost_analysis"] = None
+    hlo = compiled.as_text()
+    record["hlo_len"] = len(hlo)
+    analysis = hlo_analysis.analyze_text(hlo)
+    record["analysis"] = analysis
+    n_dev = int(np.prod(mesh.devices.shape))
+    record["n_devices"] = n_dev
+    record["model_flops"] = model_flops
+    hlo_global = analysis["flops"] * n_dev
+    record["model_flops_ratio"] = (model_flops / hlo_global
+                                   if hlo_global else None)
+    record["status"] = "ok"
+    if dump_hlo:
+        import gzip
+        path = os.path.join(outdir, _name(record) + ".hlo.txt.gz")
+        with gzip.open(path, "wt") as f:
+            f.write(hlo)
+    _write(outdir, record)
+
+
+def _name(record):
+    return (f"{record['arch']}__{record['shape']}__{record['mesh']}"
+            f"__{record['variant']}")
+
+
+def _write(outdir, record):
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, _name(record) + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+    a = record.get("analysis", {})
+    mem = record.get("memory", {})
+    if record["status"] == "ok":
+        print(f"[{record['mesh']}] {record['arch']} × {record['shape']} "
+              f"({record['variant']}): compile={record['compile_s']}s "
+              f"Tc={a['compute_s']*1e3:.2f}ms Tm={a['memory_s']*1e3:.2f}ms "
+              f"Tn={a['collective_s']*1e3:.2f}ms dom={a['dominant']} "
+              f"peak={mem['peak_estimate_bytes']/2**30:.2f}GiB "
+              f"ratio={record.get('model_flops_ratio') or 0:.3f}",
+              flush=True)
+    else:
+        print(f"[{record['mesh']}] {record['arch']} × {record['shape']}: "
+              f"{record['status']} ({record.get('reason', '')})",
+              flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--comm", default="allgather_rs")
+    ap.add_argument("--embed-shard", default="all", choices=["all", "model"])
+    ap.add_argument("--embed-mode", default="auto")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--loss-chunk", type=int, default=None)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--embed-axes", default=None,
+                    help="comma list, e.g. pod,data,model")
+    ap.add_argument("--attn-partition", default=None,
+                    choices=["auto", "heads", "seq"])
+    ap.add_argument("--dump-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in LM_ARCHS:
+            for shp in LM_SHAPES:
+                cells.append(("lm", arch, shp.name))
+        for arch in RECSYS_ARCHS:
+            for shp in RECSYS_SHAPES:
+                cells.append(("recsys", arch, shp.name))
+    else:
+        kind = "recsys" if args.arch in RECSYS_ARCHS else "lm"
+        shapes = [args.shape] if args.shape else \
+            ([s.name for s in LM_SHAPES] if kind == "lm"
+             else [s.name for s in RECSYS_SHAPES])
+        cells = [(kind, args.arch, s) for s in shapes]
+
+    mkw = {}
+    if args.embed_mode != "auto":
+        mkw["embed_mode"] = args.embed_mode
+    if args.remat:
+        mkw["remat"] = args.remat
+    if args.loss_chunk:
+        mkw["loss_chunk"] = args.loss_chunk
+    if args.q_chunk:
+        mkw["q_chunk"] = args.q_chunk
+    if args.embed_axes:
+        mkw["embed_shard_axes"] = tuple(args.embed_axes.split(","))
+    if args.attn_partition:
+        mkw["attn_partition"] = args.attn_partition
+
+    failures = []
+    for kind, arch, shp in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shp}__{mesh_kind}__{args.variant}"
+            path = os.path.join(args.out, name + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"skip existing {name}", flush=True)
+                continue
+            try:
+                if kind == "lm":
+                    run_lm_cell(arch, shp, mesh_kind, args.out,
+                                variant=args.variant, model_kwargs=mkw,
+                                dump_hlo=args.dump_hlo)
+                else:
+                    run_recsys_cell(arch, shp, mesh_kind, args.out,
+                                    variant=args.variant, comm=args.comm,
+                                    embed_shard=args.embed_shard,
+                                    dump_hlo=args.dump_hlo)
+            except Exception as e:
+                failures.append((arch, shp, mesh_kind, repr(e)))
+                print(f"FAIL {arch} × {shp} [{mesh_kind}]: {e}",
+                      flush=True)
+                traceback.print_exc()
+                record = {"arch": arch, "shape": shp, "mesh": mesh_kind,
+                          "variant": args.variant, "status": "error",
+                          "reason": repr(e)}
+                _write(args.out, record)
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

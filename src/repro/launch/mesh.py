@@ -1,0 +1,47 @@
+"""Mesh construction for single-pod and multi-pod deployments.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required so smoke tests see a
+single CPU device while the dry-run process sees 512 placeholder devices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(cfg: MeshConfig) -> Mesh:
+    return jax.make_mesh(
+        cfg.shape, cfg.axes, axis_types=(AxisType.Auto,) * len(cfg.axes)
+    )
+
+
+def make_test_mesh(shape: Sequence[int] = (1, 1),
+                   axes: Sequence[str] = ("data", "model")) -> Mesh:
+    """A mesh sized for whatever devices exist (CPU tests)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes carrying the batch dimension (everything except "model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def mesh_config_for(mesh: Mesh) -> MeshConfig:
+    return MeshConfig(tuple(mesh.devices.shape), tuple(mesh.axis_names))

@@ -1,0 +1,96 @@
+"""Production serving launcher: train-or-load a recsys model, deploy it
+into the Hierarchical Parameter Server, and serve a synthetic request
+stream through the batched inference server (paper Figure 2).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch dlrm-criteo \
+      --requests 50 --batch 64
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
+from repro.core.hps.hps import HPS
+from repro.core.hps.persistent_db import PersistentDB
+from repro.core.hps.volatile_db import VolatileDB
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.mesh import make_test_mesh
+from repro.models.recsys.model import RecsysModel
+from repro.serve.server import InferenceServer, deploy_from_training
+from repro.train.train_step import build_train_step, init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    # wdl/deepfm need a second (wide) HPS — served via the synchronous
+    # path in tests; the CLI covers the no-wide models
+    ap.add_argument("--arch", default="dlrm-criteo",
+                    choices=["dlrm-criteo", "dcn-criteo"])
+    ap.add_argument("--train-steps", type=int, default=20)
+    ap.add_argument("--requests", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--cache-capacity", type=int, default=2048)
+    ap.add_argument("--pdb-root", default=None)
+    args = ap.parse_args()
+
+    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS[args.arch])
+    mesh = make_test_mesh((1, 1))
+
+    with mesh:
+        model = RecsysModel(cfg, mesh, global_batch=args.batch)
+        params = model.init(jax.random.PRNGKey(0))
+        data = SyntheticCTR(cfg, args.batch)
+        tcfg = TrainConfig(learning_rate=1e-2)
+        step = jax.jit(build_train_step(model, tcfg))
+        opt = init_opt_state(params, tcfg)
+        for i in range(args.train_steps):
+            import jax.numpy as jnp
+            batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            params, opt, aux = step(params, opt, batch)
+        print(f"trained {args.train_steps} steps, "
+              f"loss={float(aux['loss']):.4f}")
+
+        root = args.pdb_root or tempfile.mkdtemp(prefix="hps_")
+        pdb = PersistentDB(root)
+        deploy_from_training(model, params, pdb, args.arch)
+        hps = HPS(args.arch, cfg.tables, pdb,
+                  vdb=VolatileDB(shards=2),
+                  cache_capacity=args.cache_capacity)
+        dense = {k: v for k, v in params.items()
+                 if k not in ("embedding", "wide_embedding")}
+        server = InferenceServer(model, dense, hps)
+
+        # warm + serve
+        warm = data.batch(10_000)
+        server.predict(warm["dense"], warm["cat"])
+        server.latencies_ms.clear()
+        server.start()
+        t0 = time.time()
+        handles = []
+        for r in range(args.requests):
+            req = data.batch(20_000 + r)
+            handles.append(server.submit(req["dense"], req["cat"]))
+        outs = [h.get(timeout=300) for h in handles]
+        dt = time.time() - t0
+        server.stop()
+
+        n = sum(len(o) for o in outs)
+        pct = server.latency_percentiles()
+        stats = hps.stats()
+        print(f"served {n} predictions in {dt:.2f}s "
+              f"({n / dt:.0f} qps)")
+        print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+              f"p99={pct['p99']:.1f}")
+        print(f"L1 hit rate: "
+              f"{np.mean(list(stats['l1_hit_rate'].values())):.3f}; "
+              f"L2 hits={stats['l2_hits']} misses={stats['l2_misses']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+No device allocation happens here — stand-ins are weak-type-correct and
+carry NamedShardings so ``jax.jit(...).lower()`` sees the production
+layout.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, RecsysConfig, ShapeConfig
+from repro.models.lm.backbone import LMModel
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is not None and spec is not None:
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lm_input_specs(model: LMModel, shape: ShapeConfig,
+                   mesh: Optional[Mesh] = None) -> Dict:
+    """Returns kwargs (as a dict) for the step function of ``shape.kind``."""
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    dp = tuple(a for a in (mesh.axis_names if mesh else ("data",))
+               if a != "model")
+    dp_n = int(np.prod([mesh.shape[a] for a in dp])) if mesh else 1
+    if b % dp_n != 0:
+        dp = None              # e.g. long_500k with global_batch=1
+    tok_spec = P(dp, None)
+    if shape.kind in ("train", "prefill"):
+        s_text = s - (cfg.frontend_seq if cfg.frontend == "vision" else 0)
+        batch = {"tokens": _sds((b, s_text), jnp.int32, mesh, tok_spec)}
+        if cfg.frontend == "vision":
+            batch["patches"] = _sds((b, cfg.frontend_seq, cfg.d_model),
+                                    jnp.bfloat16, mesh,
+                                    P(dp, None, None) if mesh else None)
+        if cfg.frontend == "audio":
+            batch["frames"] = _sds((b, max(s // 8, 16), cfg.d_model),
+                                   jnp.bfloat16, mesh,
+                                   P(dp, None, None) if mesh else None)
+        return {"batch": batch}
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    if mesh is not None:
+        cache_specs = model.cache_specs(b)
+        cache = jax.tree.map(
+            lambda sds_, sp: _sds(sds_.shape, sds_.dtype, mesh, sp),
+            cache, cache_specs)
+    return {
+        "tokens": _sds((b, 1), jnp.int32, mesh,
+                       tok_spec if mesh else None),
+        "cache": cache,
+        "pos": _sds((b,), jnp.int32, mesh, P(dp) if mesh else None),
+    }
+
+
+def lm_step_fn(model: LMModel, shape: ShapeConfig, tcfg=None):
+    """The function to lower for this cell."""
+    if shape.kind == "train":
+        from repro.configs.base import TrainConfig
+        from repro.optim.optimizers import make
+        tcfg = tcfg or TrainConfig()
+        opt = make("adamw", tcfg)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.train_loss)(params,
+                                                               batch)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            return new_params, new_state, loss
+
+        return train_step
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+        return prefill_step
+
+    def serve_step(params, tokens, cache, pos):
+        return model.decode_step(params, tokens, cache, pos)
+
+    return serve_step
+
+
+def recsys_input_specs(cfg: RecsysConfig, batch: int,
+                       mesh: Optional[Mesh] = None) -> Dict:
+    dp = tuple(a for a in (mesh.axis_names if mesh else ("data",))
+               if a != "model")
+    h = max(t.hotness for t in cfg.tables)
+    mk = lambda shape, dt, spec: _sds(shape, dt, mesh, spec)
+    return {
+        "dense": mk((batch, cfg.num_dense_features), jnp.float32,
+                    P(dp, None)),
+        "cat": mk((batch, cfg.num_tables, h), jnp.int32, P(dp, None, None)),
+        "label": mk((batch,), jnp.float32, P(dp)),
+    }

@@ -1,0 +1,779 @@
+"""LMModel — assembly of the assigned architectures on the paper's substrate.
+
+One class covers all six families (dense / moe / ssm / hybrid / audio /
+vlm) via the config's ``block_pattern``; layers are stacked and driven by
+``lax.scan`` so the HLO stays one-group-sized.
+
+The paper's technique shows up here as the **vocab embedding modes**
+(DESIGN.md §5): LM token tables are Zipf-accessed like CTR features, so
+the hybrid hot/cold split applies directly:
+
+  * ``replicated`` — whole table on every device (small vocabs),
+  * ``sharded``    — rows striped over ``embed_shard_axes`` (Megatron-style
+    MP; fwd psum of [B, S, D]),
+  * ``hybrid``     — hot rows replicated (local lookup, no comm in fwd;
+    tiny grad all-reduce) + cold rows striped over *all* mesh axes
+    (HugeCTR's hybrid sparse embedding, which also FSDP-shards the
+    dominant memory consumer for 256k-vocab archs).
+
+Cross-entropy runs in sequence chunks against the (vocab-sharded) head so
+[B, S, V] logits never materialize.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeConfig
+from repro.models.lm import moe as moe_lib
+from repro.models.lm import rglru as rglru_lib
+from repro.models.lm import xlstm as xlstm_lib
+from repro.models.lm import transformer as tf
+
+
+def _stack_init(init_fn, key, n, *args):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args))(keys)
+
+
+class LMModel:
+
+    def __init__(self, cfg: LMConfig, mesh: Mesh, *,
+                 embed_mode: str = "auto",
+                 embed_shard_axes: Optional[Tuple[str, ...]] = None,
+                 hot_fraction: float = 0.05,
+                 q_chunk: int = 1024, k_chunk: int = 1024,
+                 loss_chunk: int = 512,
+                 remat: str = "none",
+                 attn_partition: str = "auto",
+                 compute_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.cd = compute_dtype if cfg.dtype == "bf16" else jnp.float32
+        self.q_chunk, self.k_chunk = q_chunk, k_chunk
+        self.loss_chunk = loss_chunk
+        self.remat = remat
+        axes = tuple(mesh.axis_names)
+        self.model_axis = "model"
+        self.model_size = int(mesh.shape["model"]) \
+            if "model" in axes else 1
+        self.n_dev = int(np.prod(mesh.devices.shape))
+        if embed_mode == "auto":
+            embed_mode = "hybrid" if cfg.vocab_size >= 100_000 else \
+                "sharded" if cfg.vocab_size * cfg.d_model > 2 ** 26 else \
+                "replicated"
+        self.embed_mode = embed_mode
+        # default: shard the cold/sharded table over "model" only, so the
+        # (tied) output head is naturally vocab-parallel with no resharding;
+        # all-axes sharding is available as a memory-scaling knob.
+        self.embed_axes = embed_shard_axes or ("model",)
+        # FSDP-style extra sharding of block params over "data" when TP-only
+        # sharding would blow past HBM (command-r-plus: 104B params).
+        self.fsdp = cfg.dense_param_count * 12 / max(
+            int(mesh.shape["model"]) if "model" in axes else 1, 1) > 10e9
+        self.hot_rows = max(self.n_dev, int(cfg.vocab_size * hot_fraction)) \
+            if embed_mode == "hybrid" else 0
+        # pad cold/sharded rows to the sharding product
+        shard_n = 1
+        for a in self.embed_axes:
+            shard_n *= int(mesh.shape[a])
+        self._embed_shard_n = shard_n
+        cold = cfg.vocab_size - self.hot_rows
+        self.cold_rows = (cold + shard_n - 1) // shard_n * shard_n
+        vpad = (cfg.vocab_size + self.model_size - 1) \
+            // self.model_size * self.model_size
+        self.vocab_pad = vpad
+        # attention partitioning for train/prefill: head-sharding is clean
+        # iff the model axis factors as (a | hkv) x (b | group) — GSPMD
+        # then shards kv-heads by a and query-groups by b with no sharded
+        # contraction. Otherwise it splits head_dim and all-reduces every
+        # score block (456 GiB/device on minitron prefill — §Perf iter 2);
+        # those archs shard the query SEQUENCE instead (seqpar_attention).
+        # Measured: seq wins only for the dirty cases (minitron g=3,
+        # granite-3b g=3); clean archs regress under seq (causal-half FLOP
+        # loss) — hence the exact divisibility rule, not a blanket one.
+        if attn_partition == "auto":
+            if self.model_size > 1 and cfg.num_kv_heads > 0:
+                import math
+                a = math.gcd(cfg.num_kv_heads, self.model_size)
+                b = self.model_size // a
+                group = cfg.num_heads // cfg.num_kv_heads
+                dirty = group % b != 0
+            else:
+                dirty = False
+            # FSDP archs also take seq — but only when TRAINING (remat
+            # set): the win is the seq-over-model sharding of the scan-
+            # carry saves (§Perf iter 6), which measured 72.2 s (heads)
+            # vs 40.6 s (seq) on command-r train_4k; for fwd-only prefill
+            # heads measured better (26.4 vs 48.6 s).
+            training = remat != "none"
+            attn_partition = "seq" if (dirty or (self.fsdp and training)) \
+                else "heads"
+        self.attn_partition = attn_partition
+        self._seq_par_mesh = mesh if attn_partition == "seq" else None
+        # layer grouping for the scan
+        self.pattern = cfg.block_pattern
+        total = cfg.num_layers
+        per = len(self.pattern)
+        self.n_groups = total // per
+        self.n_tail = total - self.n_groups * per    # leftover layers
+        self.tail_pattern = cfg.block_pattern[:self.n_tail]
+
+    # ------------------------------------------------------------------ init
+
+    def _block_init(self, key, kind: str):
+        cfg = self.cfg
+        if kind == "attn":
+            return {"attn": tf.attn_init(key, cfg),
+                    "ffn": self._ffn_or_moe_init(
+                        jax.random.fold_in(key, 1))}
+        if kind == "local_attn":
+            return {"attn": tf.attn_init(key, cfg),
+                    "ffn": tf.ffn_init(jax.random.fold_in(key, 1), cfg)}
+        if kind == "rglru":
+            return {"rglru": rglru_lib.rglru_init(key, cfg),
+                    "ffn": tf.ffn_init(jax.random.fold_in(key, 1), cfg)}
+        if kind == "mlstm":
+            return {"mlstm": xlstm_lib.mlstm_init(key, cfg)}
+        if kind == "slstm":
+            return {"slstm": xlstm_lib.slstm_init(key, cfg)}
+        raise ValueError(kind)
+
+    def _ffn_or_moe_init(self, key):
+        if self.cfg.moe is not None:
+            return moe_lib.moe_init(key, self.cfg, self.model_size)
+        return tf.ffn_init(key, self.cfg)
+
+    def init(self, key: jax.Array) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        d = cfg.d_model
+        params: Dict = {}
+        # embeddings
+        scale = 1.0 / np.sqrt(d)
+        if self.embed_mode == "hybrid":
+            params["embed_hot"] = jax.random.normal(
+                keys[0], (self.hot_rows, d), jnp.float32) * scale
+            params["embed_cold"] = jax.random.normal(
+                keys[1], (self.cold_rows, d), jnp.float32) * scale
+        else:
+            rows = self.vocab_pad if self.embed_mode == "sharded" \
+                else cfg.vocab_size
+            params["embed"] = jax.random.normal(
+                keys[0], (rows, d), jnp.float32) * scale
+        if not cfg.tie_embeddings:
+            params["head"] = jax.random.normal(
+                keys[2], (d, self.vocab_pad), jnp.float32) * scale
+        params["final_norm"] = tf.norm_init(cfg)
+        # blocks: one stacked params-tree per pattern position
+        params["groups"] = {}
+        for pi, kind in enumerate(self.pattern):
+            params["groups"][f"{pi}_{kind}"] = _stack_init(
+                lambda k: self._block_init(k, kind),
+                jax.random.fold_in(keys[3], pi), self.n_groups)
+        for pi, kind in enumerate(self.tail_pattern):
+            params["groups"][f"tail{pi}_{kind}"] = _stack_init(
+                lambda k: self._block_init(k, kind),
+                jax.random.fold_in(keys[4], pi), 1)
+        # encoder (enc-dec archs)
+        if cfg.encoder_layers:
+            params["enc_groups"] = _stack_init(
+                lambda k: {"attn": tf.attn_init(k, cfg),
+                           "ffn": tf.ffn_init(jax.random.fold_in(k, 1),
+                                              cfg)},
+                keys[5], cfg.encoder_layers)
+            params["cross"] = _stack_init(
+                lambda k: tf.attn_init(k, cfg), keys[6], cfg.num_layers)
+        return params
+
+    # ----------------------------------------------------------- shardings
+
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        m = self.model_axis
+        # FSDP: also stripe the non-TP dim of big projections over "data";
+        # GSPMD then all-gathers each scan step's weights (ZeRO-3).
+        data_axes = tuple(a for a in self.mesh.axis_names
+                          if a not in ("model", "pod"))
+        fs = data_axes[0] if (self.fsdp and data_axes) else None
+        dsz = int(self.mesh.shape[fs]) if fs else 1
+
+        def fsd(n):
+            return fs if (fs and n % dsz == 0) else None
+
+        def attn_spec():
+            hd = cfg.resolved_head_dim
+            div = lambda n: (m if n % self.model_size == 0 else None)
+            return {"wq": P(None, fsd(cfg.d_model),
+                            div(cfg.num_heads * hd)),
+                    "wk": P(None, fsd(cfg.d_model),
+                            div(cfg.num_kv_heads * hd)),
+                    "wv": P(None, fsd(cfg.d_model),
+                            div(cfg.num_kv_heads * hd)),
+                    "wo": P(None, div(cfg.num_heads * hd),
+                            fsd(cfg.d_model)),
+                    "norm": _norm_spec(cfg)}
+
+        def ffn_spec(f=None):
+            f = f or cfg.d_ff
+            div = m if f % self.model_size == 0 else None
+            sp = {"w1": P(None, fsd(cfg.d_model), div),
+                  "w2": P(None, div, fsd(cfg.d_model)),
+                  "norm": _norm_spec(cfg)}
+            if cfg.activation in ("swiglu", "geglu"):
+                sp["w3"] = P(None, fsd(cfg.d_model), div)
+            return sp
+
+        def _norm_spec(cfg):
+            return {} if cfg.norm == "nonparam_ln" \
+                else {"scale": P(None, None)}
+
+        def moe_spec():
+            return {"router": P(None, None, None),
+                    "w1": P(None, m, None, None),
+                    "w3": P(None, m, None, None),
+                    "w2": P(None, m, None, None),
+                    "norm": _norm_spec(cfg)}
+
+        def dense_d_spec(shape_key):
+            # big [L, D, D] square projections: shard output dim
+            div = m if cfg.d_model % self.model_size == 0 else None
+            return P(None, None, div)
+
+        def block_spec(kind):
+            if kind in ("attn", "local_attn"):
+                ffn = moe_spec() if (cfg.moe is not None and kind == "attn") \
+                    else ffn_spec()
+                return {"attn": attn_spec(), "ffn": ffn}
+            if kind == "rglru":
+                div = m if cfg.d_model % self.model_size == 0 else None
+                return {"rglru": {
+                    "w_gelu": P(None, None, div),
+                    "w_rnn": P(None, None, div),
+                    "conv": P(None, None, div),
+                    "wa": P(None, None, div), "wx": P(None, None, div),
+                    "lam": P(None, div),
+                    "w_out": P(None, div, None),
+                    "norm": _norm_spec(cfg)}, "ffn": ffn_spec()}
+            if kind == "mlstm":
+                div = m if cfg.d_model % self.model_size == 0 else None
+                return {"mlstm": {
+                    "wq": P(None, None, div), "wk": P(None, None, div),
+                    "wv": P(None, None, div),
+                    "wi": P(None, None, None), "wf": P(None, None, None),
+                    "bf": P(None, None), "bi": P(None, None),
+                    "wo": P(None, div, None), "wog": P(None, None, div),
+                    "norm": _norm_spec(cfg), "gn": P(None, div)}}
+            if kind == "slstm":
+                div = m if cfg.d_model % self.model_size == 0 else None
+                return {"slstm": {
+                    "wz": P(None, None, div), "wi": P(None, None, div),
+                    "wf": P(None, None, div), "wo": P(None, None, div),
+                    "rz": P(None, None, None, None),
+                    "ri": P(None, None, None, None),
+                    "rf": P(None, None, None, None),
+                    "ro": P(None, None, None, None),
+                    "bf": P(None, None), "bi": P(None, None),
+                    "down": P(None, div, None), "norm": _norm_spec(cfg)}}
+            raise ValueError(kind)
+
+        specs: Dict = {"final_norm": ({} if cfg.norm == "nonparam_ln"
+                                      else {"scale": P(None)}),
+                       "groups": {}}
+        if self.embed_mode == "hybrid":
+            specs["embed_hot"] = P(None, None)
+            specs["embed_cold"] = P(self.embed_axes, None)
+        elif self.embed_mode == "sharded":
+            specs["embed"] = P(self.embed_axes, None)
+        else:
+            specs["embed"] = P(None, None)
+        if not cfg.tie_embeddings:
+            specs["head"] = P(None,
+                              m if self.vocab_pad % self.model_size == 0
+                              else None)
+        for pi, kind in enumerate(self.pattern):
+            specs["groups"][f"{pi}_{kind}"] = block_spec(kind)
+        for pi, kind in enumerate(self.tail_pattern):
+            specs["groups"][f"tail{pi}_{kind}"] = block_spec(kind)
+        if cfg.encoder_layers:
+            specs["enc_groups"] = {"attn": attn_spec(), "ffn": ffn_spec()}
+            specs["cross"] = attn_spec()
+        return specs
+
+    def param_shardings(self):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.param_specs(),
+            is_leaf=lambda x: isinstance(x, P))
+
+    # -------------------------------------------------------------- embed
+
+    def _sharded_lookup(self, table: jax.Array, ids: jax.Array,
+                        valid: jax.Array) -> jax.Array:
+        """Row-sharded table lookup via shard_map (masked take + psum).
+
+        Plain ``jnp.take`` on a row-sharded table makes GSPMD all-gather
+        the WHOLE table (11 GiB f32 for command-r's cold split, ×several
+        live buffers — §Perf iter 9). The HugeCTR-style pattern instead:
+        every shard resolves the ids that fall in its row range and one
+        psum of the [B, S, D] activations combines them — the same
+        masked_range_lookup the recsys engine uses.
+        """
+        axes = self.embed_axes
+        b = ids.shape[0]
+        dp = tuple(a for a in self.mesh.axis_names if a != "model")
+        dp_n = 1
+        for a in dp:
+            dp_n *= int(self.mesh.shape[a])
+        dspec = dp if b % dp_n == 0 else None
+        shard_rows = table.shape[0] // self._embed_shard_n
+
+        def local(tab, ids_, valid_):
+            idx = jax.lax.axis_index(axes)
+            rel = ids_ - idx * shard_rows
+            ok = valid_ & (rel >= 0) & (rel < shard_rows)
+            part = jnp.take(tab, jnp.where(ok, rel, 0), axis=0)
+            part = jnp.where(ok[..., None], part.astype(self.cd), 0)
+            return jax.lax.psum(part, axes)
+
+        fn = jax.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(axes, None), P(dspec, None), P(dspec, None)),
+            out_specs=P(dspec, None, None), check_vma=False)
+        return fn(table, ids, valid)
+
+    def embed(self, params: Dict, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if self.embed_mode == "hybrid":
+            hot = params["embed_hot"]
+            is_hot = tokens < self.hot_rows
+            hot_part = jnp.take(hot, jnp.where(is_hot, tokens, 0),
+                                axis=0).astype(self.cd)
+            hot_part = jnp.where(is_hot[..., None], hot_part, 0)
+            cold_part = self._sharded_lookup(
+                params["embed_cold"], tokens - self.hot_rows, ~is_hot)
+            x = hot_part + cold_part
+        elif self.embed_mode == "sharded":
+            x = self._sharded_lookup(
+                params["embed"], tokens, jnp.ones(tokens.shape, bool))
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)
+        return x.astype(self.cd)
+
+    def _head_parts(self, params: Dict):
+        """Output head as a list of [D, V_part] matrices.
+
+        The tied-hybrid case stays in two parts (hot.T replicated,
+        cold.T vocab-parallel) so the full table is never materialized —
+        logits are the concat along vocab and, because cold ids follow hot
+        ids contiguously, ``concat_logits[token_id]`` is the right logit.
+        """
+        if self.cfg.tie_embeddings:
+            if self.embed_mode == "hybrid":
+                return [params["embed_hot"].T, params["embed_cold"].T]
+            emb = params["embed"]
+            if emb.shape[0] < self.vocab_pad:
+                emb = jnp.pad(
+                    emb, ((0, self.vocab_pad - emb.shape[0]), (0, 0)))
+            return [emb.T]
+        return [params["head"]]
+
+    @property
+    def logits_size(self) -> int:
+        if self.cfg.tie_embeddings and self.embed_mode == "hybrid":
+            return self.hot_rows + self.cold_rows
+        return self.vocab_pad
+
+    # -------------------------------------------------------------- blocks
+
+    def _apply_block(self, kind: str, bp: Dict, x, *, positions,
+                     cache=None, cache_pos=None):
+        cfg = self.cfg
+        new_cache = None
+        if kind in ("attn", "local_attn"):
+            window = cfg.local_attn_window if kind == "local_attn" else None
+            x, new_cache = tf.attn_apply(
+                bp["attn"], x, cfg, positions=positions, causal=True,
+                window=window, cache=cache, cache_pos=cache_pos,
+                q_chunk=self.q_chunk, k_chunk=self.k_chunk,
+                seq_par_mesh=self._seq_par_mesh)
+            if cfg.moe is not None and kind == "attn":
+                x = self._moe(bp["ffn"], x)
+            else:
+                x = tf.ffn_apply(bp["ffn"], x, cfg)
+        elif kind == "rglru":
+            x, new_cache = rglru_lib.rglru_apply(bp["rglru"], x, cfg,
+                                                 state=cache)
+            x = tf.ffn_apply(bp["ffn"], x, cfg)
+        elif kind == "mlstm":
+            x, new_cache = xlstm_lib.mlstm_apply(bp["mlstm"], x, cfg,
+                                                 state=cache)
+        elif kind == "slstm":
+            x, new_cache = xlstm_lib.slstm_apply(bp["slstm"], x, cfg,
+                                                 state=cache)
+        else:
+            raise ValueError(kind)
+        return x, new_cache
+
+    def _moe(self, mp: Dict, x: jax.Array) -> jax.Array:
+        dp = tuple(a for a in self.mesh.axis_names if a != "model")
+        wspec = {"router": P(None, None),
+                 "w1": P("model", None, None),
+                 "w3": P("model", None, None),
+                 "w2": P("model", None, None),
+                 "norm": jax.tree.map(lambda _: P(None), mp["norm"])}
+        fn = jax.shard_map(
+            functools.partial(moe_lib.moe_apply_local, cfg=self.cfg,
+                              model_axis="model",
+                              model_axis_size=self.model_size),
+            mesh=self.mesh,
+            in_specs=(wspec, P(dp, None, None)),
+            out_specs=P(dp, None, None),
+            check_vma=False)
+        return fn(mp, x)
+
+    # --------------------------------------------------------------- train
+
+    def _pin_batch(self, h):
+        """Pin activations to batch-over-DP sharding inside scan bodies.
+
+        With FSDP the weights carry the ``data`` axis on their contraction
+        dims; without this constraint GSPMD resolves the conflict by
+        RESHARDING ACTIVATIONS to replicated-batch/split-d (observed on
+        command-r train_4k: [256, 4096, 768] per-device activations,
+        442 GiB peak). Pinning batch forces the cheap resolution — the
+        ZeRO-3 per-layer weight all-gather. §Perf iter 5.
+
+        When attention is sequence-partitioned anyway, the seq dim is
+        additionally pinned over ``model`` — this shards the per-layer
+        scan-carry saves (the residual-stream activations reverse-mode
+        keeps) 16x, which is what brings the 104B train cell under HBM
+        (§Perf iter 6). Elementwise/rowwise ops (norms, FFN matmuls over
+        d) are indifferent to seq sharding.
+        """
+        if not self.fsdp:
+            return h
+        dp = tuple(a for a in self.mesh.axis_names if a != "model")
+        seq = "model" if (self.attn_partition == "seq"
+                          and h.shape[1] % self.model_size == 0) else None
+        return jax.lax.with_sharding_constraint(
+            h, NamedSharding(self.mesh, P(dp, seq, None)))
+
+    def _run_stack(self, params, x, positions, *, enc_out=None):
+        """Scan every pattern group; returns final hidden states."""
+        if self.cfg.encoder_layers:
+            return self._run_encdec_decoder(params, x, positions, enc_out)
+        for pi, kind in enumerate(self.pattern):
+            gp = params["groups"][f"{pi}_{kind}"]
+
+            def body(h, layer_p, _kind=kind):
+                h = self._pin_batch(h)
+                h2, _ = self._apply_block(_kind, layer_p, h,
+                                          positions=positions)
+                return h2, ()
+
+            fn = body
+            if self.remat == "group":
+                # sqrt(L) nested-scan remat: reverse-mode keeps only the
+                # n_outer group-boundary carries instead of all L (the
+                # [L, B, S, D] carry stack was the peak-HBM driver for
+                # command-r train_4k); each group's layers are recomputed
+                # during its backward. §Perf iter 10.
+                n = self.n_groups
+                outer = max(1, int(np.sqrt(n)))
+                while n % outer:
+                    outer -= 1
+                inner = n // outer
+
+                def group_body(h, group_p, _fn=jax.checkpoint(body)):
+                    # inner layers are ALSO checkpointed: during a group's
+                    # bwd recompute the inner scan would otherwise stack
+                    # every layer's interior activations at once
+                    # (measured: peak 82 GiB vs 27 GiB nested).
+                    h2, _ = jax.lax.scan(_fn, h, group_p)
+                    return h2, ()
+
+                gp = jax.tree.map(
+                    lambda a: a.reshape((outer, inner) + a.shape[1:]), gp)
+                x, _ = jax.lax.scan(jax.checkpoint(group_body), x, gp)
+                continue
+            if self.remat != "none":
+                fn = jax.checkpoint(
+                    body, policy=None if self.remat == "full"
+                    else jax.checkpoint_policies.checkpoint_dots)
+            x, _ = jax.lax.scan(fn, x, gp)
+        for pi, kind in enumerate(self.tail_pattern):
+            gp = params["groups"][f"tail{pi}_{kind}"]
+
+            def tbody(h, layer_p, _kind=kind):
+                h2, _ = self._apply_block(_kind, layer_p, h,
+                                          positions=positions)
+                return h2, ()
+
+            x, _ = jax.lax.scan(tbody, x, gp)
+        return x
+
+    def _run_encdec_decoder(self, params, x, positions, enc_out):
+        cfg = self.cfg
+        xs = {"blk": params["groups"][f"0_{self.pattern[0]}"],
+              "cross": params["cross"]}
+
+        def body(h, layer_p):
+            bp = layer_p["blk"]
+            h, _ = tf.attn_apply(bp["attn"], h, cfg, positions=positions,
+                                 causal=True, q_chunk=self.q_chunk,
+                                 k_chunk=self.k_chunk)
+            h, _ = tf.attn_apply(layer_p["cross"], h, cfg,
+                                 positions=positions, causal=False,
+                                 kv_from=enc_out)
+            h = tf.ffn_apply(bp["ffn"], h, cfg)
+            return h, ()
+
+        fn = body
+        if self.remat != "none":
+            fn = jax.checkpoint(
+                body, policy=None if self.remat == "full"
+                else jax.checkpoint_policies.checkpoint_dots)
+        x, _ = jax.lax.scan(fn, x, xs)
+        return x
+
+    def _encode(self, params, frames: jax.Array) -> jax.Array:
+        """Bidirectional encoder over stub frame embeddings."""
+        cfg = self.cfg
+        x = frames.astype(self.cd)
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1])[None], x.shape[:2])
+
+        def body(h, layer_p):
+            h, _ = tf.attn_apply(layer_p["attn"], h, cfg,
+                                 positions=positions, causal=False,
+                                 q_chunk=self.q_chunk, k_chunk=self.k_chunk)
+            h = tf.ffn_apply(layer_p["ffn"], h, cfg)
+            return h, ()
+
+        x, _ = jax.lax.scan(body, x, params["enc_groups"])
+        return x
+
+    def train_loss(self, params: Dict, batch: Dict) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]                    # [B, S_text]
+        b = tokens.shape[0]
+        x = self.embed(params, tokens)
+        prefix = 0
+        enc_out = None
+        if cfg.frontend == "vision":
+            patches = batch["patches"].astype(self.cd)  # [B, S_img, D]
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix = patches.shape[1]
+        if cfg.frontend == "audio":
+            enc_out = self._encode(params, batch["frames"])
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = self._run_stack(params, x, positions, enc_out=enc_out)
+        x = tf.norm_apply(params["final_norm"], x, cfg)
+        # next-token prediction on text positions
+        h = x[:, prefix:, :]
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full((b, 1), -1, tokens.dtype)], axis=1)
+        return self._xent(params, h, labels)
+
+    def _xent(self, params, h: jax.Array, labels: jax.Array) -> jax.Array:
+        """Chunked softmax cross-entropy; never materializes [B, S, V]."""
+        heads = [p.astype(self.cd) for p in self._head_parts(params)]
+        vtotal = self.logits_size
+        b, s, d = h.shape
+        chunk = min(self.loss_chunk, s)
+        nchunks = (s + chunk - 1) // chunk
+        pad = nchunks * chunk - s
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                             constant_values=-1)
+        hs = h.reshape(b, nchunks, chunk, d).transpose(1, 0, 2, 3)
+        ls = labels.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            hc, lc = xs
+            logits = jnp.concatenate(
+                [(hc @ hp).astype(jnp.float32) for hp in heads], axis=-1)
+            if vtotal > self.cfg.vocab_size:
+                mask = jnp.arange(vtotal) >= self.cfg.vocab_size
+                logits = jnp.where(mask, -1e30, logits)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(
+                logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+            valid = lc >= 0
+            loss = jnp.where(valid, lse - ll, 0.0)
+            return (carry[0] + loss.sum(), carry[1] + valid.sum()), ()
+
+        # remat: without this, reverse-mode saves every chunk's [b, c, V]
+        # f32 logits (67 GiB for command-r train_4k — §Perf iter 7);
+        # recomputing the chunk matmul in bwd is the standard trade.
+        body = jax.checkpoint(body)
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()),
+                                            jnp.zeros((), jnp.int32)),
+                                     (hs, ls))
+        return tot / jnp.maximum(cnt, 1)
+
+    # --------------------------------------------------------------- decode
+
+    def init_cache(self, b: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache: Dict = {"groups": {}}
+
+        def blk_cache(kind, n):
+            if kind == "attn":
+                s = max_seq
+                return (jnp.zeros((n, b, s, hkv, hd), self.cd),
+                        jnp.zeros((n, b, s, hkv, hd), self.cd))
+            if kind == "local_attn":
+                s = min(max_seq, cfg.local_attn_window)
+                return (jnp.zeros((n, b, s, hkv, hd), self.cd),
+                        jnp.zeros((n, b, s, hkv, hd), self.cd))
+            if kind == "rglru":
+                return jax.tree.map(
+                    lambda z: jnp.broadcast_to(z, (n,) + z.shape).copy(),
+                    rglru_lib.rglru_zero_state(cfg, b))
+            if kind == "mlstm":
+                return jax.tree.map(
+                    lambda z: jnp.broadcast_to(z, (n,) + z.shape).copy(),
+                    xlstm_lib.mlstm_zero_state(cfg, b))
+            if kind == "slstm":
+                return jax.tree.map(
+                    lambda z: jnp.broadcast_to(z, (n,) + z.shape).copy(),
+                    xlstm_lib.slstm_zero_state(cfg, b))
+            raise ValueError(kind)
+
+        for pi, kind in enumerate(self.pattern):
+            cache["groups"][f"{pi}_{kind}"] = blk_cache(kind, self.n_groups)
+        for pi, kind in enumerate(self.tail_pattern):
+            cache["groups"][f"tail{pi}_{kind}"] = blk_cache(kind, 1)
+        if cfg.encoder_layers:
+            senc = cfg.frontend_seq or 512
+            cache["cross"] = (
+                jnp.zeros((cfg.num_layers, b, senc, hkv, hd), self.cd),
+                jnp.zeros((cfg.num_layers, b, senc, hkv, hd), self.cd))
+        return cache
+
+    def cache_specs(self, b: int = 0) -> Dict:
+        """PartitionSpecs for the cache.
+
+        Attention KV caches: batch over DP; KV heads over "model" when
+        divisible, otherwise the SEQUENCE dim shards over "model" (the
+        KV cache is the decode memory bound — GQA archs with kv-heads <
+        model-size still scale; softmax over the sharded S needs only a
+        tiny psum). Recurrent states shard batch only.
+        """
+        dp = tuple(a for a in self.mesh.axis_names if a != "model")
+        dp_n = 1
+        for a in dp:
+            dp_n *= int(self.mesh.shape[a])
+        if b and b % dp_n != 0:
+            dp = None          # batch too small to shard (e.g. long_500k)
+        hkv = self.cfg.num_kv_heads
+        kv_spec = P(None, dp, None, "model", None) \
+            if hkv % self.model_size == 0 \
+            else P(None, dp, "model", None, None)
+
+        def spec(path, leaf):
+            keys = "/".join(str(getattr(p, "key", "")) for p in path)
+            is_attn = isinstance(leaf, jax.ShapeDtypeStruct) and \
+                leaf.ndim == 5 and ("attn" in keys or "cross" in keys)
+            if is_attn:
+                return kv_spec
+            # recurrent states / misc: batch over DP only
+            return P(*( [None, dp] + [None] * (leaf.ndim - 2) ))
+
+        cache = jax.eval_shape(lambda: self.init_cache(8, 16))
+        return jax.tree_util.tree_map_with_path(spec, cache)
+
+    def decode_step(self, params: Dict, tokens: jax.Array,
+                    cache: Dict, pos: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        """``tokens [B, 1]``, ``pos [B]`` -> (logits [B, Vpad], new cache)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = self.embed(params, tokens)
+        positions = pos[:, None]
+        new_cache: Dict = {"groups": {}}
+
+        for pi, kind in enumerate(self.pattern):
+            gp = params["groups"][f"{pi}_{kind}"]
+            gc = cache["groups"][f"{pi}_{kind}"]
+            if cfg.encoder_layers:
+                def ebody(h, xs):
+                    layer_p, (sc, cc) = xs
+                    bp = layer_p["blk"]
+                    h, nsc = tf.attn_apply(
+                        bp["attn"], h, cfg, positions=positions,
+                        causal=True, cache=sc, cache_pos=pos)
+                    h, _ = tf.attn_apply(
+                        layer_p["cross"], h, cfg, positions=positions,
+                        causal=False, cache=cc, cache_pos=pos)
+                    h = tf.ffn_apply(bp["ffn"], h, cfg)
+                    return h, nsc
+
+                xs = ({"blk": gp, "cross": params["cross"]},
+                      (gc, cache["cross"]))
+                x, nsc = jax.lax.scan(ebody, x, xs)
+                new_cache["groups"][f"{pi}_{kind}"] = nsc
+                new_cache["cross"] = cache["cross"]
+            else:
+                def body(h, xs, _kind=kind):
+                    layer_p, layer_c = xs
+                    h, nc = self._apply_block(
+                        _kind, layer_p, h, positions=positions,
+                        cache=layer_c, cache_pos=pos)
+                    return h, nc
+
+                x, nc = jax.lax.scan(body, x, (gp, gc))
+                new_cache["groups"][f"{pi}_{kind}"] = nc
+        for pi, kind in enumerate(self.tail_pattern):
+            gp = params["groups"][f"tail{pi}_{kind}"]
+            gc = cache["groups"][f"tail{pi}_{kind}"]
+
+            def tbody(h, xs, _kind=kind):
+                layer_p, layer_c = xs
+                h, nc = self._apply_block(
+                    _kind, layer_p, h, positions=positions,
+                    cache=layer_c, cache_pos=pos)
+                return h, nc
+
+            x, nc = jax.lax.scan(tbody, x, (gp, gc))
+            new_cache["groups"][f"tail{pi}_{kind}"] = nc
+        x = tf.norm_apply(params["final_norm"], x, cfg)
+        logits = jnp.concatenate(
+            [(x[:, 0] @ hp.astype(self.cd)).astype(jnp.float32)
+             for hp in self._head_parts(params)], axis=-1)
+        return logits, new_cache
+
+    def prefill(self, params: Dict, batch: Dict) -> jax.Array:
+        """Full-sequence forward returning last-position logits.
+
+        (Cache construction during prefill is done by replaying decode for
+        serving; the dry-run prefill cell measures the compute-bound
+        full-sequence pass, which dominates.)
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = self.embed(params, tokens)
+        enc_out = None
+        if cfg.frontend == "vision":
+            x = jnp.concatenate([batch["patches"].astype(self.cd), x],
+                                axis=1)
+        if cfg.frontend == "audio":
+            enc_out = self._encode(params, batch["frames"])
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = self._run_stack(params, x, positions, enc_out=enc_out)
+        x = tf.norm_apply(params["final_norm"], x, cfg)
+        return jnp.concatenate(
+            [(x[:, -1] @ hp.astype(self.cd)).astype(jnp.float32)
+             for hp in self._head_parts(params)], axis=-1)

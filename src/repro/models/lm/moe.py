@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Placement mirrors the paper's *localized slot embedding*: each device owns
+whole experts (slots) and tokens route to owners — the same machinery as
+the embedding engine's bucketed dispatch (capacity factor, overflow drops).
+
+Because the batch is replicated over the ``model`` axis (it is sharded
+over DP axes only), every model-rank routes the SAME local tokens to its
+OWN experts and a single ``psum`` over ``model`` combines the top-k expert
+outputs — token traffic equals one TP all-reduce of activations, with no
+all-to-all needed (DESIGN.md §4).
+
+Runs inside ``shard_map`` (the backbone wraps it); experts whose count
+does not divide the model-axis size are padded and masked out of routing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.lm.transformer import norm_apply, norm_init
+
+
+def padded_experts(cfg: LMConfig, model_axis_size: int) -> int:
+    e = cfg.moe.num_experts
+    return (e + model_axis_size - 1) // model_axis_size * model_axis_size
+
+
+def moe_init(key: jax.Array, cfg: LMConfig, model_axis_size: int) -> Dict:
+    d, f = cfg.d_model, cfg.moe.expert_d_ff
+    e_pad = padded_experts(cfg, model_axis_size)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s, so = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    return {
+        "router": jax.random.normal(k1, (d, e_pad), jnp.float32) * s,
+        "w1": jax.random.normal(k2, (e_pad, d, f), jnp.float32) * s,
+        "w3": jax.random.normal(k3, (e_pad, d, f), jnp.float32) * s,
+        "w2": jax.random.normal(k4, (e_pad, f, d), jnp.float32) * so,
+        "norm": norm_init(cfg),
+    }
+
+
+def _bucket(owner: jax.Array, n_buckets: int, capacity: int):
+    """owner [N] in [0, n_buckets] (n_buckets = drop) -> slot assignment."""
+    m = owner.shape[0]
+    order = jnp.argsort(owner, stable=True)
+    sorted_owner = owner[order]
+    start = jnp.searchsorted(sorted_owner, jnp.arange(n_buckets + 1))
+    pos = jnp.arange(m) - start[sorted_owner]
+    ok = (pos < capacity) & (sorted_owner < n_buckets)
+    slot_sorted = jnp.where(ok, sorted_owner * capacity + pos,
+                            n_buckets * capacity)
+    slot = jnp.zeros((m,), jnp.int32).at[order].set(
+        slot_sorted.astype(jnp.int32))
+    return slot
+
+
+def moe_apply_local(params: Dict, x: jax.Array, cfg: LMConfig, *,
+                    model_axis: str, model_axis_size: int) -> jax.Array:
+    """Per-device MoE body (call inside shard_map over the full mesh).
+
+    ``x [B_loc, S, D]`` (replicated over ``model``); expert weights arrive
+    sharded on their leading E axis: ``[E_loc, D, F]``.
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    e_pad = padded_experts(cfg, model_axis_size)
+    e_loc = params["w1"].shape[0]
+    cd = x.dtype
+    h = norm_apply(params["norm"], x, cfg)
+    logits = (h @ params["router"].astype(cd)).astype(jnp.float32)
+    if e_pad > moe.num_experts:          # mask padding experts
+        pad_mask = jnp.arange(e_pad) >= moe.num_experts
+        logits = jnp.where(pad_mask, -1e30, logits)
+    gate_vals, sel = jax.lax.top_k(logits, moe.top_k)   # [B, S, k]
+    gate = jax.nn.softmax(gate_vals, axis=-1)
+
+    n = b * s
+    flat = h.reshape(n, d)
+    sel_flat = sel.reshape(n * moe.top_k)
+    gate_flat = gate.reshape(n * moe.top_k).astype(jnp.float32)
+    tok_of = jnp.repeat(jnp.arange(n), moe.top_k)
+
+    midx = jax.lax.axis_index(model_axis)
+    e0 = midx * e_loc
+    rel = sel_flat - e0
+    local = (rel >= 0) & (rel < e_loc)
+    owner = jnp.where(local, rel, e_loc)
+    capacity = max(1, int(n * moe.top_k / moe.num_experts
+                          * moe.capacity_factor))
+    slot = _bucket(owner, e_loc, capacity)              # [n*k]
+    valid = slot < e_loc * capacity
+
+    # gather tokens into [E_loc, C, D]
+    buf_tok = jnp.full((e_loc * capacity,), n, jnp.int32) \
+        .at[slot].set(tok_of.astype(jnp.int32), mode="drop")
+    flat_pad = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], 0)
+    buf = flat_pad[buf_tok].reshape(e_loc, capacity, d)
+
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w1"].astype(cd))
+    u = jax.nn.silu(u) * jnp.einsum("ecd,edf->ecf", buf,
+                                    params["w3"].astype(cd))
+    y_buf = jnp.einsum("ecf,efd->ecd", u, params["w2"].astype(cd))
+    y_buf = y_buf.reshape(e_loc * capacity, d)
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((1, d), y_buf.dtype)], 0)
+
+    # scatter back with gate weights
+    contrib = y_buf[jnp.where(valid, slot, e_loc * capacity)] \
+        * (gate_flat * valid).astype(y_buf.dtype)[:, None]
+    y = jnp.zeros((n, d), jnp.float32).at[tok_of].add(
+        contrib.astype(jnp.float32))
+    y = jax.lax.psum(y, model_axis)
+    return x + y.reshape(b, s, d).astype(cd)
+
+
+def aux_load_balance_loss(logits: jax.Array, sel: jax.Array,
+                          num_experts: int) -> jax.Array:
+    """Switch-style load-balance auxiliary (fraction × router prob)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(sel[..., 0], logits.shape[-1]),
+                    axis=(0, 1))
+    return num_experts * jnp.sum(frac * probs.mean(axis=(0, 1)))

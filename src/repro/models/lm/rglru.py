@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_a x_t)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t)                      (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)      (elementwise decay, c=8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is elementwise-linear, so training/prefill uses
+``jax.lax.associative_scan`` (log-depth — TPU-friendly) and decode keeps
+an O(1) state — this is what qualifies the hybrid arch for ``long_500k``.
+
+Block layout (Griffin): x -> {linear -> GeLU} ⊙ {linear -> causal conv1d(4)
+-> RG-LRU} -> linear out, with pre-norm and residual.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.lm.transformer import norm_apply, norm_init
+
+_C = 8.0
+_CONV_K = 4
+
+
+def rglru_init(key: jax.Array, cfg: LMConfig) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+    # Lambda init so a^(1/c) ~ U[0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(ks[0], (d,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))      # softplus^-1(-log u)
+    return {
+        "w_gelu": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "w_rnn": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "conv": jax.random.normal(ks[3], (_CONV_K, d), jnp.float32)
+        * (1.0 / np.sqrt(_CONV_K)),
+        "wa": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        "wx": jax.random.normal(ks[5], (d, d), jnp.float32) * s,
+        "lam": lam,
+        "w_out": jax.random.normal(
+            jax.random.fold_in(key, 7), (d, d), jnp.float32) * s,
+        "norm": norm_init(cfg),
+    }
+
+
+def rglru_zero_state(cfg: LMConfig, b: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((b, d), jnp.float32),
+        "conv": jnp.zeros((b, _CONV_K - 1, d), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 carry: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d: ``x [B, S, D]``, ``w [K, D]``."""
+    k = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def rglru_apply(params: Dict, x: jax.Array, cfg: LMConfig, *,
+                state=None) -> Tuple[jax.Array, Dict]:
+    """``x [B, S, D]``; with ``state`` given, S must be 1 (decode)."""
+    b, s, d = x.shape
+    cd = x.dtype
+    xin = norm_apply(params["norm"], x, cfg)
+    gate = jax.nn.gelu(xin @ params["w_gelu"].astype(cd))
+    u_raw = xin @ params["w_rnn"].astype(cd)     # pre-conv (the carry!)
+    conv_carry = None if state is None else state["conv"]
+    u = _causal_conv(u_raw, params["conv"].astype(cd), conv_carry)
+    new_conv = None
+    if state is not None:
+        buf = jnp.concatenate([state["conv"].astype(cd), u_raw], axis=1)
+        new_conv = buf[:, -(_CONV_K - 1):].astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    uf_raw = u_raw.astype(jnp.float32)
+    r = jax.nn.sigmoid((xin @ params["wa"].astype(cd)).astype(jnp.float32))
+    i = jax.nn.sigmoid((xin @ params["wx"].astype(cd)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r      # [B, S, D]
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    if state is None:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a2 * a1, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        new_h = h[:, -1]
+    else:
+        h = a[:, 0] * state["h"] + bx[:, 0]
+        new_h = h
+        h = h[:, None]
+    out = (h.astype(cd) * gate) @ params["w_out"].astype(cd)
+    new_state = {"h": new_h, "conv": new_conv} if state is not None else \
+        {"h": new_h,
+         "conv": uf_raw[:, -(_CONV_K - 1):] if s >= _CONV_K - 1 else
+         jnp.pad(uf_raw, ((0, 0), (_CONV_K - 1 - s, 0), (0, 0)))}
+    return x + out, new_state

@@ -1,0 +1,401 @@
+"""Transformer building blocks for the assigned LM architectures.
+
+Functional style: ``*_init(key, cfg) -> params dict`` and pure apply fns.
+Blocks are stacked along a leading layer axis and driven by ``lax.scan``
+(keeps HLO size O(1 layer); the roofline analyzer multiplies loop bodies
+by trip count).
+
+Attention is **chunked flash-style**: a Python loop over static query
+chunks; per chunk, an online-softmax ``fori_loop`` over exactly the key
+chunks a causal/local mask allows — so causal attention costs half the
+FLOPs of the naive form and peak memory is ``q_chunk × k_chunk`` scores,
+which is what makes ``prefill_32k`` fit HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: LMConfig, d: Optional[int] = None) -> Dict:
+    d = d or cfg.d_model
+    if cfg.norm == "nonparam_ln":
+        return {}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def norm_apply(params: Dict, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * params["scale"]
+    elif cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * params["scale"]
+    elif cfg.norm == "nonparam_ln":     # OLMo: no learnable affine
+        mu = xf.mean(-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    else:
+        raise ValueError(cfg.norm)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """``x [B, S, H, Dh]``, ``positions [B, S]`` -> rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention
+# ---------------------------------------------------------------------------
+
+def _attn_block(q, k, v, pq0, pk0, *, causal, window, scale):
+    """One (q-chunk, k-chunk) raw score block + mask.
+
+    q [B, cq, H, Dh]; k/v [B, ck, Hkv, Dh]. Returns the UNMASKED scores and
+    the boolean mask separately so the caller can fold the mask into the
+    max-reduce and the exp fusion — masked scores are never materialized
+    (one s²-sized write instead of two; §Perf iter 1).
+    """
+    b, cq, hq, dh = q.shape
+    ck, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, cq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    pq = pq0 + jnp.arange(cq)
+    pk = pk0 + jnp.arange(ck)
+    mask = jnp.ones((cq, ck), bool)
+    if causal:
+        mask &= pk[None, :] <= pq[:, None]
+    if window is not None:
+        mask &= pk[None, :] > pq[:, None] - window
+    return s, mask[None, None, None]
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      q_chunk: int = 1024, k_chunk: int = 1024,
+                      q_pos0=0, p_dtype=None, folded: bool = False
+                      ) -> jax.Array:
+    """``q [B, Sq, Hq, Dh]``, ``k/v [B, Sk, Hkv, Dh]`` -> ``[B, Sq, Hq, Dh]``.
+
+    For self-attention ``q_pos0 = Sk - Sq`` aligns query positions with the
+    tail of the keys (used by cross-chunk prefill). ``q_pos0`` may be a
+    traced scalar (sequence-parallel shards pass ``axis_index * shard``);
+    the static causal block-range optimization then widens to the full key
+    range and masking does the cut — see ``seqpar_attention``.
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(dh)
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    nq = (sq + q_chunk - 1) // q_chunk
+    dyn_pos = isinstance(q_pos0, jax.Array)
+    # p_dtype: bf16 halves the dominant [cq, ck] p-write under seqpar
+    # (6.26s vs 6.77s f32) but regresses under GSPMD head-sharding, where
+    # the XLA:CPU convert materializes an extra s²-tensor (7.15s vs 5.60s)
+    # — callers pick per partition; default f32. The Pallas flash kernel
+    # (kernels/flash_attention.py) removes the s² HBM traffic entirely on
+    # TPU. §Perf iter 1/3.
+    p_dtype = p_dtype or jnp.float32
+    outs = []
+    for qi in range(nq):
+        q0 = qi * q_chunk
+        cq = min(q_chunk, sq - q0)
+        pq0 = q_pos0 + q0
+        qc = jax.lax.dynamic_slice_in_dim(q, q0, cq, axis=1)
+        # static key range for this q chunk (full range if pq0 is traced)
+        if dyn_pos:
+            lo, hi = 0, sk
+        else:
+            hi = min(sk, pq0 + cq) if causal else sk
+            lo = max(0, pq0 + 1 - window) if window is not None else 0
+            lo = (lo // k_chunk) * k_chunk
+            hi = min(sk, ((hi + k_chunk - 1) // k_chunk) * k_chunk)
+        nk = max(1, (hi - lo + k_chunk - 1) // k_chunk)
+
+        def body(carry, ki):
+            m, l, acc = carry
+            k0 = lo + ki * k_chunk
+            kc = jax.lax.dynamic_slice_in_dim(k, k0, k_chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k0, k_chunk, axis=1)
+            s, mask = _attn_block(qc, kc, vc, pq0, k0, causal=causal,
+                                  window=window, scale=scale)
+            if folded:
+                # mask folded into the reduce and the exp — masked scores
+                # are never written to HBM; p in ``p_dtype`` (bf16 under
+                # seqpar). -1e30 (not -inf) keeps m finite when a whole
+                # block is masked (windowed attention): corr =
+                # exp(-inf - -inf) would be NaN. The min-clamp stops the
+                # exp's VJP from seeing inf on masked entries (raw s can
+                # exceed m_new there). §Perf iter 1/3.
+                m_new = jnp.maximum(m, jnp.where(mask, s, -1e30).max(-1))
+                corr = jnp.exp(m - m_new)
+                p = jnp.where(
+                    mask,
+                    jnp.exp(jnp.minimum(s - m_new[..., None], 0.0)), 0.0)
+            else:
+                # legacy block: materialize masked scores. Measured BEST
+                # under GSPMD head-sharding on the dry-run lowering (the
+                # folded form fused worse there: phi3 prefill 4.07→5.43 s)
+                # — structure is chosen per partition, by measurement.
+                sm = jnp.where(mask, s, -1e30)
+                m_new = jnp.maximum(m, sm.max(-1))
+                corr = jnp.exp(m - m_new)
+                p = jnp.exp(sm - m_new[..., None])
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(p_dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), ()
+
+        m0 = jnp.full((b, hkv, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dh), jnp.float32)
+        # scan (not fori) + checkpoint: reverse-mode otherwise stacks every
+        # k-iteration's [cq, ck] p-block ([nk, B, H, cq, ck] f32 saves —
+        # 6 GiB×4 per layer on command-r); with remat only the (m, l, acc)
+        # carry chain survives and p is recomputed in bwd. §Perf iter 8.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                      jnp.arange(nk))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, cq, hq, dh)
+        outs.append(o.astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def seqpar_attention(q, k, v, mesh, *, causal: bool = True,
+                     q_chunk: int = 1024, k_chunk: int = 1024) -> jax.Array:
+    """Sequence-parallel attention: q seq-sharded over ``model``, k/v
+    gathered (GSPMD inserts the ring all-gather).
+
+    This is the §Perf iter-2 fix for GQA archs whose kv-head count does
+    not divide the model axis: head-sharding then forces GSPMD to split
+    the head_dim *contraction*, which materializes an all-reduce of every
+    [cq, ck] score block (456 GiB/device for minitron prefill_32k).
+    Sharding the query sequence instead keeps every score block local —
+    the only collective is the k/v all-gather (128 MiB/layer).
+
+    Trade-off: the causal block-range optimization needs static bounds, so
+    each shard scans the full key range under the mask — attention FLOPs
+    ×2 vs the optimal causal half. Collective term drops ~50×; memory per
+    device is unchanged (seq 16-way ≈ head 8-way × causal half).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    msize = int(mesh.shape["model"])
+    b, sq, hq, dh = q.shape
+    if msize == 1 or sq % msize != 0:
+        return chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                                 k_chunk=k_chunk)
+    shard = sq // msize
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    def local(qs, kf, vf):
+        pq0 = jax.lax.axis_index("model") * shard
+        return chunked_attention(qs, kf, vf, causal=causal,
+                                 q_chunk=min(q_chunk, shard),
+                                 k_chunk=k_chunk, q_pos0=pq0,
+                                 p_dtype=vf.dtype, folded=True)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, "model", None, None), P(dp, None, None, None),
+                  P(dp, None, None, None)),
+        out_specs=P(dp, "model", None, None), check_vma=False)
+    return fn(q, k, v)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-token attention: ``q [B, 1, Hq, Dh]`` vs full cache.
+
+    ``pos [B]`` = current position (cache entries > pos are masked; with
+    ``window`` the cache is a rolling buffer and positions wrap).
+    """
+    b, _, hq, dh = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, hkv, g, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    idx = jnp.arange(smax)[None]                       # [1, smax]
+    valid = idx <= pos[:, None]
+    if window is not None:
+        valid &= idx > pos[:, None] - window
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (pre-norm, GQA, RoPE)
+# ---------------------------------------------------------------------------
+
+def attn_init(key: jax.Array, cfg: LMConfig) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(hq * hd)
+    return {
+        "wq": jax.random.normal(k1, (d, hq * hd), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, hkv * hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, hkv * hd), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (hq * hd, d), jnp.float32) * so,
+        "norm": norm_init(cfg),
+    }
+
+
+def attn_apply(params: Dict, x: jax.Array, cfg: LMConfig, *,
+               positions: jax.Array,
+               causal: bool = True, window: Optional[int] = None,
+               cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+               cache_pos: Optional[jax.Array] = None,
+               kv_from: Optional[jax.Array] = None,
+               q_chunk: int = 1024, k_chunk: int = 1024,
+               seq_par_mesh=None,
+               ) -> Tuple[jax.Array, Optional[Tuple]]:
+    """Pre-norm attention with residual.
+
+    * train/prefill: ``cache=None`` -> full-sequence chunked attention.
+    * decode: ``cache=(k_cache, v_cache)``, ``x [B, 1, D]``; the new KV is
+      written at ``cache_pos`` (rolling for local windows) and attention
+      runs against the cache.
+    * cross-attention: ``kv_from [B, Senc, D]`` supplies K/V (encoder out);
+      no cache mutation, no causal mask.
+    """
+    b = x.shape[0]
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    cd = x.dtype
+    h = norm_apply(params["norm"], x, cfg)
+    kv_src = norm_apply(params["norm"], kv_from, cfg) \
+        if kv_from is not None else h
+    q = (h @ params["wq"].astype(cd)).reshape(b, -1, hq, hd)
+    k = (kv_src @ params["wk"].astype(cd)).reshape(b, -1, hkv, hd)
+    v = (kv_src @ params["wv"].astype(cd)).reshape(b, -1, hkv, hd)
+    if kv_from is None:
+        q = rope(q, positions, cfg.rope_theta)
+        kpos = positions if cache is None else positions  # same timeline
+        k = rope(k, kpos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_from is None:
+        k_cache, v_cache = cache
+        smax = k_cache.shape[1]
+        slot = cache_pos % smax if window is not None else cache_pos
+        bidx = jnp.arange(b)
+        k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+        v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+        new_cache = (k_cache, v_cache)
+        if window is not None:
+            # rolling cache: mask by true positions stored alongside
+            o = _rolling_decode(q, k_cache, v_cache, cache_pos, smax)
+        else:
+            o = decode_attention(q, k_cache, v_cache, cache_pos,
+                                 window=None)
+    elif cache is not None:   # cross-attn during decode: static kv cache
+        k_cache, v_cache = cache
+        o = decode_attention(q, k_cache, v_cache,
+                             jnp.full((b,), k_cache.shape[1] - 1),
+                             window=None)
+        new_cache = cache
+    elif seq_par_mesh is not None and window is None and causal:
+        o = seqpar_attention(q, k, v, seq_par_mesh, causal=True,
+                             q_chunk=q_chunk, k_chunk=k_chunk)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=q_chunk, k_chunk=k_chunk)
+    out = o.reshape(b, -1, hq * hd) @ params["wo"].astype(cd)
+    return x + out, new_cache
+
+
+def _rolling_decode(q, k_cache, v_cache, pos, smax):
+    """Decode vs a rolling (windowed) cache: every entry is valid once the
+    window has filled; before that, entries beyond ``pos`` are masked."""
+    b = q.shape[0]
+    idx = jnp.arange(smax)[None]
+    # entry i holds position: i if i <= pos%smax else pos - (pos%smax) - smax + i
+    cur = pos[:, None] % smax
+    entry_pos = jnp.where(idx <= cur, pos[:, None] - cur + idx,
+                          pos[:, None] - cur + idx - smax)
+    valid = entry_pos >= 0
+    hkv, dh = k_cache.shape[2], k_cache.shape[3]
+    hq = q.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / np.sqrt(dh)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(key: jax.Array, cfg: LMConfig, d_ff: Optional[int] = None
+             ) -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s, so = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {
+        "w1": jax.random.normal(k1, (d, f), jnp.float32) * s,
+        "w2": jax.random.normal(k2, (f, d), jnp.float32) * so,
+        "norm": norm_init(cfg),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(k3, (d, f), jnp.float32) * s
+    return p
+
+
+def ffn_apply(params: Dict, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    cd = x.dtype
+    h = norm_apply(params["norm"], x, cfg)
+    u = h @ params["w1"].astype(cd)
+    if cfg.activation == "swiglu":
+        u = jax.nn.silu(u) * (h @ params["w3"].astype(cd))
+    elif cfg.activation == "geglu":
+        u = jax.nn.gelu(u) * (h @ params["w3"].astype(cd))
+    elif cfg.activation == "gelu":
+        u = jax.nn.gelu(u)
+    elif cfg.activation == "relu":
+        u = jax.nn.relu(u)
+    elif cfg.activation == "relu_sq":
+        u = jnp.square(jax.nn.relu(u))
+    else:
+        raise ValueError(cfg.activation)
+    return x + u @ params["w2"].astype(cd)

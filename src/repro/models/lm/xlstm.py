@@ -1,0 +1,183 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential), with exponential gating
+and max-stabilizer state.
+
+Both are linear-time in sequence length with O(1) decode state — this is
+what makes ``long_500k`` runnable for this architecture. Training uses
+``lax.scan`` over time (HLO stays one-step-sized; the roofline analyzer
+scales by trip count).
+
+State layout (per layer):
+  mLSTM: C [B, H, Dh, Dh], n [B, H, Dh], m [B, H]
+  sLSTM: c [B, H, Dh], n [B, H, Dh], h [B, H, Dh], m [B, H]
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.lm.transformer import norm_apply, norm_init
+
+
+def _heads(cfg: LMConfig) -> Tuple[int, int]:
+    h = cfg.num_heads
+    return h, cfg.d_model // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key: jax.Array, cfg: LMConfig) -> Dict:
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "wq": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "wi": jax.random.normal(ks[3], (d, h), jnp.float32) * s,
+        "wf": jax.random.normal(ks[4], (d, h), jnp.float32) * s,
+        "bf": jnp.full((h,), 3.0, jnp.float32),   # open forget gate at init
+        "bi": jnp.zeros((h,), jnp.float32),
+        "wo": jax.random.normal(ks[5], (d, d), jnp.float32) * s,
+        "wog": jax.random.normal(ks[6], (d, d), jnp.float32) * s,
+        "norm": norm_init(cfg),
+        "gn": jnp.ones((d,), jnp.float32),        # post-recurrence groupnorm
+    }
+
+
+def mlstm_zero_state(cfg: LMConfig, b: int):
+    h, dh = _heads(cfg)
+    return {
+        "C": jnp.zeros((b, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((b, h, dh), jnp.float32),
+        "m": jnp.zeros((b, h), jnp.float32),
+    }
+
+
+def _mlstm_step(state, qkvif):
+    q, k, v, i_p, f_p = qkvif      # q/k/v [B, H, Dh]; gates [B, H]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(f_p + m, i_p)
+    f_ = jnp.exp(f_p + m - m_new)
+    i_ = jnp.exp(i_p - m_new)
+    C = f_[..., None, None] * C + i_[..., None, None] \
+        * (v[..., :, None] * k[..., None, :])          # [B,H,Dh,Dh]
+    n = f_[..., None] * n + i_[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h_out = num / den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h_out
+
+
+def mlstm_apply(params: Dict, x: jax.Array, cfg: LMConfig, *,
+                state=None) -> Tuple[jax.Array, Dict]:
+    """``x [B, S, D]`` -> ``([B, S, D], state)``. ``state`` enables decode."""
+    b, s, d = x.shape
+    h, dh = _heads(cfg)
+    cd = x.dtype
+    xin = norm_apply(params["norm"], x, cfg)
+    q = (xin @ params["wq"].astype(cd)).reshape(b, s, h, dh) / np.sqrt(dh)
+    k = (xin @ params["wk"].astype(cd)).reshape(b, s, h, dh)
+    v = (xin @ params["wv"].astype(cd)).reshape(b, s, h, dh)
+    i_p = (xin @ params["wi"].astype(cd) + params["bi"]).astype(jnp.float32)
+    f_p = jax.nn.log_sigmoid(
+        (xin @ params["wf"].astype(cd) + params["bf"]).astype(jnp.float32))
+    if state is None:
+        state = mlstm_zero_state(cfg, b)
+
+    def step(st, inp):
+        st, h_out = _mlstm_step(st, inp)
+        return st, h_out
+
+    seq = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+           k.transpose(1, 0, 2, 3).astype(jnp.float32),
+           v.transpose(1, 0, 2, 3).astype(jnp.float32),
+           i_p.transpose(1, 0, 2), f_p.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, seq)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, d)     # [B, S, D]
+    hs = hs * params["gn"]                              # headwise norm scale
+    og = jax.nn.sigmoid(xin @ params["wog"].astype(cd))
+    out = (hs.astype(cd) * og) @ params["wo"].astype(cd)
+    return x + out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key: jax.Array, cfg: LMConfig) -> Dict:
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    ks = jax.random.split(key, 9)
+    s = 1.0 / np.sqrt(d)
+    sr = 1.0 / np.sqrt(dh)
+    return {
+        "wz": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "wi": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "wf": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        # block-diagonal recurrent weights (per head)
+        "rz": jax.random.normal(ks[4], (h, dh, dh), jnp.float32) * sr,
+        "ri": jax.random.normal(ks[5], (h, dh, dh), jnp.float32) * sr,
+        "rf": jax.random.normal(ks[6], (h, dh, dh), jnp.float32) * sr,
+        "ro": jax.random.normal(ks[7], (h, dh, dh), jnp.float32) * sr,
+        "bf": jnp.full((d,), 3.0, jnp.float32),
+        "bi": jnp.zeros((d,), jnp.float32),
+        "down": jax.random.normal(ks[8], (d, d), jnp.float32) * s,
+        "norm": norm_init(cfg),
+    }
+
+
+def slstm_zero_state(cfg: LMConfig, b: int):
+    h, dh = _heads(cfg)
+    z = jnp.zeros((b, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.zeros((b, h), jnp.float32)}
+
+
+def slstm_apply(params: Dict, x: jax.Array, cfg: LMConfig, *,
+                state=None) -> Tuple[jax.Array, Dict]:
+    b, s, d = x.shape
+    h, dh = _heads(cfg)
+    cd = x.dtype
+    xin = norm_apply(params["norm"], x, cfg)
+    zx = (xin @ params["wz"].astype(cd)).reshape(b, s, h, dh)
+    ix = (xin @ params["wi"].astype(cd) + params["bi"]).reshape(b, s, h, dh)
+    fx = (xin @ params["wf"].astype(cd) + params["bf"]).reshape(b, s, h, dh)
+    ox = (xin @ params["wo"].astype(cd)).reshape(b, s, h, dh)
+    if state is None:
+        state = slstm_zero_state(cfg, b)
+
+    rz, ri, rf, ro = (params[k].astype(jnp.float32)
+                      for k in ("rz", "ri", "rf", "ro"))
+
+    def step(st, inp):
+        zt, it, ft, ot = (t.astype(jnp.float32) for t in inp)
+        hp = st["h"]
+        rec = lambda r: jnp.einsum("bhj,hjk->bhk", hp, r)
+        z = jnp.tanh(zt + rec(rz))
+        i_p = it + rec(ri)
+        f_p = jax.nn.log_sigmoid(ft + rec(rf))
+        o = jax.nn.sigmoid(ot + rec(ro))
+        # per-head max stabilizer over gate pre-activations
+        i_m = i_p.max(-1)
+        m_new = jnp.maximum(f_p.max(-1) + st["m"], i_m)
+        f_ = jnp.exp(f_p + (st["m"] - m_new)[..., None])
+        i_ = jnp.exp(i_p - m_new[..., None])
+        c = f_ * st["c"] + i_ * z
+        n = f_ * st["n"] + i_
+        h_out = o * c / jnp.maximum(n, 1.0)
+        return ({"c": c, "n": n, "h": h_out, "m": m_new}, h_out)
+
+    seq = (zx.transpose(1, 0, 2, 3), ix.transpose(1, 0, 2, 3),
+           fx.transpose(1, 0, 2, 3), ox.transpose(1, 0, 2, 3))
+    state, hs = jax.lax.scan(step, state, seq)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    out = hs.astype(cd) @ params["down"].astype(cd)
+    return x + out, state

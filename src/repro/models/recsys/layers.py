@@ -1,0 +1,97 @@
+"""Shared dense layers for the recsys model zoo (functional, no framework)."""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return {"bf16": jnp.bfloat16, "f32": jnp.float32}[name]
+
+
+def mlp_init(key: jax.Array, in_dim: int, sizes: Sequence[int]) -> Dict:
+    params = {}
+    dims = [in_dim] + list(sizes)
+    keys = jax.random.split(key, len(sizes))
+    for i, k in enumerate(keys):
+        fan_in, fan_out = dims[i], dims[i + 1]
+        w = jax.random.normal(k, (fan_in, fan_out), jnp.float32)
+        w = w * np.sqrt(2.0 / fan_in)
+        params[f"w{i}"] = w
+        params[f"b{i}"] = jnp.zeros((fan_out,), jnp.float32)
+    return params
+
+
+def mlp_apply(params: Dict, x: jax.Array, *, final_activation: bool = False,
+              compute_dtype=jnp.bfloat16) -> jax.Array:
+    n = len(params) // 2
+    h = x.astype(compute_dtype)
+    for i in range(n):
+        w = params[f"w{i}"].astype(compute_dtype)
+        h = jax.lax.dot(h, w, preferred_element_type=jnp.float32)
+        h = h + params[f"b{i}"]
+        if i < n - 1 or final_activation:
+            h = jax.nn.relu(h)
+        h = h.astype(compute_dtype)
+    return h.astype(jnp.float32)
+
+
+def cross_init(key: jax.Array, dim: int, n_layers: int) -> Dict:
+    params = {}
+    keys = jax.random.split(key, n_layers)
+    for i, k in enumerate(keys):
+        params[f"w{i}"] = jax.random.normal(k, (dim,), jnp.float32) \
+            / np.sqrt(dim)
+        params[f"b{i}"] = jnp.zeros((dim,), jnp.float32)
+    return params
+
+
+def cross_apply(params: Dict, x0: jax.Array,
+                compute_dtype=jnp.bfloat16) -> jax.Array:
+    """DCN cross network: x_{l+1} = x0 * (x_l . w_l) + b_l + x_l."""
+    n = len(params) // 2
+    x0c = x0.astype(compute_dtype)
+    x = x0c
+    for i in range(n):
+        w = params[f"w{i}"].astype(compute_dtype)
+        xw = jnp.einsum("bd,d->b", x, w,
+                        preferred_element_type=jnp.float32)
+        x = (x0c * xw[:, None].astype(compute_dtype)
+             + params[f"b{i}"].astype(compute_dtype) + x)
+    return x.astype(jnp.float32)
+
+
+def fm_second_order(emb: jax.Array) -> jax.Array:
+    """FM pairwise term: ``emb [B, T, D]`` -> ``[B, D]``.
+
+    0.5 * ((sum_t v_t)^2 - sum_t v_t^2) — equivalent to summing all pairwise
+    hadamard products.
+    """
+    e = emb.astype(jnp.float32)
+    s = e.sum(axis=1)
+    sq = (e * e).sum(axis=1)
+    return 0.5 * (s * s - sq)
+
+
+def bce_with_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Numerically-stable mean binary cross entropy."""
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def auc(logits: np.ndarray, labels: np.ndarray) -> float:
+    """Rank-based AUC (host-side eval metric, the paper's model metric)."""
+    order = np.argsort(logits)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(order) + 1)
+    pos = labels > 0.5
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2)
+                 / (n_pos * n_neg))

@@ -1,0 +1,185 @@
+"""The paper's model zoo: DLRM, DCN, DeepFM, Wide&Deep.
+
+One functional ``RecsysModel`` facade owns:
+  * the sparse part — an :class:`EmbeddingCollection` (the paper's MP
+    embedding engine), plus a dim-1 "wide" collection for WDL/DeepFM
+    first-order terms, and
+  * the dense part — model-specific MLP/cross/interaction layers, which are
+    replicated (DP) exactly as the paper prescribes.
+
+``apply(params, batch)`` returns logits ``[B]``; ``loss_fn`` adds BCE.
+batch = {"dense": [B, Nd] f32, "cat": [B, T, H] int32 (-1 pad), "label": [B]}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RecsysConfig, EmbeddingTableConfig
+from repro.core.embedding import EmbeddingCollection, resolve_strategies
+from repro.launch.mesh import mesh_config_for
+from repro.models.recsys import layers
+from repro.kernels import ops as kops
+
+
+def _wide_tables(cfg: RecsysConfig):
+    return tuple(
+        dataclasses.replace(t, name=f"{t.name}_wide", dim=1,
+                            strategy="data_parallel")
+        for t in cfg.tables)
+
+
+class RecsysModel:
+
+    def __init__(self, cfg: RecsysConfig, mesh: Mesh, *,
+                 global_batch: int,
+                 comm: str = "allgather_rs",
+                 embed_shard_axes: str = "all",
+                 use_kernels: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        if cfg.model == "dlrm" and cfg.bottom_mlp[-1] != cfg.embedding_dim:
+            raise ValueError(
+                "DLRM needs bottom_mlp[-1] == embedding_dim for the "
+                f"interaction, got {cfg.bottom_mlp[-1]} != "
+                f"{cfg.embedding_dim}")
+        tables = resolve_strategies(cfg.tables, mesh_config_for(mesh),
+                                    global_batch)
+        cd = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+        pool = kops.kernel_pool if use_kernels else None
+        self.embedding = EmbeddingCollection(
+            tables, mesh, comm=comm, compute_dtype=cd,
+            shard_axes=embed_shard_axes, pool_fn=pool)
+        self.compute_dtype = cd
+        self.use_kernels = use_kernels
+        self.wide: Optional[EmbeddingCollection] = None
+        if cfg.model in ("wdl", "deepfm"):
+            self.wide = EmbeddingCollection(_wide_tables(cfg), mesh,
+                                            comm=comm, compute_dtype=cd)
+
+    # -- init ----------------------------------------------------------------
+
+    def init(self, key: jax.Array) -> Dict:
+        cfg = self.cfg
+        k_emb, k_wide, k1, k2, k3, k4 = jax.random.split(key, 6)
+        params: Dict = {"embedding": self.embedding.init(k_emb)}
+        if self.wide is not None:
+            params["wide_embedding"] = self.wide.init(k_wide)
+        d, t = cfg.embedding_dim, cfg.num_tables
+        nd = cfg.num_dense_features
+        if cfg.model == "dlrm":
+            params["bottom"] = layers.mlp_init(k1, nd, cfg.bottom_mlp)
+            f = t + 1
+            top_in = cfg.bottom_mlp[-1] + f * (f - 1) // 2
+            params["top"] = layers.mlp_init(k2, top_in, cfg.top_mlp)
+        elif cfg.model == "dcn":
+            in_dim = nd + t * d
+            params["cross"] = layers.cross_init(k1, in_dim,
+                                                cfg.num_cross_layers)
+            params["deep"] = layers.mlp_init(k2, in_dim, cfg.top_mlp)
+            params["combine"] = layers.mlp_init(
+                k3, in_dim + cfg.top_mlp[-1], (1,))
+        elif cfg.model == "deepfm":
+            in_dim = nd + t * d
+            params["deep"] = layers.mlp_init(k1, in_dim, cfg.top_mlp + (1,))
+            params["dense_w"] = jax.random.normal(k2, (nd,)) * 0.01
+            params["bias"] = jnp.zeros(())
+        elif cfg.model == "wdl":
+            in_dim = nd + t * d
+            params["deep"] = layers.mlp_init(k1, in_dim, cfg.top_mlp + (1,))
+            params["dense_w"] = jax.random.normal(k2, (nd,)) * 0.01
+            params["bias"] = jnp.zeros(())
+        else:
+            raise ValueError(cfg.model)
+        return params
+
+    # -- shardings -------------------------------------------------------------
+
+    def param_shardings(self) -> Dict:
+        """NamedShardings: embeddings per strategy, dense replicated (DP)."""
+        rep = NamedSharding(self.mesh, P())
+        shardings: Dict = {"embedding": self.embedding.param_shardings()}
+        if self.wide is not None:
+            shardings["wide_embedding"] = self.wide.param_shardings()
+        # structure only — eval_shape, NEVER a real init (tables can be
+        # tens of GB; allocating them here stalled the dry-run for 20 min)
+        dummy = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+        def fill(tree):
+            return jax.tree.map(lambda _: rep, tree)
+
+        for k, v in dummy.items():
+            if k in ("embedding", "wide_embedding"):
+                continue
+            shardings[k] = fill(v)
+        return shardings
+
+    # -- forward ---------------------------------------------------------------
+
+    def apply(self, params: Dict, batch: Dict, *,
+              manual: bool = False) -> jax.Array:
+        emb = self.embedding.lookup(params["embedding"], batch["cat"],
+                                    manual=manual)
+        wide = None
+        if self.wide is not None:
+            wide = self.wide.lookup(params["wide_embedding"], batch["cat"],
+                                    manual=manual)       # [B, T, 1]
+        return self.apply_dense(params, batch["dense"], emb, wide)
+
+    def apply_dense(self, params: Dict, dense: jax.Array, emb: jax.Array,
+                    wide: Optional[jax.Array] = None) -> jax.Array:
+        """Dense-only forward from precomputed pooled embeddings.
+
+        This is the inference entry point: the HPS resolves ``emb`` (and
+        ``wide``) on the host, the replicated dense net runs on device.
+        """
+        cfg = self.cfg
+        cd = self.compute_dtype
+        emb = emb.astype(cd)                       # [B, T, D]
+        dense = dense.astype(jnp.float32)
+        b = dense.shape[0]
+        if cfg.model == "dlrm":
+            bot = layers.mlp_apply(params["bottom"], dense,
+                                   final_activation=True, compute_dtype=cd)
+            feats = jnp.concatenate([bot[:, None, :], emb], axis=1)
+            if self.use_kernels:
+                tri = kops.dot_interaction(feats)
+            else:
+                from repro.kernels.ref import dot_interaction_ref
+                tri = dot_interaction_ref(feats)
+            top_in = jnp.concatenate([bot.astype(jnp.float32), tri], axis=1)
+            logit = layers.mlp_apply(params["top"], top_in, compute_dtype=cd)
+            return logit[:, 0]
+        flat = jnp.concatenate(
+            [dense, emb.reshape(b, -1).astype(jnp.float32)], axis=1)
+        if cfg.model == "dcn":
+            crossed = layers.cross_apply(params["cross"], flat,
+                                         compute_dtype=cd)
+            deep = layers.mlp_apply(params["deep"], flat, compute_dtype=cd)
+            both = jnp.concatenate([crossed, deep], axis=1)
+            return layers.mlp_apply(params["combine"], both,
+                                    compute_dtype=cd)[:, 0]
+        if cfg.model == "deepfm":
+            first = wide.sum(axis=(1, 2)) \
+                + dense @ params["dense_w"] + params["bias"]
+            second = layers.fm_second_order(emb).sum(axis=1)
+            deep = layers.mlp_apply(params["deep"], flat,
+                                    compute_dtype=cd)[:, 0]
+            return first + second + deep
+        if cfg.model == "wdl":
+            wide_logit = wide.sum(axis=(1, 2)) \
+                + dense @ params["dense_w"] + params["bias"]
+            deep = layers.mlp_apply(params["deep"], flat,
+                                    compute_dtype=cd)[:, 0]
+            return wide_logit + deep
+        raise ValueError(cfg.model)
+
+    def loss_fn(self, params: Dict, batch: Dict, *,
+                manual: bool = False) -> jax.Array:
+        logits = self.apply(params, batch, manual=manual)
+        return layers.bce_with_logits(logits, batch["label"])

@@ -1,0 +1,95 @@
+"""Dense optimizers (SGD / Adam / AdamW) — minimal, pytree-based, pjit-safe.
+
+API: ``opt = make(name, TrainConfig)``; ``state = opt.init(params)``;
+``params, state = opt.update(grads, state, params, lr_scale)``.
+All math is elementwise/rowwise so parameter shardings are preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def make(name: str, cfg: TrainConfig) -> Optimizer:
+    if name == "sgd":
+        return _sgd(cfg)
+    if name == "adam":
+        return _adam(cfg, weight_decay=0.0)
+    if name == "adamw":
+        return _adam(cfg, weight_decay=cfg.weight_decay)
+    raise ValueError(name)
+
+
+def _sgd(cfg: TrainConfig) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        lr = cfg.learning_rate * lr_scale
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def _adam(cfg: TrainConfig, weight_decay: float) -> Optimizer:
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, lr_scale=1.0):
+        step = state["step"] + 1
+        lr = cfg.learning_rate * lr_scale
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            upd_ = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            if weight_decay:
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (p - lr * upd_).astype(p.dtype), mu, nu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n)
+               for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        new_nu = tdef.unflatten([o[2] for o in out])
+        return new_p, {"step": step, "mu": new_mu, "nu": new_nu}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

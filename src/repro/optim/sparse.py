@@ -1,0 +1,57 @@
+"""Sparse (embedding) optimizers — row-wise AdaGrad, HugeCTR's default.
+
+State is one accumulator scalar per *row* (V floats for a [V, D] table),
+so optimizer memory for TB-scale tables stays ~D× smaller than Adam.
+All ops are row-wise: a table sharded over mesh axes keeps its sharding.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.optimizers import Optimizer
+
+
+def rowwise_adagrad(cfg: TrainConfig, initial_accumulator: float = 0.0
+                    ) -> Optimizer:
+    eps = 1e-10
+
+    def init(params):
+        def acc(p):
+            if p.ndim == 2:
+                return jnp.full((p.shape[0],), initial_accumulator,
+                                jnp.float32)
+            return jnp.zeros(p.shape[:1], jnp.float32)
+        return {"acc": jax.tree.map(acc, params)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        lr = cfg.learning_rate * lr_scale
+
+        def upd(p, g, a):
+            g = g.astype(jnp.float32)
+            a = a + jnp.mean(g * g, axis=tuple(range(1, g.ndim)))
+            scale = lr / (jnp.sqrt(a) + eps)
+            new_p = p.astype(jnp.float32) - scale[:, None] * g \
+                if g.ndim == 2 else p - scale * g
+            return new_p.astype(p.dtype), a
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_a = tdef.flatten_up_to(state["acc"])
+        out = [upd(p, g, a) for p, g, a in zip(flat_p, flat_g, flat_a)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"acc": tdef.unflatten([o[1] for o in out])})
+
+    return Optimizer(init, update)
+
+
+def make_sparse(name: str, cfg: TrainConfig) -> Optimizer:
+    if name == "rowwise_adagrad":
+        return rowwise_adagrad(cfg)
+    if name == "sgd":
+        from repro.optim.optimizers import make
+        return make("sgd", cfg)
+    raise ValueError(name)

@@ -1,0 +1,137 @@
+"""Triton-style batched inference server backed by the HPS.
+
+Request flow (paper Figure 2, red path): requests queue up, a batcher
+drains up to ``max_batch`` of them, the HPS resolves embeddings (L1 device
+cache -> L2 VDB -> L3 PDB), and the jitted dense net computes predictions.
+``deploy_from_training`` exports a trained model into the PDB — the
+offline-training deployment path; online updates arrive via the bus.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EmbeddingTableConfig, RecsysConfig
+from repro.core.hps.hps import HPS
+from repro.core.hps.message_bus import MessageBus
+from repro.core.hps.persistent_db import PersistentDB
+from repro.core.hps.volatile_db import VolatileDB
+
+
+def deploy_from_training(model, params: Dict, pdb: PersistentDB,
+                         model_name: str) -> None:
+    """Export trained embedding tables into the PDB (ground truth copy)."""
+    logical = model.embedding.export_logical(params["embedding"])
+    mega = {}
+    for gname, group in model.embedding.groups.items():
+        if gname == "cold":
+            continue
+        arrs = logical[gname] if gname != "hot" else None
+        for i, (t, off) in enumerate(zip(group.tables, group.offsets)):
+            end = group.offsets[i + 1] if i + 1 < group.num_tables \
+                else group.total_rows
+            if gname == "hot":
+                hot = np.asarray(logical["hot"][off:end])
+                cg = model.embedding.groups["cold"]
+                coff = cg.offsets[i]
+                cend = cg.offsets[i + 1] if i + 1 < cg.num_tables \
+                    else cg.total_rows
+                cold = np.asarray(logical["cold"][coff:cend])
+                full = np.concatenate([hot, cold], axis=0)
+            else:
+                full = np.asarray(arrs[off:end])
+            pdb.create_table(model_name, t.name, t.vocab_size, t.dim,
+                             initial=full)
+
+
+class InferenceServer:
+
+    def __init__(self, model, dense_params: Dict, hps: HPS, *,
+                 max_batch: int = 1024, needs_wide: bool = False,
+                 wide_hps: Optional[HPS] = None):
+        self.model = model
+        self.hps = hps
+        self.wide_hps = wide_hps
+        self.dense_params = dense_params
+        self.max_batch = max_batch
+        self._predict = jax.jit(
+            lambda p, d, e, w: model.apply_dense(p, d, e, w))
+        self._predict_nowide = jax.jit(
+            lambda p, d, e: model.apply_dense(p, d, e, None))
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        self.latencies_ms: List[float] = []
+
+    # -- synchronous path ---------------------------------------------------------
+
+    def predict(self, dense: np.ndarray, cat: np.ndarray) -> np.ndarray:
+        t0 = time.perf_counter()
+        emb = self.hps.lookup(cat)
+        if self.wide_hps is not None:
+            wide = self.wide_hps.lookup(cat)
+            out = self._predict(self.dense_params, jnp.asarray(dense),
+                                emb, wide)
+        else:
+            out = self._predict_nowide(self.dense_params,
+                                       jnp.asarray(dense), emb)
+        out = np.asarray(jax.nn.sigmoid(out))
+        self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return out
+
+    # -- queued/batched path --------------------------------------------------------
+
+    def submit(self, dense: np.ndarray, cat: np.ndarray) -> "queue.Queue":
+        done: queue.Queue = queue.Queue(maxsize=1)
+        self._q.put((dense, cat, done))
+        return done
+
+    def _serve_loop(self):
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            reqs = [first]
+            rows = first[0].shape[0]
+            while rows < self.max_batch:
+                try:
+                    nxt = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                reqs.append(nxt)
+                rows += nxt[0].shape[0]
+            dense = np.concatenate([r[0] for r in reqs])
+            cat = np.concatenate([r[1] for r in reqs])
+            preds = self.predict(dense, cat)
+            off = 0
+            for r in reqs:
+                n = r[0].shape[0]
+                r[2].put(preds[off:off + n])
+                off += n
+
+    def start(self):
+        self._worker = threading.Thread(target=self._serve_loop, daemon=True)
+        self._worker.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._worker:
+            self._worker.join()
+            self._worker = None
+        self._stop.clear()
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        if not self.latencies_ms:
+            return {}
+        arr = np.asarray(self.latencies_ms)
+        return {"p50": float(np.percentile(arr, 50)),
+                "p95": float(np.percentile(arr, 95)),
+                "p99": float(np.percentile(arr, 99)),
+                "mean": float(arr.mean())}

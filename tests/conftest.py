@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real (single) CPU device. Multi-device behaviour is exercised by the
+subprocess tests in test_distributed.py."""
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_test_mesh
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    return make_test_mesh((1, 1))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

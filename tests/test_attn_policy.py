@@ -1,0 +1,110 @@
+"""The measured attention-partition policy (EXPERIMENTS.md §Perf iter 11)
+and the seqpar/chunked equivalence property."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import LM_ARCHS, reduce_for_smoke
+from repro.launch.mesh import make_test_mesh
+from repro.models.lm import transformer as tf
+from repro.models.lm.backbone import LMModel
+
+
+def _partition_for(arch, model_size, remat="none"):
+    """Evaluate the auto rule without building a big mesh."""
+    import math
+    cfg = LM_ARCHS[arch]
+    a = math.gcd(cfg.num_kv_heads, model_size)
+    b = model_size // a
+    group = cfg.num_heads // cfg.num_kv_heads
+    dirty = group % b != 0
+    # fsdp proxy as in LMModel
+    fsdp = cfg.dense_param_count * 12 / max(model_size, 1) > 10e9
+    training = remat != "none"
+    return "seq" if (dirty or (fsdp and training)) else "heads"
+
+
+@pytest.mark.parametrize("arch,expect", [
+    ("minitron-4b", "seq"),            # g=3 dirty
+    ("granite-moe-3b-a800m", "seq"),   # g=3 dirty
+    ("granite-moe-1b-a400m", "heads"),  # g=2 clean
+    ("pixtral-12b", "heads"),          # g=4 clean
+    ("phi3-mini-3.8b", "heads"),       # kv=32 divides
+    ("olmo-1b", "heads"),              # kv=16 divides
+])
+def test_partition_rule_matches_measurements(arch, expect):
+    assert _partition_for(arch, 16) == expect
+
+
+def test_fsdp_arch_seq_only_when_training():
+    assert _partition_for("command-r-plus-104b", 16, remat="full") == "seq"
+    assert _partition_for("command-r-plus-104b", 16, remat="none") == "heads"
+
+
+def test_backbone_rule_single_device_is_heads():
+    """model_size == 1 -> never seqpar, regardless of arch."""
+    mesh = make_test_mesh((1, 1))
+    for arch in ("olmo-1b", "minitron-4b", "command-r-plus-104b"):
+        cfg = reduce_for_smoke(LM_ARCHS[arch])
+        model = LMModel(cfg, mesh, embed_mode="replicated", remat="full")
+        assert model.attn_partition == "heads", arch
+
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 16, 32]),
+       st.sampled_from([(4, 2), (4, 4), (6, 2)]))
+def test_chunked_attention_chunk_invariance(seed, chunk, heads):
+    """Output must not depend on chunk sizes (property)."""
+    hq, hkv = heads
+    b, s, d = 2, 64, 16
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    o1 = tf.chunked_attention(q, k, v, causal=True, q_chunk=chunk,
+                              k_chunk=chunk)
+    o2 = tf.chunked_attention(q, k, v, causal=True, q_chunk=64, k_chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_folded_and_legacy_blocks_agree(seed):
+    """The two measured softmax block styles are numerically equivalent."""
+    b, s, hq, hkv, d = 2, 32, 4, 2, 16
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    legacy = tf.chunked_attention(q, k, v, causal=True, q_chunk=8,
+                                  k_chunk=8, folded=False)
+    folded = tf.chunked_attention(q, k, v, causal=True, q_chunk=8,
+                                  k_chunk=8, folded=True)
+    np.testing.assert_allclose(np.asarray(legacy), np.asarray(folded),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_folded_windowed_grads_finite():
+    """Regression: inf in the exp VJP on fully-masked windowed blocks."""
+    b, s, hq, hkv, d = 1, 64, 2, 1, 8
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+
+    def loss(q, k, v):
+        o = tf.chunked_attention(q, k, v, causal=True, window=24,
+                                 q_chunk=16, k_chunk=16, folded=True)
+        return (o ** 2).sum()
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for g in grads:
+        assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,180 @@
+"""Multi-device correctness via subprocesses (8 virtual CPU devices).
+
+Each subprocess sets XLA_FLAGS before importing jax — the main pytest
+process keeps the single real device (required for the smoke tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(body: str, n_devices: int = 8, timeout: int = 600):
+    code = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        + body
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+COMMON = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import (DATA_PARALLEL, DISTRIBUTED, HYBRID,
+                                LOCALIZED, EmbeddingTableConfig)
+from repro.core.embedding import EmbeddingCollection
+from repro.launch.mesh import make_test_mesh
+
+def tables(strategy, n=4, vocab=64, dim=8, hotness=3):
+    return [EmbeddingTableConfig(f"t{i}", vocab + 8 * i, dim,
+                                 hotness=hotness, strategy=strategy,
+                                 hot_fraction=0.25) for i in range(n)]
+
+def make_ids(key, tabs, b=16):
+    h = max(t.hotness for t in tabs)
+    cols = []
+    for t in tabs:
+        cols.append(jax.random.randint(key, (b, 1, h), -1, t.vocab_size))
+        key = jax.random.fold_in(key, 1)
+    return jnp.concatenate(cols, axis=1)
+"""
+
+
+@pytest.mark.parametrize("strategy,comm,mesh_shape", [
+    ("DISTRIBUTED", "allgather_rs", "(4, 2)"),
+    ("DISTRIBUTED", "all_to_all", "(4, 2)"),
+    ("LOCALIZED", "allgather_rs", "(8, 1)"),
+    ("HYBRID", "allgather_rs", "(4, 2)"),
+    ("HYBRID", "all_to_all", "(2, 4)"),
+    ("DATA_PARALLEL", "allgather_rs", "(4, 2)"),
+])
+def test_strategy_multidevice(strategy, comm, mesh_shape):
+    body = COMMON + f"""
+mesh = make_test_mesh({mesh_shape})
+tabs = tables({strategy}, n=8)
+with mesh:
+    coll = EmbeddingCollection(tabs, mesh, comm="{comm}",
+                               capacity_factor=4.0)
+    params = coll.init(jax.random.PRNGKey(0))
+    ids = make_ids(jax.random.PRNGKey(1), tabs, b=16)
+    got = jax.jit(coll.lookup)(params, ids)
+    want = coll.lookup_reference(params, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+print("OK")
+"""
+    assert "OK" in run_with_devices(body)
+
+
+def test_distributed_grads_multidevice():
+    body = COMMON + """
+mesh = make_test_mesh((4, 2))
+tabs = tables(DISTRIBUTED, n=2)
+with mesh:
+    coll = EmbeddingCollection(tabs, mesh, comm="allgather_rs")
+    params = coll.init(jax.random.PRNGKey(0))
+    ids = make_ids(jax.random.PRNGKey(1), tabs, b=16)
+    loss = lambda fn: (lambda p: (fn(p, ids).astype(jnp.float32)**2).sum())
+    g1 = jax.jit(jax.grad(loss(coll.lookup)))(params)
+    g2 = jax.grad(loss(coll.lookup_reference))(params)
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   rtol=1e-4, atol=1e-4)
+print("OK")
+"""
+    assert "OK" in run_with_devices(body)
+
+
+def test_hybrid_a2a_grads_multidevice():
+    body = COMMON + """
+mesh = make_test_mesh((2, 4))
+tabs = tables(HYBRID, n=2)
+with mesh:
+    coll = EmbeddingCollection(tabs, mesh, comm="all_to_all",
+                               capacity_factor=4.0)
+    params = coll.init(jax.random.PRNGKey(0))
+    ids = make_ids(jax.random.PRNGKey(1), tabs, b=16)
+    loss = lambda fn: (lambda p: (fn(p, ids).astype(jnp.float32)**2).sum())
+    g1 = jax.jit(jax.grad(loss(coll.lookup)))(params)
+    g2 = jax.grad(loss(coll.lookup_reference))(params)
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   rtol=1e-4, atol=1e-4)
+print("OK")
+"""
+    assert "OK" in run_with_devices(body)
+
+
+def test_recsys_train_step_multidevice_parity():
+    """GSPMD and manual-collective train steps agree on 8 devices."""
+    body = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
+from repro.models.recsys.model import RecsysModel
+from repro.launch.mesh import make_test_mesh
+from repro.configs.base import TrainConfig
+from repro.train.train_step import (build_train_step,
+                                    build_manual_train_step, init_opt_state)
+from repro.data.synthetic import SyntheticCTR
+
+cfg = reduce_recsys_for_smoke(RECSYS_ARCHS["dlrm-criteo"])
+mesh = make_test_mesh((4, 2))
+with mesh:
+    model = RecsysModel(cfg, mesh, global_batch=32)
+    params = model.init(jax.random.PRNGKey(0))
+    ds = SyntheticCTR(cfg, 32)
+    batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+    tcfg = TrainConfig()
+    opt = init_opt_state(params, tcfg)
+    g_step = jax.jit(build_train_step(model, tcfg))
+    m_step = jax.jit(build_manual_train_step(model, tcfg, mesh))
+    p1, o1, a1 = g_step(params, opt, batch)
+    params2 = model.init(jax.random.PRNGKey(0))
+    opt2 = init_opt_state(params2, tcfg)
+    p2, o2, a2 = m_step(params2, opt2, batch)
+    np.testing.assert_allclose(float(a1["loss"]), float(a2["loss"]),
+                               rtol=1e-4)
+    # bf16 all-reduce ordering differs between GSPMD and manual psum;
+    # per-element agreement is to ~1e-3 absolute
+    for k in p1:
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-3),
+            p1[k], p2[k])
+print("OK")
+"""
+    assert "OK" in run_with_devices(body)
+
+
+def test_lm_train_step_multidevice():
+    """A reduced LM arch lowers + executes on a (2,2,2) pod mesh."""
+    body = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.registry import LM_ARCHS, reduce_for_smoke
+from repro.models.lm.backbone import LMModel
+from repro.launch.mesh import make_test_mesh
+
+cfg = reduce_for_smoke(LM_ARCHS["granite-moe-1b-a400m"])
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+with mesh:
+    model = LMModel(cfg, mesh, embed_mode="hybrid", q_chunk=16, k_chunk=16,
+                    loss_chunk=16)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 4, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    loss = jax.jit(model.train_loss)({k: v for k, v in params.items()},
+                                     {"tokens": tokens})
+    assert np.isfinite(float(loss))
+print("OK")
+"""
+    assert "OK" in run_with_devices(body, n_devices=8)

@@ -1,0 +1,135 @@
+"""HLO analyzer: unit tests on hand-written HLO snippets + a consistency
+check against a real lowered program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+
+def test_type_bytes():
+    assert ha.type_bytes("f32[4,8]") == 128
+    assert ha.type_bytes("bf16[10]") == 20
+    assert ha.type_bytes("pred[3]") == 3
+    assert ha.type_bytes("(f32[2], s32[4])") == 24
+    assert ha.type_bytes("token[]") == 0
+
+
+HLO_DOT = """
+ENTRY %main (a: f32[8,16], b: f32[16,32]) -> f32[8,32] {
+  %a = f32[8,16] parameter(0)
+  %b = f32[16,32] parameter(1)
+  ROOT %dot.1 = f32[8,32] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_dot_flops():
+    st = ha.HloAnalyzer(HLO_DOT).analyze()
+    assert st.flops == 2 * 16 * 8 * 32
+    # memory: read a (512B) + b (2048B) + write out (1024B)
+    assert st.mem_bytes == 512 + 2048 + 1024
+
+
+HLO_WHILE = """
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64] get-tuple-element(%p), index=1
+  %y = f32[64] multiply(%x, %x)
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64]) tuple(%i2, %y)
+}
+
+%cond (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[64]) -> f32[64] {
+  %x = f32[64] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64]) tuple(%zero, %x)
+  %w = (s32[], f32[64]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[64] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies():
+    st = ha.HloAnalyzer(HLO_WHILE).analyze()
+    # multiply: 64 flops, add: 1 flop, per iteration × 7
+    assert st.flops == 7 * 65
+    assert st.unknown_trip_counts == 0
+
+
+def test_while_trip_count_from_condition_constant():
+    hlo = HLO_WHILE.replace(
+        ', backend_config={"known_trip_count":{"n":"7"}}', "")
+    st = ha.HloAnalyzer(hlo).analyze()
+    assert st.flops == 7 * 65          # parsed from %n = constant(7)
+
+
+HLO_COLL = """
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024] parameter(0)
+  %ar = f32[1024] all-reduce(%x), replica_groups={}, to_apply=%sum
+  %ag = f32[1024] all-gather(%ar), dimensions={0}
+  ROOT %out = f32[1024] add(%ar, %ag)
+}
+"""
+
+
+def test_collective_bytes_by_kind():
+    st = ha.HloAnalyzer(HLO_COLL).analyze()
+    assert st.coll_by_kind["all-reduce"] == 4096
+    assert st.coll_by_kind["all-gather"] == 4096    # result bytes
+    assert st.coll_bytes == 8192
+
+
+def test_real_program_consistency():
+    """Analyzer FLOPs on a simple jit matmul ~= the analytic count."""
+    def f(a, b):
+        return (a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    hlo = jax.jit(f).lower(a, b).compile().as_text()
+    st = ha.HloAnalyzer(hlo).analyze()
+    analytic = 2 * 128 * 256 * 64
+    assert analytic <= st.flops <= analytic * 1.2
+
+
+def test_scan_trip_count_on_real_program():
+    """A lax.scan over 11 steps must multiply the body tally 11x."""
+    def f(x):
+        def body(c, _):
+            return c @ w, ()
+        w = jnp.eye(32)
+        out, _ = jax.lax.scan(body, x, None, length=11)
+        return out
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    hlo = jax.jit(f).lower(x).compile().as_text()
+    st = ha.HloAnalyzer(hlo).analyze()
+    per_iter = 2 * 32 * 32 * 32
+    assert st.flops >= 11 * per_iter
+    assert st.flops < 11 * per_iter * 1.5
+    assert st.unknown_trip_counts == 0
+
+
+def test_roofline_terms_dominance():
+    st = ha.Stats(flops=197e12, mem_bytes=1.0, coll_bytes=1.0)
+    t = ha.roofline_terms(st)
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] == pytest.approx(1.0)
+    st = ha.Stats(flops=1.0, mem_bytes=819e9 * 2, coll_bytes=1.0)
+    assert ha.roofline_terms(st)["dominant"] == "memory"
+    st = ha.Stats(flops=1.0, mem_bytes=1.0, coll_bytes=50e9 * 3)
+    t = ha.roofline_terms(st)
+    assert t["dominant"] == "collective"
+    assert t["step_s_lower_bound"] == pytest.approx(3.0)

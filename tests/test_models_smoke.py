@@ -1,0 +1,227 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned
+arch instantiates at REDUCED size and runs one forward/train step on CPU
+with shape + finiteness asserts. Decode parity vs full forward is checked
+for one arch per block family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import (
+    LM_ARCHS, RECSYS_ARCHS, reduce_for_smoke, reduce_recsys_for_smoke,
+)
+from repro.launch.mesh import make_test_mesh
+from repro.models.lm.backbone import LMModel
+
+
+def _batch_for(cfg, b=2, s=24, key=0):
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(key), (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["patches"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(key + 1), (b, cfg.frontend_seq, cfg.d_model),
+            jnp.float32).astype(jnp.bfloat16)
+    if cfg.frontend == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(key + 2), (b, 16, cfg.d_model),
+            jnp.float32).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(LM_ARCHS))
+def test_lm_arch_train_step(arch):
+    cfg = reduce_for_smoke(LM_ARCHS[arch])
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        model = LMModel(cfg, mesh, embed_mode="hybrid", hot_fraction=0.1,
+                        q_chunk=16, k_chunk=16, loss_chunk=16)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _batch_for(cfg)
+
+        loss, grads = jax.jit(jax.value_and_grad(model.train_loss))(
+            params, batch)
+        assert np.isfinite(float(loss)), arch
+        # loss should start near ln(V) for random init
+        assert abs(float(loss) - np.log(cfg.vocab_size)) < 2.0, arch
+        leaves = jax.tree.leaves(grads)
+        assert all(np.isfinite(np.asarray(l)).all() for l in leaves), arch
+        # at least one embedding grad is nonzero
+        gnorm = sum(float(jnp.abs(l).sum()) for l in leaves)
+        assert gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", sorted(LM_ARCHS))
+def test_lm_arch_decode_step(arch):
+    cfg = reduce_for_smoke(LM_ARCHS[arch])
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        model = LMModel(cfg, mesh, embed_mode="replicated",
+                        q_chunk=16, k_chunk=16)
+        params = model.init(jax.random.PRNGKey(0))
+        b, smax = 2, 16
+        cache = model.init_cache(b, smax)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (b, 1), 0,
+                                    cfg.vocab_size)
+        pos = jnp.zeros((b,), jnp.int32)
+        logits, new_cache = jax.jit(model.decode_step)(params, tokens,
+                                                       cache, pos)
+        assert logits.shape == (b, model.logits_size), arch
+        assert np.isfinite(np.asarray(logits)).all(), arch
+        # caches got updated (structure preserved)
+        assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "recurrentgemma-9b",
+                                  "xlstm-125m"])
+def test_decode_matches_prefill(arch):
+    """Feeding tokens one-by-one through decode == full forward logits."""
+    cfg = reduce_for_smoke(LM_ARCHS[arch])
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        model = LMModel(cfg, mesh, embed_mode="replicated",
+                        q_chunk=8, k_chunk=8)
+        params = model.init(jax.random.PRNGKey(0))
+        b, s = 1, 8
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                    cfg.vocab_size)
+        # full forward last-position logits
+        full = np.asarray(model.prefill(params, {"tokens": tokens}))
+        # token-by-token decode
+        cache = model.init_cache(b, s)
+        step = jax.jit(model.decode_step)
+        for i in range(s):
+            logits, cache = step(params, tokens[:, i:i + 1],
+                                 cache, jnp.full((b,), i, jnp.int32))
+        got = np.asarray(logits)
+        v = cfg.vocab_size
+        np.testing.assert_allclose(got[:, :v], full[:, :v],
+                                   rtol=0.1, atol=0.15)
+        # random-init logits are nearly flat, so exact argmax equality is
+        # noise; require the two paths to be highly correlated instead
+        a, b_ = got[:, :v].ravel(), full[:, :v].ravel()
+        corr = np.corrcoef(a, b_)[0, 1]
+        assert corr > 0.99, f"decode/prefill correlation {corr}"
+
+
+@pytest.mark.parametrize("arch", sorted(RECSYS_ARCHS))
+def test_recsys_arch_train_step(arch):
+    from repro.data.synthetic import SyntheticCTR
+    from repro.models.recsys.model import RecsysModel
+    from repro.train.train_step import build_train_step, init_opt_state
+
+    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS[arch])
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        model = RecsysModel(cfg, mesh, global_batch=16)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {k: jnp.asarray(v)
+                 for k, v in SyntheticCTR(cfg, 16).batch(0).items()}
+        tcfg = TrainConfig()
+        step = jax.jit(build_train_step(model, tcfg))
+        p2, o2, aux = step(params, init_opt_state(params, tcfg), batch)
+        assert np.isfinite(float(aux["loss"]))
+        assert float(aux["loss"]) < 2.0           # ~ln(2) ballpark for BCE
+        # params actually moved
+        moved = jax.tree.map(
+            lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                       - b.astype(jnp.float32)).sum()),
+            params, p2)
+        assert sum(jax.tree.leaves(moved)) > 0
+
+
+def test_recsys_kernel_path_matches_jnp_path():
+    """use_kernels=True (Pallas) and the jnp pool produce the same logits."""
+    from repro.data.synthetic import SyntheticCTR
+    from repro.models.recsys.model import RecsysModel
+
+    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS["dlrm-criteo"])
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        m1 = RecsysModel(cfg, mesh, global_batch=8, use_kernels=False)
+        m2 = RecsysModel(cfg, mesh, global_batch=8, use_kernels=True)
+        params = m1.init(jax.random.PRNGKey(0))
+        batch = {k: jnp.asarray(v)
+                 for k, v in SyntheticCTR(cfg, 8).batch(0).items()}
+        l1 = np.asarray(m1.apply(params, batch))
+        l2 = np.asarray(m2.apply(params, batch))
+        np.testing.assert_allclose(l1, l2, rtol=2e-2, atol=2e-2)
+
+
+def test_all_arch_configs_match_assignment():
+    """Spot-check the exact architecture numbers from the assignment."""
+    a = LM_ARCHS
+    assert a["granite-moe-1b-a400m"].num_layers == 24
+    assert a["granite-moe-1b-a400m"].moe.num_experts == 32
+    assert a["granite-moe-1b-a400m"].moe.top_k == 8
+    assert a["granite-moe-3b-a800m"].d_model == 1536
+    assert a["phi3-mini-3.8b"].d_ff == 8192
+    assert a["phi3-mini-3.8b"].vocab_size == 32064
+    assert a["minitron-4b"].vocab_size == 256000
+    assert a["command-r-plus-104b"].d_model == 12288
+    assert a["command-r-plus-104b"].num_heads == 96
+    assert a["olmo-1b"].norm == "nonparam_ln"
+    assert a["seamless-m4t-large-v2"].encoder_layers == 24
+    assert a["pixtral-12b"].vocab_size == 131072
+    assert a["xlstm-125m"].d_ff == 0
+    assert a["recurrentgemma-9b"].block_pattern == (
+        "rglru", "rglru", "local_attn")
+    assert a["recurrentgemma-9b"].num_kv_heads == 1
+    # long_500k applicability
+    from repro.configs.base import LM_SHAPE_BY_NAME, shape_applicable
+    long = LM_SHAPE_BY_NAME["long_500k"]
+    assert shape_applicable(a["xlstm-125m"], long)
+    assert shape_applicable(a["recurrentgemma-9b"], long)
+    assert not shape_applicable(a["phi3-mini-3.8b"], long)
+
+
+def test_moe_dispatch_matches_dense_reference():
+    """Bucketed MoE dispatch == explicit per-token expert mixture when the
+    capacity factor is generous enough that nothing drops."""
+    import functools
+    from jax.sharding import PartitionSpec as P
+    import dataclasses
+    from repro.configs.base import MoEConfig
+    from repro.models.lm import moe as moe_lib
+
+    cfg = reduce_for_smoke(LM_ARCHS["granite-moe-1b-a400m"])
+    cfg = dataclasses.replace(
+        cfg, moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=32,
+                           capacity_factor=8.0))
+    mesh = make_test_mesh((1, 1))
+    key = jax.random.PRNGKey(0)
+    p = moe_lib.moe_init(key, cfg, model_axis_size=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    fn = jax.shard_map(
+        functools.partial(moe_lib.moe_apply_local, cfg=cfg,
+                          model_axis="model", model_axis_size=1),
+        mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), p), P()),
+        out_specs=P(), check_vma=False)
+    out = fn(p, x)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+
+    # dense reference: route every token through its top-k experts exactly
+    from repro.models.lm.transformer import norm_apply
+    h = norm_apply(p["norm"], x, cfg)
+    logits = (h @ p["router"]).astype(jnp.float32)
+    gate_vals, sel = jax.lax.top_k(logits, cfg.moe.top_k)
+    gate = jax.nn.softmax(gate_vals, axis=-1)
+
+    def expert(e, v):
+        u = jax.nn.silu(v @ p["w1"][e]) * (v @ p["w3"][e])
+        return u @ p["w2"][e]
+
+    want = np.asarray(x, np.float64).copy()
+    hn = np.asarray(h)
+    for b in range(x.shape[0]):
+        for s in range(x.shape[1]):
+            acc = np.zeros(cfg.d_model)
+            for k in range(cfg.moe.top_k):
+                e = int(sel[b, s, k])
+                y = expert(e, hn[b, s])
+                acc += float(gate[b, s, k]) * np.asarray(y)
+            want[b, s] += acc
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-3, atol=1e-3)

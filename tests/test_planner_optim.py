@@ -1,0 +1,108 @@
+"""Placement planner + optimizers + frequency stats."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    DATA_PARALLEL, DISTRIBUTED, HYBRID, EmbeddingTableConfig, MeshConfig,
+    TrainConfig,
+)
+from repro.core.embedding.frequency import FrequencyStats, apply_remap
+from repro.core.embedding.planner import plan, resolve_strategies
+from repro.optim.optimizers import make
+from repro.optim.sparse import rowwise_adagrad
+
+MESH = MeshConfig((16, 16), ("data", "model"))
+
+
+def test_planner_tiny_table_replicates():
+    t = EmbeddingTableConfig("tiny", 100, 16, strategy="auto")
+    d = plan([t], MESH, 65536)
+    assert d["tiny"].strategy == DATA_PARALLEL
+
+
+def test_planner_huge_table_not_replicated():
+    t = EmbeddingTableConfig("huge", 10_000_000, 128, strategy="auto")
+    d = plan([t], MESH, 65536)
+    assert d["huge"].strategy in (DISTRIBUTED, HYBRID)
+    # memory estimate reflects sharding
+    assert d["huge"].mem_bytes < 10_000_000 * 128 * 4
+
+
+def test_planner_respects_pinned_strategy():
+    t = EmbeddingTableConfig("pin", 1000, 8, strategy=DISTRIBUTED)
+    d = plan([t], MESH, 1024)
+    assert d["pin"].strategy == DISTRIBUTED
+    assert "pinned" in d["pin"].note
+
+
+def test_resolve_strategies_roundtrip():
+    tabs = [EmbeddingTableConfig("a", 100, 8, strategy="auto"),
+            EmbeddingTableConfig("b", 5_000_000, 64, strategy="auto")]
+    out = resolve_strategies(tabs, MESH, 65536)
+    assert all(t.strategy != "auto" for t in out)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sgd", "adam", "adamw"])
+def test_dense_optimizer_descends_quadratic(name):
+    cfg = TrainConfig(learning_rate=0.1, weight_decay=0.01)
+    opt = make(name, cfg)
+    p = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(p)
+    for _ in range(100):
+        g = {"w": 2 * p["w"]}
+        p, state = opt.update(g, state, p)
+    assert float(jnp.abs(p["w"]).max()) < 0.1
+
+
+def test_rowwise_adagrad_state_is_one_scalar_per_row():
+    opt = rowwise_adagrad(TrainConfig())
+    p = {"t": jnp.zeros((100, 64))}
+    state = opt.init(p)
+    assert state["acc"]["t"].shape == (100,)   # D× smaller than Adam
+
+
+def test_rowwise_adagrad_adapts_per_row():
+    opt = rowwise_adagrad(TrainConfig(learning_rate=1.0))
+    p = {"t": jnp.zeros((2, 4))}
+    state = opt.init(p)
+    g = jnp.stack([jnp.full((4,), 10.0), jnp.full((4,), 0.1)])
+    p2, _ = opt.update({"t": g}, state, p)
+    d = np.abs(np.asarray(p2["t"]))
+    # adagrad normalizes: both rows move ~lr despite 100x gradient gap
+    np.testing.assert_allclose(d[0], d[1], rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Frequency stats (hot/cold machinery)
+# ---------------------------------------------------------------------------
+
+def test_frequency_remap_sorts_by_count():
+    fs = FrequencyStats([10])
+    ids = np.asarray([[[7, 7, 7]], [[7, 2, -1]], [[2, 5, -1]]], np.int32)
+    fs.update(ids)
+    remap = fs.remap(0)
+    assert remap[7] == 0          # most frequent -> rank 0
+    assert remap[2] == 1
+    assert remap[5] == 2
+    out = apply_remap(ids, [remap])
+    assert (out[ids == 7] == 0).all()
+    assert (out[ids == -1] == -1).all()
+
+
+def test_frequency_coverage_estimate():
+    fs = FrequencyStats([100])
+    rng = np.random.default_rng(0)
+    ids = rng.zipf(1.5, (1000, 1, 1)).clip(1, 100).astype(np.int32) - 1
+    fs.update(ids)
+    cov_10 = fs.coverage(0, 0.10)
+    cov_50 = fs.coverage(0, 0.50)
+    assert 0 < cov_10 < cov_50 <= 1.0
+    assert cov_10 > 0.10          # Zipf: top 10% covers way more than 10%

@@ -1,0 +1,105 @@
+"""Inference path: deploy-from-training -> HPS -> batched server, plus
+training/serving parity (the server must produce the same predictions as
+the training-graph forward pass)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
+from repro.core.hps.hps import HPS
+from repro.core.hps.message_bus import MessageBus, Producer
+from repro.core.hps.persistent_db import PersistentDB
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.mesh import make_test_mesh
+from repro.models.recsys.model import RecsysModel
+from repro.serve.server import InferenceServer, deploy_from_training
+
+
+@pytest.fixture(scope="module")
+def deployed(tmp_path_factory):
+    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS["dlrm-criteo"])
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        model = RecsysModel(cfg, mesh, global_batch=16)
+        params = model.init(jax.random.PRNGKey(0))
+        pdb = PersistentDB(str(tmp_path_factory.mktemp("pdb")))
+        deploy_from_training(model, params, pdb, "dlrm")
+        hps = HPS("dlrm", cfg.tables, pdb, cache_capacity=64)
+        dense_params = {k: v for k, v in params.items() if k != "embedding"}
+        server = InferenceServer(model, dense_params, hps)
+    return cfg, mesh, model, params, pdb, hps, server
+
+
+def test_deploy_preserves_tables(deployed):
+    cfg, mesh, model, params, pdb, hps, server = deployed
+    logical = model.embedding.export_logical(params["embedding"])
+    # reconstruct one table from the PDB and compare to training params
+    t = cfg.tables[0]
+    rows = pdb.fetch("dlrm", t.name, np.arange(t.vocab_size))
+    want = model.embedding.lookup_reference(
+        params["embedding"],
+        jnp.asarray(np.stack(
+            [np.arange(t.vocab_size)[:, None]]
+            + [np.full((t.vocab_size, 1), -1)] * (cfg.num_tables - 1),
+            axis=1), jnp.int32))
+    np.testing.assert_allclose(rows, np.asarray(want)[:, 0, :],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_server_matches_training_forward(deployed):
+    cfg, mesh, model, params, pdb, hps, server = deployed
+    batch = SyntheticCTR(cfg, 32).batch(0)
+    with mesh:
+        want = jax.nn.sigmoid(model.apply(
+            params, {k: jnp.asarray(v) for k, v in batch.items()}))
+        got = server.predict(batch["dense"], batch["cat"])
+    np.testing.assert_allclose(got, np.asarray(want), rtol=2e-2, atol=2e-2)
+    assert server.latency_percentiles()["p50"] > 0
+
+
+def test_server_batching_queue(deployed):
+    cfg, mesh, model, params, pdb, hps, server = deployed
+    server.start()
+    try:
+        batches = [SyntheticCTR(cfg, 4, seed=i).batch(0) for i in range(5)]
+        handles = [server.submit(b["dense"], b["cat"]) for b in batches]
+        outs = [h.get(timeout=60) for h in handles]
+        for b, o in zip(batches, outs):
+            assert o.shape == (4,)
+            assert np.isfinite(o).all()
+    finally:
+        server.stop()
+
+
+def test_cache_hit_rate_improves_with_zipf(deployed):
+    cfg, mesh, model, params, pdb, hps, server = deployed
+    ds = SyntheticCTR(cfg, 64)
+    for step in range(5):
+        server.predict(**{k: v for k, v in ds.batch(step).items()
+                          if k in ("dense", "cat")})
+    stats = hps.stats()
+    # Zipf access: after warmup the L1 should be hitting
+    assert np.mean(list(stats["l1_hit_rate"].values())) > 0.3
+
+
+def test_online_update_reaches_server(deployed):
+    cfg, mesh, model, params, pdb, hps, server = deployed
+    bus = MessageBus()
+    hps2 = HPS("dlrm", cfg.tables, pdb, cache_capacity=64, bus=bus)
+    t = cfg.tables[0]
+    cat = np.full((1, cfg.num_tables, 2), -1, np.int32)
+    cat[0, 0, 0] = 5
+    before = np.asarray(hps2.lookup(cat))[0, 0]
+
+    prod = Producer(bus, "dlrm")
+    prod.send(t.name, np.asarray([5]),
+              np.full((1, t.dim), 1234.5, np.float32))
+    prod.flush()
+    assert hps2.apply_updates() == 1
+    hps2.refresh_caches()
+    after = np.asarray(hps2.lookup(cat))[0, 0]
+    np.testing.assert_allclose(after, 1234.5)
+    assert not np.allclose(before, after)

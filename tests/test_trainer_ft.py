@@ -1,0 +1,135 @@
+"""Fault-tolerant trainer: checkpoint/restart, failure injection with
+replay determinism, straggler accounting, and elastic (N -> M shard)
+restore of embedding tables."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.mesh import make_test_mesh
+from repro.models.recsys.model import RecsysModel
+from repro.train.trainer import Trainer
+
+
+def _setup(tmp_path, ckpt_interval=2, batch=16):
+    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS["dlrm-criteo"])
+    mesh = make_test_mesh((1, 1))
+    model = RecsysModel(cfg, mesh, global_batch=batch)
+    data = SyntheticCTR(cfg, batch)
+    tcfg = TrainConfig(learning_rate=1e-2)
+    tr = Trainer(model, tcfg, mesh, data.batch,
+                 ckpt_dir=str(tmp_path / "ckpt"),
+                 ckpt_interval=ckpt_interval)
+    return cfg, mesh, model, tr
+
+
+def test_loss_decreases(tmp_path):
+    cfg, mesh, model, tr = _setup(tmp_path)
+    with mesh:
+        out = tr.train(30)
+    losses = [h["loss"] for h in out["history"]]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    cfg, mesh, model, tr = _setup(tmp_path)
+    with mesh:
+        out1 = tr.train(6)
+    # fresh trainer, same dir -> resumes (history starts past step 5)
+    cfg, mesh, model2, tr2 = _setup(tmp_path)
+    with mesh:
+        out2 = tr2.train(10)
+    steps2 = [h["step"] for h in out2["history"]]
+    assert steps2[0] == 6          # resumed, not restarted
+    assert steps2[-1] == 9
+
+
+def test_failure_injection_recovers_and_replays(tmp_path):
+    cfg, mesh, model, tr = _setup(tmp_path, ckpt_interval=3)
+    fails = {"armed": True}
+
+    def inject(step):
+        if step == 7 and fails["armed"]:
+            fails["armed"] = False
+            raise RuntimeError("injected node failure")
+
+    tr.failure_injector = inject
+    with mesh:
+        out = tr.train(12)
+    steps = [h["step"] for h in out["history"]]
+    # step 7 appears exactly once in the final history *after* recovery
+    assert steps.count(7) >= 1
+    assert steps[-1] == 11
+    # deterministic replay: rerunning from scratch with no failure gives
+    # the same final loss (stateless data pipeline => same batches)
+    cfg, mesh, model3, tr3 = _setup(tmp_path, ckpt_interval=3)
+    import shutil
+    shutil.rmtree(tr3.ckpt_dir)
+    with mesh:
+        out_clean = tr3.train(12)
+    np.testing.assert_allclose(out["history"][-1]["loss"],
+                               out_clean["history"][-1]["loss"], rtol=1e-4)
+
+
+def test_straggler_accounting():
+    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS["wdl-criteo"])
+    mesh = make_test_mesh((1, 1))
+    model = RecsysModel(cfg, mesh, global_batch=8)
+    data = SyntheticCTR(cfg, 8)
+    tr = Trainer(model, TrainConfig(), mesh, data.batch)
+    tr.step_times = [0.01] * 10
+    tr._watch_stragglers(0.5)      # 50x median
+    assert tr.stragglers == 1
+    tr._watch_stragglers(0.011)
+    assert tr.stragglers == 1
+
+
+def test_elastic_reshard_roundtrip():
+    """Embedding checkpoints written logically restore onto another mesh
+    size with identical lookup semantics (subprocess provides 8 devices)."""
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    body = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import DISTRIBUTED, HYBRID, EmbeddingTableConfig
+from repro.core.embedding import EmbeddingCollection
+from repro.launch.mesh import make_test_mesh
+
+tabs = [EmbeddingTableConfig("a", 100, 8, hotness=2, strategy=DISTRIBUTED,
+                             hot_fraction=0.2),
+        EmbeddingTableConfig("b", 64, 8, hotness=2, strategy=HYBRID,
+                             hot_fraction=0.2)]
+ids = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 2), -1, 64)
+
+mesh8 = make_test_mesh((4, 2))
+with mesh8:
+    c8 = EmbeddingCollection(tabs, mesh8, comm="all_to_all",
+                             capacity_factor=4.0)
+    p8 = c8.init(jax.random.PRNGKey(0))
+    want = np.asarray(c8.lookup_reference(p8, ids))
+    logical = {k: np.asarray(v) for k, v in c8.export_logical(p8).items()}
+
+mesh2 = make_test_mesh((2, 1))
+with mesh2:
+    c2 = EmbeddingCollection(tabs, mesh2, comm="all_to_all",
+                             capacity_factor=4.0)
+    p2 = c2.import_logical({k: jnp.asarray(v) for k, v in logical.items()})
+    got = np.asarray(jax.jit(c2.lookup)(p2, ids))
+np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", body], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
