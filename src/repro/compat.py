@@ -1,0 +1,77 @@
+"""JAX version compatibility shims.
+
+Compat policy (see ROADMAP.md): the repo targets the *installed* JAX first
+and newer APIs opportunistically. Anything that moved between JAX 0.4.x
+and 0.5+/0.6+ goes through this module — call sites never feature-test
+``jax`` themselves:
+
+* ``shard_map``    — ``jax.shard_map`` (new) vs
+                     ``jax.experimental.shard_map.shard_map`` (0.4.x).
+                     The new ``check_vma`` kwarg maps onto the old
+                     ``check_rep``.
+* ``AxisType``     — ``jax.sharding.AxisType`` is absent before 0.5;
+                     a placeholder enum keeps annotations importable.
+* ``make_mesh``    — the ``axis_types=`` kwarg is absent before 0.5;
+                     dropped when unsupported (all axes default to Auto,
+                     which is what every call site passes anyway).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["AxisType", "HAS_AXIS_TYPE", "make_mesh", "shard_map"]
+
+
+# -- AxisType ----------------------------------------------------------------
+
+try:  # JAX >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_AXIS_TYPE = True
+except ImportError:  # JAX 0.4.x: everything is implicitly Auto
+    class AxisType:  # type: ignore[no-redef]
+        """Placeholder for ``jax.sharding.AxisType`` on old JAX."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    HAS_AXIS_TYPE = False
+
+
+# -- make_mesh ---------------------------------------------------------------
+
+if hasattr(jax, "make_mesh"):
+    _MAKE_MESH_AXIS_TYPES = (
+        "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+    def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+                  axis_types: Optional[Sequence] = None) -> Mesh:
+        if _MAKE_MESH_AXIS_TYPES and axis_types is not None:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=tuple(axis_types))
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+else:  # very old JAX: assemble the Mesh by hand
+    from jax.experimental import mesh_utils
+
+    def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+                  axis_types: Optional[Sequence] = None) -> Mesh:
+        devices = mesh_utils.create_device_mesh(tuple(axis_shapes))
+        return Mesh(devices, tuple(axis_names))
+
+
+# -- shard_map ---------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):  # JAX >= 0.6
+    def shard_map(f: Callable, *, mesh: Mesh, in_specs, out_specs,
+                  check_vma: bool = True) -> Callable:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:  # JAX 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f: Callable, *, mesh: Mesh, in_specs, out_specs,
+                  check_vma: bool = True) -> Callable:
+        return _shard_map_04(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)

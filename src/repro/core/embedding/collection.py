@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import (
     DATA_PARALLEL, DISTRIBUTED, HYBRID, LOCALIZED, EmbeddingTableConfig,
 )
@@ -231,7 +232,7 @@ class EmbeddingCollection:
         """
         if manual:
             return self._lookup_shard(params, ids)
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             functools.partial(self._lookup_shard),
             mesh=self.mesh,
             in_specs=(self.param_specs(), P(self.dp_axes, None, None)),

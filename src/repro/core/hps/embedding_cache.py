@@ -1,4 +1,4 @@
-"""GPU embedding cache (HPS level 1).
+"""GPU embedding cache (HPS level 1) — batched, vectorized lookup path.
 
 Device-resident payload ``[C, D]`` + host-side index, following HugeCTR's
 split between the GDDR payload and its host-managed hash index (which is
@@ -7,16 +7,41 @@ optimized batched query, **dynamic insertion** (misses get cached), and an
 **asynchronous refresh** thread that re-pulls resident rows from the lower
 levels so online-training updates propagate without blocking queries.
 
-Eviction is LFU-with-aging (hot features stick, per the paper's intent).
+Architecture (the batched-query design of the companion HPS paper,
+arXiv 2210.08804):
+
+* The host index is a pair of sorted NumPy arrays (``ids`` / ``slots``);
+  a whole query resolves with ONE ``np.searchsorted`` — no per-id Python
+  dict probes.
+* All misses in a query are deduplicated and coalesced into ONE
+  ``fetch_fn`` call and ONE scatter onto the device payload
+  (``payload.at[slots].set(rows)``).
+* The payload read is a single Pallas gather kernel dispatch
+  (``kernels.hps_gather``), so ``query`` is one device round-trip
+  regardless of batch size: O(1) device dispatches per batch.
+
+Eviction is LFU-with-aging (hot features stick, per the paper's intent)
+and **batch-aware**: victims are selected in one vectorized pass over the
+pre-query index state, so a query's own insertions — and the slots it is
+about to read — are never its eviction victims. If a single query holds
+more unique ids than the evictable capacity, the most frequent misses are
+cached and the remainder is served through a rare overflow fixup (one
+extra scatter into the output), never corrupting resident rows.
 """
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
 
 
 class DeviceEmbeddingCache:
@@ -29,81 +54,191 @@ class DeviceEmbeddingCache:
         self.dim = dim
         self.fetch_fn = fetch_fn
         self.decay = decay
-        self.payload = jnp.zeros((capacity, dim), jnp.float32)
-        self._slot_of: Dict[int, int] = {}
+        # physical rows padded to the gather kernel's tile so the jitted
+        # gather never copies the payload to pad it
+        bc = min(512, _round_up(capacity, 8))
+        self._phys_rows = _round_up(capacity, bc)
+        self.payload = jnp.zeros((self._phys_rows, dim), jnp.float32)
         self._id_of = np.full(capacity, -1, np.int64)
         self._freq = np.zeros(capacity, np.float64)
         self._next_free = 0
+        # sorted view of the occupied prefix: _sorted_ids[k] lives in slot
+        # _sorted_slots[k]; rebuilt only on insert/evict (hit path is pure
+        # searchsorted)
+        self._sorted_ids = np.empty(0, np.int64)
+        self._sorted_slots = np.empty(0, np.int64)
         self.hits = 0
         self.misses = 0
         self._lock = threading.RLock()
         self._refresh_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
-    # -- query -----------------------------------------------------------------
+    # -- host index --------------------------------------------------------------
+
+    def _find(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized id -> slot (-1 if not resident). ``ids`` unique."""
+        if len(self._sorted_ids) == 0:
+            return np.full(len(ids), -1, np.int64)
+        pos = np.searchsorted(self._sorted_ids, ids)
+        pos = np.clip(pos, 0, len(self._sorted_ids) - 1)
+        found = self._sorted_ids[pos] == ids
+        return np.where(found, self._sorted_slots[pos], -1)
+
+    def _rebuild_index(self) -> None:
+        occ = self._id_of[:self._next_free]
+        order = np.argsort(occ, kind="stable").astype(np.int64)
+        self._sorted_ids = occ[order]
+        self._sorted_slots = order
+
+    def resident_ids(self) -> np.ndarray:
+        """Ids currently resident in the cache (sorted)."""
+        with self._lock:
+            return self._sorted_ids.copy()
+
+    # -- query -------------------------------------------------------------------
+
+    def acquire_slots(self, ids: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 jax.Array]:
+        """Resolve ``ids [n]`` (-1 = pad) to payload slots, inserting misses.
+
+        Returns ``(slots [n], ov_idx [m], ov_rows [m, D], payload)``:
+        ``slots`` are payload row indices (-1 for pads and overflowed
+        ids); overflowed ids — misses that could not be cached without
+        evicting this query's own rows — are served out-of-band via
+        ``ov_rows`` at positions ``ov_idx``. ``payload`` is the
+        post-insertion snapshot bound under the same lock: gather from
+        IT, not ``self.payload`` — a concurrent query may evict the
+        returned slots and rebind ``self.payload`` before the gather
+        runs (eviction only protects the evicting query's own hits).
+        Performs at most ONE ``fetch_fn`` call and ONE device scatter.
+        """
+        with self._lock:
+            slots, ov_idx, ov_rows = self._acquire_locked(
+                np.asarray(ids, np.int64))
+            return slots, ov_idx, ov_rows, self.payload
+
+    def _acquire_locked(self, ids: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        n = len(ids)
+        empty = (np.empty(0, np.int64),
+                 np.empty((0, self.dim), np.float32))
+        if n == 0:
+            return np.empty(0, np.int64), *empty
+        valid = ids >= 0
+        uniq, inv = np.unique(np.where(valid, ids, -1), return_inverse=True)
+        counts = np.bincount(inv, minlength=len(uniq))
+        has_pad = len(uniq) > 0 and uniq[0] < 0
+        slots_u = np.full(len(uniq), -1, np.int64)
+        real = slice(1, None) if has_pad else slice(None)
+        slots_u[real] = self._find(uniq[real])
+        found = slots_u >= 0
+        real_mask = uniq >= 0
+        self.hits += int(counts[found].sum())
+        self.misses += int(counts[real_mask & ~found].sum())
+        if found.any():
+            np.add.at(self._freq, slots_u[found],
+                      counts[found].astype(np.float64))
+
+        miss = real_mask & ~found
+        ov_idx, ov_rows = empty
+        if miss.any():
+            miss_ids = uniq[miss]
+            rows = np.asarray(self.fetch_fn(miss_ids), np.float32)
+            k = len(miss_ids)
+            n_occ = self._next_free
+            free = min(k, self.capacity - n_occ)
+            dest_free = np.arange(n_occ, n_occ + free, dtype=np.int64)
+            victims = np.empty(0, np.int64)
+            if k > free:
+                # batch-aware LFU eviction: age once per batch, protect
+                # the slots this query reads; victims picked in one
+                # argpartition are distinct, so same-batch insertions can
+                # never evict each other
+                self._freq[:n_occ] *= self.decay
+                cost = self._freq[:n_occ].copy()
+                hit_slots = slots_u[found]
+                cost[hit_slots] = np.inf
+                evictable = n_occ - len(np.unique(hit_slots))
+                take = min(k - free, evictable)
+                if take > 0:
+                    victims = np.argpartition(cost, take - 1)[:take]
+                    victims = victims.astype(np.int64)
+            dest = np.concatenate([dest_free, victims])
+            ins = len(dest)
+            if ins < k:  # cache the hottest misses, overflow the rest
+                order = np.argsort(-counts[miss], kind="stable")
+            else:
+                order = np.arange(k)
+            sel, ovf = order[:ins], order[ins:]
+
+            self._next_free = n_occ + free
+            self._id_of[dest] = miss_ids[sel]
+            self._freq[dest] = counts[miss][sel].astype(np.float64)
+            self._rebuild_index()
+            if ins:  # the ONE device scatter for this query
+                self._scatter(dest, rows[sel])
+            miss_slots = np.full(k, -1, np.int64)
+            miss_slots[sel] = dest
+            slots_u[miss] = miss_slots
+
+            if len(ovf):
+                ov_uniq = np.full(len(uniq), -1, np.int64)
+                ov_pos_u = np.nonzero(miss)[0][ovf]
+                ov_uniq[ov_pos_u] = np.arange(len(ovf))
+                per_elem = ov_uniq[inv]
+                ov_idx = np.nonzero(per_elem >= 0)[0].astype(np.int64)
+                ov_rows = rows[ovf][per_elem[ov_idx]]
+
+        return slots_u[inv].astype(np.int64), ov_idx, ov_rows
+
+    def _scatter(self, slots: np.ndarray, rows: np.ndarray) -> None:
+        """One ``payload.at[slots].set(rows)``, size-bucketed so XLA
+        compiles O(log) scatter shapes instead of one per miss count
+        (padding repeats the first row — idempotent under ``set``)."""
+        pad = _round_up(len(slots), 64) - len(slots)
+        if pad:
+            slots = np.concatenate([slots, np.full(pad, slots[0])])
+            rows = np.concatenate(
+                [rows, np.broadcast_to(rows[:1], (pad, rows.shape[1]))])
+        self.payload = self.payload.at[
+            jnp.asarray(slots, jnp.int32)].set(jnp.asarray(rows))
 
     def query(self, ids: np.ndarray) -> jax.Array:
-        """Batched lookup ``[n] -> [n, D]`` with dynamic insertion."""
-        with self._lock:
-            slots = np.empty(len(ids), np.int64)
-            missing_idx = []
-            for i, id_ in enumerate(map(int, ids)):
-                s = self._slot_of.get(id_, -1)
-                slots[i] = s
-                if s < 0:
-                    missing_idx.append(i)
-                else:
-                    self._freq[s] += 1.0
-            self.hits += len(ids) - len(missing_idx)
-            self.misses += len(missing_idx)
-            if missing_idx:
-                miss_ids = ids[missing_idx]
-                rows = self.fetch_fn(miss_ids)
-                ins = self._insert_locked(miss_ids, rows)
-                slots[missing_idx] = ins
-            return jnp.take(self.payload, jnp.asarray(slots), axis=0)
+        """Batched lookup ``[n] -> [n, D]`` with dynamic insertion.
 
-    def _insert_locked(self, ids: np.ndarray, rows: np.ndarray) -> np.ndarray:
-        slots = np.empty(len(ids), np.int64)
-        for k, (id_, row) in enumerate(zip(map(int, ids), rows)):
-            if id_ in self._slot_of:          # raced in by another query
-                slots[k] = self._slot_of[id_]
-                continue
-            if self._next_free < self.capacity:
-                s = self._next_free
-                self._next_free += 1
-            else:
-                self._freq *= self.decay      # aging
-                s = int(self._freq.argmin())
-                old = self._id_of[s]
-                if old >= 0:
-                    del self._slot_of[old]
-            self._slot_of[id_] = s
-            self._id_of[s] = id_
-            self._freq[s] = 1.0
-            slots[k] = s
-            self.payload = self.payload.at[s].set(jnp.asarray(row))
-        return slots
+        One host index pass, at most one fetch + one scatter, and exactly
+        one Pallas gather dispatch for the payload read. Query lengths
+        are bucketed to powers of two so XLA compiles O(log) gather
+        shapes rather than one per batch size.
+        """
+        slots, ov_idx, ov_rows, payload = self.acquire_slots(ids)
+        n = len(slots)
+        if n == 0:
+            return jnp.zeros((0, self.dim), jnp.float32)
+        bucket = 1 << (n - 1).bit_length()
+        spad = np.pad(slots, (0, bucket - n), constant_values=-1)
+        out = ops.cache_gather(payload, spad)[:n]
+        if len(ov_idx):  # rare: batch exceeded evictable capacity
+            out = out.at[jnp.asarray(ov_idx)].set(jnp.asarray(ov_rows))
+        return out
 
     # -- refresh (async propagation of online updates) --------------------------
 
     def refresh_once(self) -> int:
-        """Re-pull every resident row from the lower levels."""
+        """Re-pull every resident row from the lower levels (one scatter)."""
         with self._lock:
-            resident = np.asarray(
-                [i for i in self._id_of[:self._next_free] if i >= 0])
-            if len(resident) == 0:
-                return 0
-            slots = np.asarray([self._slot_of[int(i)] for i in resident])
-        rows = self.fetch_fn(resident)        # outside lock: slow IO
+            res_ids = self._sorted_ids.copy()
+            res_slots = self._sorted_slots.copy()
+        if len(res_ids) == 0:
+            return 0
+        rows = np.asarray(self.fetch_fn(res_ids), np.float32)  # slow IO
         with self._lock:
-            # ids may have been evicted meanwhile; re-check
-            keep = [k for k, i in enumerate(map(int, resident))
-                    if self._slot_of.get(i) == slots[k]]
-            if keep:
-                self.payload = self.payload.at[
-                    jnp.asarray(slots[keep])].set(jnp.asarray(rows[keep]))
-            return len(keep)
+            # ids may have been evicted/moved meanwhile; re-check
+            keep = self._find(res_ids) == res_slots
+            if keep.any():
+                self._scatter(res_slots[keep], rows[keep])
+            return int(keep.sum())
 
     def start_refresh(self, interval_s: float):
         def loop():

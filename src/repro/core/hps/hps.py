@@ -4,9 +4,19 @@ Lookup path per table: L1 device cache -> L2 volatile DB -> L3 persistent
 DB, with promotion on miss at every level. The online-update Consumer
 applies trainer messages to L2/L3; the L1 cache's async refresh cycle then
 picks them up (poll-based, configurable period — the paper's design).
+
+Batched lookup path: ``lookup`` resolves ALL tables of a query on the
+host index first (misses coalesced per table into one fetch + one payload
+scatter each), then computes the stacked pooled output ``[B, T, D]`` in a
+SINGLE jitted device call — the per-table slot arrays are the only
+host->device transfer, and the pooled activations never bounce through
+host memory. Pooling honors each table's combiner (sum or mean); the
+``hotness`` argument selects the valid id columns per table (and is
+validated against the query shape instead of being silently ignored).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -18,6 +28,23 @@ from repro.core.hps.embedding_cache import DeviceEmbeddingCache
 from repro.core.hps.message_bus import Consumer, MessageBus
 from repro.core.hps.persistent_db import PersistentDB
 from repro.core.hps.volatile_db import VolatileDB
+from repro.kernels import ops
+
+
+@functools.partial(jax.jit, static_argnames=("combiners", "apply_mean"))
+def _pooled_stack(payloads: Tuple[jax.Array, ...],
+                  slots: Tuple[jax.Array, ...],
+                  combiners: Tuple[str, ...],
+                  apply_mean: bool = True) -> jax.Array:
+    """One device dispatch: per-table pooled gathers stacked to [B, T, D]."""
+    outs = []
+    for p, s, comb in zip(payloads, slots, combiners):
+        pooled = ops.pooled_cache_lookup(p, s)           # [B, D] sum over H
+        if comb == "mean" and apply_mean:
+            denom = jnp.maximum((s >= 0).sum(axis=1, keepdims=True), 1)
+            pooled = pooled / denom.astype(pooled.dtype)
+        outs.append(pooled)
+    return jnp.stack(outs, axis=1)
 
 
 class HPS:
@@ -59,22 +86,106 @@ class HPS:
 
     # -- public lookup ------------------------------------------------------------
 
+    def _split_query(self, cat: np.ndarray,
+                     hotness: Optional[List[int]]) -> List[np.ndarray]:
+        """Validate the query shape and return per-table id blocks [B, H_t]."""
+        T = len(self.tables)
+        if cat.ndim == 2:
+            if hotness is None:
+                raise ValueError(
+                    "2-D cat requires hotness=[ids per table] to split "
+                    f"the {cat.shape[1]} id columns over {T} tables")
+            if len(hotness) != T:
+                raise ValueError(
+                    f"hotness has {len(hotness)} entries for {T} tables")
+            if sum(hotness) != cat.shape[1]:
+                raise ValueError(
+                    f"sum(hotness)={sum(hotness)} != cat.shape[1]="
+                    f"{cat.shape[1]}")
+            return np.split(cat, np.cumsum(hotness)[:-1], axis=1)
+        if cat.ndim != 3:
+            raise ValueError(f"cat must be [B, T, H] or [B, sum(hotness)]; "
+                             f"got shape {cat.shape}")
+        if cat.shape[1] != T:
+            raise ValueError(
+                f"cat.shape[1]={cat.shape[1]} does not match the "
+                f"{T} tables of model '{self.model_name}'")
+        blocks = [cat[:, ti, :] for ti in range(T)]
+        if hotness is not None:
+            if len(hotness) != T:
+                raise ValueError(
+                    f"hotness has {len(hotness)} entries for {T} tables")
+            for ti, h in enumerate(hotness):
+                if h > cat.shape[2]:
+                    raise ValueError(
+                        f"hotness[{ti}]={h} exceeds id columns "
+                        f"{cat.shape[2]}")
+                if h < cat.shape[2]:  # mask columns beyond the hotness
+                    blk = blocks[ti].copy()
+                    blk[:, h:] = -1
+                    blocks[ti] = blk
+        return blocks
+
     def lookup(self, cat: np.ndarray, hotness: Optional[List[int]] = None
                ) -> jax.Array:
-        """``cat [B, T, H]`` (-1 pad) -> pooled ``[B, T, D]`` on device."""
-        b, t, h = cat.shape
-        outs = []
-        for ti, tab in enumerate(self.tables):
-            ids = cat[:, ti, :]
-            flat = ids.reshape(-1)
-            valid = flat >= 0
-            vecs = np.zeros((b * h, tab.dim), np.float32)
-            if valid.any():
-                got = self.caches[tab.name].query(flat[valid])
-                vecs[valid] = np.asarray(got)
-            pooled = vecs.reshape(b, h, tab.dim).sum(axis=1)
-            outs.append(pooled)
-        return jnp.asarray(np.stack(outs, axis=1))
+        """``cat [B, T, H]`` or ``[B, sum(hotness)]`` (-1 pad) -> pooled
+        ``[B, T, D]`` on device, honoring each table's combiner.
+
+        All tables resolve before the single jitted device call; per-table
+        misses are coalesced by the L1 cache into one fetch + one scatter.
+        Batch sizes are bucketed to powers of two so the variable-size
+        serve loop compiles O(log) pooled-gather shapes, not one per
+        drained batch size.
+        """
+        cat = np.asarray(cat)
+        blocks = self._split_query(cat, hotness)
+        dims = {t.dim for t in self.tables}
+        if len(dims) != 1:
+            raise ValueError(
+                f"stacked lookup needs equal table dims, got {sorted(dims)}")
+        b = cat.shape[0]
+        if b == 0:
+            return jnp.zeros((0, len(self.tables), self.tables[0].dim),
+                             jnp.float32)
+        bp = 1 << (b - 1).bit_length()
+
+        slot_blocks: List[jax.Array] = []
+        payloads: List[jax.Array] = []
+        overflow: List[Tuple[int, np.ndarray, np.ndarray, int]] = []
+        for ti, (t, ids) in enumerate(zip(self.tables, blocks)):
+            flat = np.ascontiguousarray(ids, np.int64).reshape(-1)
+            slots, ov_idx, ov_rows, payload = \
+                self.caches[t.name].acquire_slots(flat)
+            slots = np.pad(slots.reshape(b, ids.shape[1]),
+                           ((0, bp - b), (0, 0)), constant_values=-1)
+            slot_blocks.append(jnp.asarray(slots, jnp.int32))
+            payloads.append(payload)  # lock-consistent snapshot
+            if len(ov_idx):
+                overflow.append((ti, ov_idx, ov_rows, ids.shape[1]))
+
+        combiners = tuple("mean" if t.combiner == "mean" else "sum"
+                          for t in self.tables)
+        if not overflow:
+            return _pooled_stack(tuple(payloads), tuple(slot_blocks),
+                                 combiners)[:b]
+
+        # rare path: some ids exceeded L1 evictable capacity; add their
+        # contribution host-side, then apply the mean denominators exactly
+        out = _pooled_stack(tuple(payloads), tuple(slot_blocks), combiners,
+                            apply_mean=False)[:b]
+        dim = self.tables[0].dim
+        corr = np.zeros((b, len(self.tables), dim), np.float32)
+        for ti, ov_idx, ov_rows, h in overflow:
+            np.add.at(corr[:, ti, :], ov_idx // h, ov_rows)
+        out = out + jnp.asarray(corr)
+        mean_mask = np.asarray([c == "mean" for c in combiners])
+        if mean_mask.any():
+            denom = np.stack(
+                [np.maximum((blk >= 0).sum(axis=1), 1) for blk in blocks],
+                axis=1).astype(np.float32)[:, :, None]
+            out = jnp.where(jnp.asarray(mean_mask)[None, :, None],
+                            out / jnp.asarray(denom), out)
+        return out
 
     # -- online updates -------------------------------------------------------------
 

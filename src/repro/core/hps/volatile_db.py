@@ -4,13 +4,94 @@ Stands in for the paper's Redis-cluster VDB: embedding rows live in the
 system memory of (simulated) cluster nodes, sharded by id hash, each shard
 bounded by a capacity with LRU eviction. Partial copies only — misses fall
 through to the persistent DB.
+
+Vectorized to match the batched L1 path: each shard keeps its rows in a
+dense ``[cap, D]`` array with a sorted id index, so a whole query resolves
+with one ``np.searchsorted`` per shard and inserts are one slice-assign.
+Rows are **copied** on insert and on query — the store never aliases
+caller arrays (the seed kept views into the caller's row buffers, so
+later in-place writes by the caller silently mutated the DB).
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+class _Shard:
+    """One (simulated) cluster node: dense rows + sorted id index + LRU."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.rows: Optional[np.ndarray] = None     # [cap, D] lazily alloc'd
+        self.id_of = np.full(capacity, -1, np.int64)
+        self.tick = np.zeros(capacity, np.int64)   # LRU clock per slot
+        self.n = 0
+        self.sorted_ids = np.empty(0, np.int64)
+        self.sorted_slots = np.empty(0, np.int64)
+
+    def _rebuild(self) -> None:
+        occ = self.id_of[:self.n]
+        order = np.argsort(occ, kind="stable").astype(np.int64)
+        self.sorted_ids = occ[order]
+        self.sorted_slots = order
+
+    def find(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized id -> slot (-1 missing); ``ids`` need not be unique."""
+        if len(self.sorted_ids) == 0:
+            return np.full(len(ids), -1, np.int64)
+        pos = np.searchsorted(self.sorted_ids, ids)
+        pos = np.clip(pos, 0, len(self.sorted_ids) - 1)
+        return np.where(self.sorted_ids[pos] == ids,
+                        self.sorted_slots[pos], -1)
+
+    def insert(self, ids: np.ndarray, rows: np.ndarray, now: int) -> None:
+        # dedup keeping the LAST occurrence: batched online updates
+        # concatenate chronologically, so the newest row must win
+        uniq, idx_rev = np.unique(ids[::-1], return_index=True)
+        ids, rows = uniq, rows[len(rows) - 1 - idx_rev]
+        if self.rows is None:
+            self.rows = np.zeros((self.capacity, rows.shape[1]), np.float32)
+        slots = self.find(ids)
+        hit = slots >= 0
+        if hit.any():  # update in place (copies — no aliasing)
+            self.rows[slots[hit]] = rows[hit]
+            self.tick[slots[hit]] = now
+        new_ids, new_rows = ids[~hit], rows[~hit]
+        k = len(new_ids)
+        if k == 0:
+            return
+        free = min(k, self.capacity - self.n)
+        dest = np.arange(self.n, self.n + free, dtype=np.int64)
+        if k > free:  # LRU eviction, all victims in one argpartition
+            take = min(k - free, self.n)
+            if take > 0:
+                victims = np.argpartition(self.tick[:self.n],
+                                          take - 1)[:take].astype(np.int64)
+                dest = np.concatenate([dest, victims])
+        sel = np.arange(len(dest))
+        self.n += free
+        self.id_of[dest] = new_ids[sel]
+        self.rows[dest] = new_rows[sel]
+        self.tick[dest] = now
+        self._rebuild()
+
+    def evict_ids(self, ids: np.ndarray) -> None:
+        slots = self.find(np.unique(ids))
+        slots = slots[slots >= 0]
+        if len(slots) == 0:
+            return
+        # compact the occupied prefix so self.n stays the watermark
+        keep = np.setdiff1d(np.arange(self.n), slots)
+        m = len(keep)
+        self.id_of[:m] = self.id_of[keep]
+        if self.rows is not None:
+            self.rows[:m] = self.rows[keep]
+        self.tick[:m] = self.tick[keep]
+        self.id_of[m:self.n] = -1
+        self.n = m
+        self._rebuild()
 
 
 class VolatileDB:
@@ -18,49 +99,65 @@ class VolatileDB:
     def __init__(self, *, shards: int = 1, capacity_per_shard: int = 100000):
         self.shards = shards
         self.capacity = capacity_per_shard
-        # namespace (model, table) -> shard -> OrderedDict[id, row]
-        self._store: Dict[str, list] = {}
+        self._store: Dict[str, List[_Shard]] = {}  # table -> shard list
+        self._now = 0
         self.hits = 0
         self.misses = 0
 
-    def _ns(self, table: str) -> list:
+    def _ns(self, table: str) -> List[_Shard]:
         if table not in self._store:
-            self._store[table] = [OrderedDict() for _ in range(self.shards)]
+            self._store[table] = [_Shard(self.capacity)
+                                  for _ in range(self.shards)]
         return self._store[table]
 
     def query(self, table: str, ids: np.ndarray
               ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
-        """Returns (found_mask, rows) — rows is None if nothing found."""
+        """Returns (found_mask, rows) — rows is None if nothing found.
+
+        ``rows`` is freshly allocated (never a view into the store).
+        """
         ns = self._ns(table)
+        ids = np.asarray(ids, np.int64)
+        self._now += 1
         mask = np.zeros(len(ids), bool)
         rows = None
-        for i, id_ in enumerate(map(int, ids)):
-            shard = ns[id_ % self.shards]
-            row = shard.get(id_)
-            if row is not None:
-                shard.move_to_end(id_)
-                if rows is None:
-                    rows = np.zeros((len(ids), len(row)), np.float32)
-                rows[i] = row
-                mask[i] = True
+        shard_of = ids % self.shards
+        for s, shard in enumerate(ns):
+            in_s = np.nonzero(shard_of == s)[0]
+            if len(in_s) == 0 or shard.rows is None:
+                continue
+            slots = shard.find(ids[in_s])
+            hit = slots >= 0
+            if not hit.any():
+                continue
+            if rows is None:
+                rows = np.zeros((len(ids), shard.rows.shape[1]), np.float32)
+            rows[in_s[hit]] = shard.rows[slots[hit]]
+            shard.tick[slots[hit]] = self._now       # LRU touch
+            mask[in_s] = hit
         self.hits += int(mask.sum())
         self.misses += int((~mask).sum())
         return mask, rows
 
     def insert(self, table: str, ids: np.ndarray, rows: np.ndarray) -> None:
         ns = self._ns(table)
-        for id_, row in zip(map(int, ids), rows):
-            shard = ns[id_ % self.shards]
-            if id_ in shard:
-                shard.move_to_end(id_)
-            elif len(shard) >= self.capacity:
-                shard.popitem(last=False)
-            shard[id_] = np.asarray(row, np.float32)
+        ids = np.asarray(ids, np.int64)
+        rows = np.asarray(rows, np.float32)
+        self._now += 1
+        shard_of = ids % self.shards
+        for s, shard in enumerate(ns):
+            in_s = np.nonzero(shard_of == s)[0]
+            if len(in_s):
+                shard.insert(ids[in_s], rows[in_s].copy(), self._now)
 
     def evict(self, table: str, ids: np.ndarray) -> None:
         ns = self._ns(table)
-        for id_ in map(int, ids):
-            ns[id_ % self.shards].pop(id_, None)
+        ids = np.asarray(ids, np.int64)
+        shard_of = ids % self.shards
+        for s, shard in enumerate(ns):
+            in_s = np.nonzero(shard_of == s)[0]
+            if len(in_s):
+                shard.evict_ids(ids[in_s])
 
     def size(self, table: str) -> int:
-        return sum(len(s) for s in self._ns(table))
+        return sum(s.n for s in self._ns(table))

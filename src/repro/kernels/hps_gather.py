@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: batched row gather from the HPS L1 device payload.
+
+The serving hot path reads ``payload[slots]`` for a whole query at once.
+Like ``embedding_lookup``, random row access is reformulated as a
+streaming one-hot matmul so the MXU does the work and the payload streams
+HBM -> VMEM tile by tile — no per-row gather, no host round-trips:
+
+    out[n, :] = sum_{c-tiles} onehot(slots[n], c-tile) @ payload[c-tile, :]
+
+Negative slots (query padding / ids not resident) produce zero rows, which
+the cache's overflow path overwrites separately.
+
+Grid layout: the payload-tile reduction dim is trailing (Pallas TPU
+requirement for output-block accumulation): grid = (N/bN, C/bC).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(slots_ref, payload_ref, o_ref, *, bc: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    slots = slots_ref[...][:, 0]                      # [bN]
+    bn = slots.shape[0]
+    rel = slots - c * bc
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, bc), 1)
+    onehot = ((rel[:, None] == iota) & (slots >= 0)[:, None])
+    o_ref[...] += jnp.dot(onehot.astype(jnp.float32),
+                          payload_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+
+def gather_rows(payload: jax.Array, slots: jax.Array, *,
+                block_n: int = 256, block_c: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """``payload [C, D]`` (C % block_c == 0), ``slots [N, 1]`` int32
+    (N % block_n == 0, -1 = hole) -> ``[N, D]`` f32."""
+    c, d = payload.shape
+    n = slots.shape[0]
+    grid = (n // block_n, c // block_c)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, bc=block_c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(slots, payload)

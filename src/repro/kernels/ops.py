@@ -88,6 +88,62 @@ def kernel_pool(mega: jax.Array, rows: jax.Array, *, combiner: str = "sum",
 
 
 # ---------------------------------------------------------------------------
+# HPS cache gather (serving hot path: payload[slots] in one dispatch)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_c", "use_kernel"))
+def _cache_gather_jit(payload, slots, block_n, block_c, use_kernel):
+    if not use_kernel:
+        # off-TPU: the test oracle IS the implementation (the one-hot-
+        # matmul kernel only pays off on the MXU; interpreting it on CPU
+        # would turn the serving hot path into a dense matmul per query)
+        from repro.kernels import ref as _ref
+        return _ref.cache_gather_ref(payload, slots)
+    from repro.kernels import hps_gather as _hg
+    c, d = payload.shape
+    n = slots.shape[0]
+    bn = min(block_n, _round_up(n, 8))
+    bc = min(block_c, _round_up(c, 8))
+    cp, np_ = _round_up(c, bc), _round_up(n, bn)
+    ppad = jnp.pad(payload, ((0, cp - c), (0, 0)))
+    spad = jnp.pad(slots.astype(jnp.int32), (0, np_ - n),
+                   constant_values=-1)[:, None]
+    out = _hg.gather_rows(ppad, spad, block_n=bn, block_c=bc,
+                          interpret=_interpret())
+    return out[:n]
+
+
+def pooled_cache_lookup(payload: jax.Array, slots: jax.Array) -> jax.Array:
+    """Serving-path pooled gather: ``payload [C, D]``, ``slots [B, H]``
+    (-1 = hole) -> sum-pooled ``[B, D]``.
+
+    Inference-only (no vjp): the MXU one-hot-matmul kernel on TPU, the
+    equivalent XLA take+sum elsewhere — same switch as ``cache_gather``.
+    """
+    if _interpret():
+        from repro.kernels import ref as _ref
+        return _ref.embedding_lookup_ref(payload, slots)
+    return fused_embedding_lookup(payload, slots)
+
+
+def cache_gather(payload: jax.Array, slots, *, block_n: int = 256,
+                 block_c: int = 512, use_kernel=None) -> jax.Array:
+    """``payload [C, D]``, ``slots [N]`` (-1 = hole -> zero row) -> ``[N, D]``.
+
+    Jitted wrapper: one device dispatch per call after the first trace,
+    so ``DeviceEmbeddingCache.query`` costs O(1) dispatches per batch.
+    On TPU the read is the ``hps_gather`` Pallas kernel; elsewhere the
+    same jit lowers to the equivalent XLA gather (``use_kernel=True``
+    forces the kernel in interpret mode — how tests validate it).
+    """
+    if use_kernel is None:
+        use_kernel = not _interpret()
+    return _cache_gather_jit(payload, jnp.asarray(slots), block_n, block_c,
+                             use_kernel)
+
+
+# ---------------------------------------------------------------------------
 # DLRM dot interaction
 # ---------------------------------------------------------------------------
 

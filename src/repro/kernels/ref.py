@@ -38,6 +38,14 @@ def embedding_grad_ref(table_shape, rows: jax.Array,
     return out[:v]
 
 
+def cache_gather_ref(payload: jax.Array, slots: jax.Array) -> jax.Array:
+    """``payload [C, D]``, ``slots [N]`` int (-1 = hole) -> ``[N, D]`` f32."""
+    valid = slots >= 0
+    safe = jnp.where(valid, slots, 0)
+    rows = jnp.take(payload, safe, axis=0).astype(jnp.float32)
+    return jnp.where(valid[:, None], rows, 0.0)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True, window=None) -> jax.Array:
     """Naive softmax attention oracle: ``q [B, S, Hq, D]``,

@@ -9,19 +9,22 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
+from repro import compat
+from repro.compat import AxisType
 from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_mesh(cfg: MeshConfig) -> Mesh:
-    return jax.make_mesh(
+    return compat.make_mesh(
         cfg.shape, cfg.axes, axis_types=(AxisType.Auto,) * len(cfg.axes)
     )
 
@@ -29,7 +32,7 @@ def make_mesh(cfg: MeshConfig) -> Mesh:
 def make_test_mesh(shape: Sequence[int] = (1, 1),
                    axes: Sequence[str] = ("data", "model")) -> Mesh:
     """A mesh sized for whatever devices exist (CPU tests)."""
-    return jax.make_mesh(
+    return compat.make_mesh(
         tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes)
     )
 

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 from repro.configs.base import LMConfig, ShapeConfig
 from repro.models.lm import moe as moe_lib
 from repro.models.lm import rglru as rglru_lib
@@ -341,7 +343,7 @@ class LMModel:
             part = jnp.where(ok[..., None], part.astype(self.cd), 0)
             return jax.lax.psum(part, axes)
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             local, mesh=self.mesh,
             in_specs=(P(axes, None), P(dspec, None), P(dspec, None)),
             out_specs=P(dspec, None, None), check_vma=False)
@@ -427,7 +429,7 @@ class LMModel:
                  "w3": P("model", None, None),
                  "w2": P("model", None, None),
                  "norm": jax.tree.map(lambda _: P(None), mp["norm"])}
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             functools.partial(moe_lib.moe_apply_local, cfg=self.cfg,
                               model_axis="model",
                               model_axis_size=self.model_size),

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 from repro.configs.base import LMConfig
 
 
@@ -225,7 +227,7 @@ def seqpar_attention(q, k, v, mesh, *, causal: bool = True,
                                  k_chunk=k_chunk, q_pos0=pq0,
                                  p_dtype=vf.dtype, folded=True)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, "model", None, None), P(dp, None, None, None),
                   P(dp, None, None, None)),

@@ -5,6 +5,14 @@ drains up to ``max_batch`` of them, the HPS resolves embeddings (L1 device
 cache -> L2 VDB -> L3 PDB), and the jitted dense net computes predictions.
 ``deploy_from_training`` exports a trained model into the PDB — the
 offline-training deployment path; online updates arrive via the bus.
+
+The embedding path is fully batched end-to-end: the coalesced request
+batch goes through ``HPS.lookup`` as ONE vectorized resolve (per-table
+misses coalesce into one fetch + one payload scatter; the stacked pooled
+``[B, T, D]`` comes back in a single jitted device call) and feeds the
+jitted dense net without bouncing through host memory — so batching
+requests amortizes both the host index work and the device dispatches,
+which is what produces the paper's batch-dependent speedup curve.
 """
 from __future__ import annotations
 
@@ -54,10 +62,14 @@ class InferenceServer:
 
     def __init__(self, model, dense_params: Dict, hps: HPS, *,
                  max_batch: int = 1024, needs_wide: bool = False,
-                 wide_hps: Optional[HPS] = None):
+                 wide_hps: Optional[HPS] = None,
+                 hotness: Optional[Sequence[int]] = None):
         self.model = model
         self.hps = hps
         self.wide_hps = wide_hps
+        #: optional per-table hotness forwarded to HPS.lookup (validated
+        #: there against the request shape)
+        self.hotness = list(hotness) if hotness is not None else None
         self.dense_params = dense_params
         self.max_batch = max_batch
         self._predict = jax.jit(
@@ -73,9 +85,9 @@ class InferenceServer:
 
     def predict(self, dense: np.ndarray, cat: np.ndarray) -> np.ndarray:
         t0 = time.perf_counter()
-        emb = self.hps.lookup(cat)
+        emb = self.hps.lookup(cat, self.hotness)
         if self.wide_hps is not None:
-            wide = self.wide_hps.lookup(cat)
+            wide = self.wide_hps.lookup(cat, self.hotness)
             out = self._predict(self.dense_params, jnp.asarray(dense),
                                 emb, wide)
         else:

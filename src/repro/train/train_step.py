@@ -28,6 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 from repro.configs.base import TrainConfig
 from repro.optim import optimizers as dense_opt_lib
 from repro.optim.sparse import make_sparse
@@ -200,7 +202,7 @@ def build_manual_train_step(model, tcfg: TrainConfig, mesh) -> Callable:
         from repro.data.pipeline import batch_shardings  # specs only
         b_spec = {"dense": P(dp_axes, None), "cat": P(dp_axes, None, None),
                   "label": P(dp_axes)}
-        loss, grads = jax.shard_map(
+        loss, grads = compat.shard_map(
             grad_shard_fn, mesh=mesh,
             in_specs=(specs, b_spec),
             out_specs=(P(), specs),

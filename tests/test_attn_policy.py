@@ -6,6 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dep (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import LM_ARCHS, reduce_for_smoke

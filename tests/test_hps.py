@@ -34,12 +34,12 @@ def test_l1_hit_miss_and_dynamic_insertion():
     out = np.asarray(c.query(np.asarray([3, 5, 3])))
     np.testing.assert_allclose(out, store[[3, 5, 3]])
     # miss accounting is per-incoming-id (both 3s miss: insertion happens
-    # after the scan); the duplicate is deduped at insert, not at fetch
+    # after the index probe); the duplicate is deduped before the fetch
     assert c.hits == 0 and c.misses == 3
     out2 = np.asarray(c.query(np.asarray([3, 5])))
     np.testing.assert_allclose(out2, store[[3, 5]])
     assert c.hits == 2 and c.misses == 3      # second query: all hits
-    assert fetches == [[3, 5, 3]]             # one batched fetch
+    assert fetches == [[3, 5]]                # one batched, deduped fetch
 
 
 def test_l1_lfu_eviction_keeps_hot():
@@ -49,7 +49,7 @@ def test_l1_lfu_eviction_keeps_hot():
         c.query(np.asarray([0]))              # id 0 becomes hot
     c.query(np.asarray([1, 2, 3]))            # fill
     c.query(np.asarray([10, 11, 12]))         # force 3 evictions
-    assert 0 in c._slot_of                    # the hot id survived
+    assert 0 in c.resident_ids()              # the hot id survived
 
 
 def test_l1_refresh_propagates_updates():

@@ -1,0 +1,307 @@
+"""The vectorized HPS lookup path: Pallas gather kernel vs oracle,
+batched-query equivalence against ground truth, batch-aware eviction,
+overflow handling, refresh-vs-query thread safety, VDB copy semantics,
+and the validated ``HPS.lookup`` query shapes (hotness, mean combiner)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import EmbeddingTableConfig
+from repro.core.hps.embedding_cache import DeviceEmbeddingCache
+from repro.core.hps.hps import HPS
+from repro.core.hps.persistent_db import PersistentDB
+from repro.core.hps.volatile_db import VolatileDB
+from repro.kernels import ops, ref
+
+
+def _store(vocab=200, dim=8, seed=0):
+    return np.random.default_rng(seed).normal(
+        size=(vocab, dim)).astype(np.float32)
+
+
+def _pdb_with_table(tmp_path, model="m", table="t0", vocab=100, dim=4):
+    pdb = PersistentDB(str(tmp_path / "pdb"))
+    rows = np.arange(vocab * dim, dtype=np.float32).reshape(vocab, dim)
+    pdb.create_table(model, table, vocab, dim, initial=rows)
+    return pdb, rows
+
+
+# ---------------------------------------------------------------------------
+# Pallas gather kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,d", [(7, 24, 8), (64, 512, 32), (200, 100, 4)])
+def test_gather_kernel_matches_ref(n, c, d):
+    rng = np.random.default_rng(c)
+    payload = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+    slots = rng.integers(-1, c, size=n)
+    got = ops.cache_gather(payload, slots, use_kernel=True)  # interpret mode
+    want = ref.cache_gather_ref(payload, jnp.asarray(slots))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_gather_native_path_matches_kernel():
+    payload = jnp.asarray(_store(50, 8))
+    slots = np.asarray([0, 49, -1, 7, 7])
+    a = ops.cache_gather(payload, slots, use_kernel=True)
+    b = ops.cache_gather(payload, slots, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched cache vs ground truth (with eviction churn)
+# ---------------------------------------------------------------------------
+
+def test_batched_query_matches_store_under_churn():
+    store = _store(vocab=200, dim=8)
+    c = DeviceEmbeddingCache(16, 8, fetch_fn=lambda ids: store[ids])
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        ids = rng.integers(0, 200, size=rng.integers(1, 40))
+        np.testing.assert_allclose(np.asarray(c.query(ids)), store[ids],
+                                   rtol=1e-5, atol=1e-6)
+    assert len(c.resident_ids()) <= 16
+
+
+def test_single_fetch_and_scatter_per_query(monkeypatch):
+    store = _store()
+    fetches, scatters = [], []
+    c = DeviceEmbeddingCache(
+        8, 8, fetch_fn=lambda ids: fetches.append(len(ids)) or store[ids])
+    orig = DeviceEmbeddingCache._scatter
+    monkeypatch.setattr(
+        DeviceEmbeddingCache, "_scatter",
+        lambda self, s, r: scatters.append(len(s)) or orig(self, s, r))
+    c.query(np.asarray([5, 1, 5, 9, 1, 3]))       # 4 unique misses
+    assert fetches == [4] and scatters == [4]
+    fetches.clear(); scatters.clear()
+    c.query(np.asarray([5, 1, 9, 3]))             # all hits: no device write
+    assert fetches == [] and scatters == []
+
+
+# ---------------------------------------------------------------------------
+# batch-aware eviction
+# ---------------------------------------------------------------------------
+
+def test_same_batch_insertions_never_evict_each_other():
+    store = _store()
+    c = DeviceEmbeddingCache(4, 8, fetch_fn=lambda ids: store[ids])
+    c.query(np.asarray([0, 1, 2, 3]))             # fill
+    out = np.asarray(c.query(np.asarray([10, 11, 12, 13])))
+    np.testing.assert_allclose(out, store[[10, 11, 12, 13]], rtol=1e-5)
+    # ALL four new ids are resident — the batch displaced the old ids,
+    # not its own insertions (the seed's per-id argmin evicted rows it
+    # had inserted moments earlier in the same query)
+    assert set(c.resident_ids()) == {10, 11, 12, 13}
+
+
+def test_eviction_protects_current_batch_hits():
+    store = _store()
+    c = DeviceEmbeddingCache(2, 8, fetch_fn=lambda ids: store[ids])
+    c.query(np.asarray([1]))
+    c.query(np.asarray([2, 2, 2]))                # 2 is now the LFU-hottest
+    out = np.asarray(c.query(np.asarray([1, 9])))
+    np.testing.assert_allclose(out, store[[1, 9]], rtol=1e-5)
+    # 9 needed a victim; 1 is a hit of this very query so despite 2's
+    # higher frequency the cache must not corrupt the row it returns
+    assert 1 in c.resident_ids() and 9 in c.resident_ids()
+
+
+def test_overflow_batch_larger_than_capacity():
+    store = _store()
+    c = DeviceEmbeddingCache(2, 8, fetch_fn=lambda ids: store[ids])
+    ids = np.asarray([7, 3, 9, 11, 3, 20])        # 5 unique > capacity 2
+    np.testing.assert_allclose(np.asarray(c.query(ids)), store[ids],
+                               rtol=1e-5, atol=1e-6)
+    res = c.resident_ids()
+    assert len(res) == 2 and set(res) <= {7, 3, 9, 11, 20}
+    # the duplicated id (hottest miss) must be among the cached ones
+    assert 3 in res
+    # and the cache still serves correctly afterwards
+    np.testing.assert_allclose(np.asarray(c.query(np.asarray([3]))),
+                               store[[3]], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# refresh vs query thread safety
+# ---------------------------------------------------------------------------
+
+def test_refresh_vs_query_thread_safety():
+    store = _store(vocab=64, dim=4)
+    c = DeviceEmbeddingCache(16, 4, fetch_fn=lambda ids: store[ids])
+    stop = threading.Event()
+    errors = []
+
+    def refresher():
+        while not stop.is_set():
+            c.refresh_once()
+
+    def querier(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(30):
+                ids = rng.integers(0, 64, size=8)
+                np.testing.assert_allclose(np.asarray(c.query(ids)),
+                                           store[ids], rtol=1e-5)
+        except Exception as e:  # surfaced in the main thread below
+            errors.append(e)
+
+    threads = [threading.Thread(target=querier, args=(i,)) for i in range(3)]
+    rt = threading.Thread(target=refresher)
+    rt.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rt.join()
+    assert not errors
+
+
+# ---------------------------------------------------------------------------
+# VolatileDB: vectorized + copy semantics
+# ---------------------------------------------------------------------------
+
+def test_vdb_never_aliases_caller_arrays():
+    vdb = VolatileDB()
+    rows = np.ones((2, 4), np.float32)
+    vdb.insert("t", np.asarray([1, 2]), rows)
+    rows[:] = 777.0                               # caller mutates its buffer
+    _, got = vdb.query("t", np.asarray([1, 2]))
+    np.testing.assert_allclose(got, 1.0)          # store unaffected
+    got[:] = 555.0                                # caller mutates the result
+    _, again = vdb.query("t", np.asarray([1, 2]))
+    np.testing.assert_allclose(again, 1.0)
+
+
+def test_vdb_batched_roundtrip_sharded():
+    vdb = VolatileDB(shards=3, capacity_per_shard=50)
+    store = _store(vocab=100, dim=6)
+    ids = np.random.default_rng(5).permutation(100)[:60]
+    vdb.insert("t", ids, store[ids])
+    mask, rows = vdb.query("t", ids)
+    assert mask.all()
+    np.testing.assert_allclose(rows, store[ids], rtol=1e-6)
+    mask, _ = vdb.query("t", np.asarray([101, 102]) % 101)
+    assert not mask[0] or not mask[1]             # at least one true miss
+
+
+def test_vdb_duplicate_ids_last_write_wins():
+    # batched online updates concatenate chronologically (Producer.flush),
+    # so a duplicated id in one insert must keep the NEWEST row
+    vdb = VolatileDB()
+    ids = np.asarray([5, 5, 7])
+    rows = np.stack([np.full(2, 1.0), np.full(2, 2.0),
+                     np.full(2, 3.0)]).astype(np.float32)
+    vdb.insert("t", ids, rows)
+    _, got = vdb.query("t", np.asarray([5, 7]))
+    np.testing.assert_allclose(got[0], 2.0)
+    np.testing.assert_allclose(got[1], 3.0)
+
+
+def test_vdb_update_in_place():
+    vdb = VolatileDB()
+    vdb.insert("t", np.asarray([4]), np.ones((1, 2), np.float32))
+    vdb.insert("t", np.asarray([4]), np.full((1, 2), 9.0, np.float32))
+    _, rows = vdb.query("t", np.asarray([4]))
+    np.testing.assert_allclose(rows[0], 9.0)
+    assert vdb.size("t") == 1
+
+
+# ---------------------------------------------------------------------------
+# HPS.lookup: shape validation, hotness, combiners
+# ---------------------------------------------------------------------------
+
+def test_lookup_rejects_table_mismatch(tmp_path):
+    pdb, _ = _pdb_with_table(tmp_path)
+    hps = HPS("m", [EmbeddingTableConfig("t0", 100, 4)], pdb)
+    with pytest.raises(ValueError, match="does not match"):
+        hps.lookup(np.zeros((2, 3, 1), np.int32))
+    with pytest.raises(ValueError, match="hotness"):
+        hps.lookup(np.zeros((2, 2), np.int32))    # 2-D needs hotness
+    with pytest.raises(ValueError, match="hotness"):
+        hps.lookup(np.zeros((2, 1, 2), np.int32), hotness=[1, 1])
+
+
+def test_lookup_empty_batch(tmp_path):
+    pdb, _ = _pdb_with_table(tmp_path)
+    hps = HPS("m", [EmbeddingTableConfig("t0", 100, 4)], pdb)
+    out = np.asarray(hps.lookup(np.zeros((0, 1, 2), np.int32)))
+    assert out.shape == (0, 1, 4)
+
+
+def test_lookup_honors_hotness_mask(tmp_path):
+    pdb, rows = _pdb_with_table(tmp_path)
+    hps = HPS("m", [EmbeddingTableConfig("t0", 100, 4)], pdb)
+    cat = np.asarray([[[3, 7]]], np.int32)
+    out = np.asarray(hps.lookup(cat, hotness=[1]))  # col 1 masked off
+    np.testing.assert_allclose(out[0, 0], rows[3])
+
+
+def test_lookup_2d_hotness_split(tmp_path):
+    pdb = PersistentDB(str(tmp_path / "pdb"))
+    dim = 4
+    stores = {}
+    for name in ("a", "b"):
+        stores[name] = _store(50, dim, seed=ord(name))
+        pdb.create_table("m", name, 50, dim, initial=stores[name])
+    tabs = [EmbeddingTableConfig("a", 50, dim, hotness=2),
+            EmbeddingTableConfig("b", 50, dim, hotness=1)]
+    hps = HPS("m", tabs, pdb)
+    cat = np.asarray([[1, 2, 5], [3, -1, 6]], np.int32)  # a:[:2], b:[2:]
+    out = np.asarray(hps.lookup(cat, hotness=[2, 1]))
+    np.testing.assert_allclose(out[0, 0], stores["a"][1] + stores["a"][2],
+                               rtol=1e-5)
+    np.testing.assert_allclose(out[1, 0], stores["a"][3], rtol=1e-5)
+    np.testing.assert_allclose(out[:, 1], stores["b"][[5, 6]], rtol=1e-5)
+
+
+def test_lookup_mean_combiner(tmp_path):
+    pdb, rows = _pdb_with_table(tmp_path)
+    hps = HPS("m", [EmbeddingTableConfig("t0", 100, 4, hotness=3,
+                                         combiner="mean")], pdb)
+    cat = np.asarray([[[2, 4, -1]], [[6, -1, -1]]], np.int32)
+    out = np.asarray(hps.lookup(cat))
+    np.testing.assert_allclose(out[0, 0], (rows[2] + rows[4]) / 2, rtol=1e-5)
+    np.testing.assert_allclose(out[1, 0], rows[6], rtol=1e-5)
+
+
+def test_lookup_overflow_path_exact(tmp_path):
+    pdb, rows = _pdb_with_table(tmp_path)
+    hps = HPS("m", [EmbeddingTableConfig("t0", 100, 4, hotness=8,
+                                         combiner="mean")], pdb,
+              cache_capacity=2)
+    cat = np.arange(8, dtype=np.int32).reshape(1, 1, 8) * 3
+    out = np.asarray(hps.lookup(cat))
+    np.testing.assert_allclose(out[0, 0], rows[::3][:8].mean(axis=0),
+                               rtol=1e-5)
+
+
+def test_lookup_batched_matches_reference(tmp_path):
+    """Multi-table, multi-hot batched lookup vs a direct numpy oracle."""
+    pdb = PersistentDB(str(tmp_path / "pdb"))
+    dim, vocab = 8, 80
+    stores = {}
+    tabs = []
+    for i, name in enumerate(("x", "y", "z")):
+        stores[name] = _store(vocab, dim, seed=10 + i)
+        pdb.create_table("m", name, vocab, dim, initial=stores[name])
+        tabs.append(EmbeddingTableConfig(name, vocab, dim, hotness=4))
+    hps = HPS("m", tabs, pdb, cache_capacity=32)
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        cat = rng.integers(-1, vocab, size=(6, 3, 4)).astype(np.int32)
+        out = np.asarray(hps.lookup(cat))
+        for ti, name in enumerate(("x", "y", "z")):
+            ids = cat[:, ti, :]
+            want = np.zeros((6, dim), np.float32)
+            for b in range(6):
+                for h in range(4):
+                    if ids[b, h] >= 0:
+                        want[b] += stores[name][ids[b, h]]
+            np.testing.assert_allclose(out[:, ti], want, rtol=1e-4,
+                                       atol=1e-5)

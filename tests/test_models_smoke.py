@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
+
 from repro.configs.base import TrainConfig
 from repro.configs.registry import (
     LM_ARCHS, RECSYS_ARCHS, reduce_for_smoke, reduce_recsys_for_smoke,
@@ -193,7 +195,7 @@ def test_moe_dispatch_matches_dense_reference():
     p = moe_lib.moe_init(key, cfg, model_axis_size=1)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
                           jnp.float32)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         functools.partial(moe_lib.moe_apply_local, cfg=cfg,
                           model_axis="model", model_axis_size=1),
         mesh=mesh,
