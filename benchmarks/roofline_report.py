@@ -3,7 +3,12 @@
 Reads ``artifacts/dryrun/*.json`` and emits a markdown table with the
 three roofline terms, the dominant bottleneck, the model-FLOPs ratio, and
 the roofline fraction (model_flops-based MFU bound at the step-time lower
-bound)."""
+bound).
+
+Also re-surfaces the HPS L1 lookup/pipeline numbers that
+``benchmarks.hps_speedup`` persisted to ``artifacts/hps_lookup.json``:
+the serving-path regressions ride along in ``bench_results.csv`` whenever
+the roofline report runs, even if the (slow) HPS bench itself did not."""
 from __future__ import annotations
 
 import glob
@@ -73,7 +78,20 @@ def table(outdir: str = "artifacts/dryrun", mesh: Optional[str] = None,
     return "\n".join(rows)
 
 
+def l1_lookup_rows(path: str = "artifacts/hps_lookup.json") -> List[Dict]:
+    """The persisted HPS L1 lookup/pipeline rows (empty if never run)."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
 def run(report):
+    for row in l1_lookup_rows():
+        # re-emit under the roofline namespace so the serving numbers
+        # land in bench_results.csv alongside the step-time bounds
+        report.add(f"roofline.l1.{row['name']}",
+                   row["us_per_call"] * 1e-6, row["derived"])
     recs = load_records()
     ok = [r for r in recs if r.get("status") == "ok"]
     if not ok:

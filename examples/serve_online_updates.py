@@ -50,6 +50,8 @@ def main():
         deploy_from_training(model, params, pdb, "online")
         hps = HPS("online", cfg.tables, pdb, cache_capacity=512, bus=bus)
         dense = {k: v for k, v in params.items() if k != "embedding"}
+        # refresh is drained manually below (the serve loop isn't started,
+        # so the server's own refresh_budget would not come into play)
         server = InferenceServer(model, dense, hps)
 
         probe = data.batch(777)
@@ -75,8 +77,14 @@ def main():
                     ids = ids[ids >= 0]
                     producer.send(t.name, ids, mega[off + ids])
                 producer.flush()
-                applied = hps.apply_updates()      # inference node polls
-                refreshed = hps.refresh_caches()   # L1 refresh cycle
+                # inference node polls the bus (updates land in L2/L3 and
+                # mark the touched L1 rows dirty), then drains the
+                # hotness-ordered refresh backlog in bounded chunks — the
+                # same path the serve loop drives between batches
+                applied = hps.apply_updates()
+                refreshed = 0
+                while hps.refresh_backlog():
+                    refreshed += hps.refresh_step(budget=128)
                 p = server.predict(probe["dense"], probe["cat"])
                 drift = float(np.abs(p - p0).mean())
                 print(f"window @step {i}: applied {applied} messages, "
@@ -84,6 +92,21 @@ def main():
                       f"prediction drift {drift:.5f}")
         assert drift > 0, "online updates must reach the server"
         print("online updates propagated trainer -> bus -> VDB/PDB -> L1 ✓")
+
+        # -- the full L1/L2/L3 serving picture ------------------------------
+        stats = hps.stats()
+        hit = np.mean(list(stats["l1_hit_rate"].values()))
+        l2 = stats["l2"]
+        l3_rows = sum(stats["l3_fetches"]["rows"].values())
+        print(f"L1: hit_rate={hit:.3f} over {len(hps.caches)} cached "
+              f"tables; refresh: {stats['refresh']['rows_refreshed']} rows "
+              f"in {stats['refresh']['chunks']} chunks, backlog "
+              f"{stats['refresh']['backlog']}")
+        print(f"L2: {stats['l2_hits']} hits / {stats['l2_misses']} misses; "
+              f"{sum(t['rows'] for t in l2['tables'].values())} rows over "
+              f"{len(l2['tables'])} tables x {l2['shards']} shard(s)")
+        print(f"L3: {sum(stats['l3_fetches']['calls'].values())} fetches "
+              f"({l3_rows} rows) fell through to the PDB")
 
 
 if __name__ == "__main__":

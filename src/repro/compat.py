@@ -14,6 +14,13 @@ and 0.5+/0.6+ goes through this module — call sites never feature-test
 * ``make_mesh``    — the ``axis_types=`` kwarg is absent before 0.5;
                      dropped when unsupported (all axes default to Auto,
                      which is what every call site passes anyway).
+* ``shard_map_mesh`` — JAX >= 0.5 wants an ``AbstractMesh`` when a
+                     ``shard_map`` is staged under ``jit`` (a concrete
+                     Mesh bakes device ids into the jaxpr and is
+                     deprecated there); 0.4.x has no AbstractMesh and
+                     takes the concrete Mesh. Call sites that build a
+                     shard_map inside a jitted function route the mesh
+                     through this helper.
 """
 from __future__ import annotations
 
@@ -23,7 +30,8 @@ from typing import Callable, Optional, Sequence
 import jax
 from jax.sharding import Mesh
 
-__all__ = ["AxisType", "HAS_AXIS_TYPE", "make_mesh", "shard_map"]
+__all__ = ["AxisType", "HAS_AXIS_TYPE", "make_mesh", "shard_map",
+           "shard_map_mesh"]
 
 
 # -- AxisType ----------------------------------------------------------------
@@ -75,3 +83,21 @@ else:  # JAX 0.4.x
                   check_vma: bool = True) -> Callable:
         return _shard_map_04(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_rep=check_vma)
+
+
+# -- shard_map_mesh ----------------------------------------------------------
+
+def shard_map_mesh(mesh: Mesh):
+    """The mesh object to hand ``shard_map``: on JAX >= 0.6, staging a
+    concrete ``Mesh`` under ``jit`` is deprecated (it bakes device ids
+    into the jaxpr), so return the ``AbstractMesh`` while tracing; on
+    0.4.x (no ``jax.shard_map``, no AbstractMesh support) and for eager
+    calls, the concrete ``Mesh`` is both required and sufficient."""
+    if hasattr(jax, "shard_map"):
+        try:
+            tracing = not jax.core.trace_state_clean()
+        except AttributeError:  # jax.core reshuffles across versions
+            tracing = False
+        if tracing:
+            return getattr(mesh, "abstract_mesh", mesh)
+    return mesh

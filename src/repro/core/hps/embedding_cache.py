@@ -1,11 +1,12 @@
 """GPU embedding cache (HPS level 1) — batched, vectorized lookup path.
 
-Device-resident payload ``[C, D]`` + host-side index, following HugeCTR's
-split between the GDDR payload and its host-managed hash index (which is
-also the only TPU-viable layout — DESIGN.md §2). Features from the paper:
-optimized batched query, **dynamic insertion** (misses get cached), and an
-**asynchronous refresh** thread that re-pulls resident rows from the lower
-levels so online-training updates propagate without blocking queries.
+Device-resident payload + host-side index, following HugeCTR's split
+between the GDDR payload and its host-managed hash index (which is also
+the only TPU-viable layout — DESIGN.md §2). Features from the paper:
+optimized batched query, **dynamic insertion** (misses get cached), and
+an **update-propagation scheduler** that re-pulls resident rows from the
+lower levels so online-training updates reach serving without blocking
+queries.
 
 Architecture (the batched-query design of the companion HPS paper,
 arXiv 2210.08804):
@@ -14,11 +15,24 @@ arXiv 2210.08804):
   a whole query resolves with ONE ``np.searchsorted`` — no per-id Python
   dict probes.
 * All misses in a query are deduplicated and coalesced into ONE
-  ``fetch_fn`` call and ONE scatter onto the device payload
-  (``payload.at[slots].set(rows)``).
-* The payload read is a single Pallas gather kernel dispatch
-  (``kernels.hps_gather``), so ``query`` is one device round-trip
-  regardless of batch size: O(1) device dispatches per batch.
+  ``fetch_fn`` call and ONE scatter onto the device payload.
+* Physical slot storage lives in a ``ShardedPayloadStore``: a single
+  payload by default, or row-striped across a mesh (slot ``s`` on stripe
+  ``s % N``) so the hot set scales past one device's HBM. The logical
+  slot indirection keeps everything in this file layout-agnostic.
+* The payload read is a single gather dispatch (``kernels.hps_gather``
+  on TPU), so ``query`` is one device round-trip regardless of batch
+  size: O(1) device dispatches per batch.
+
+The query path is split into a **host stage** (``probe``: index probe +
+coalesced miss fetch) and a **device stage** (``commit``: the one payload
+scatter + snapshot binding) so a pipelined caller can overlap table
+*t+1*'s probe with table *t*'s scatter. The deferred scatter is flushed
+by whoever touches the cache next (probe, commit, or refresh — all under
+the cache lock), so the payload is always current before any new index
+decision, and each plan's snapshot is bound before any *later* query can
+evict the slots it references. ``acquire_slots`` = probe + commit
+back-to-back, which reproduces the unpipelined behavior exactly.
 
 Eviction is LFU-with-aging (hot features stick, per the paper's intent)
 and **batch-aware**: victims are selected in one vectorized pass over the
@@ -27,6 +41,14 @@ about to read — are never its eviction victims. If a single query holds
 more unique ids than the evictable capacity, the most frequent misses are
 cached and the remainder is served through a rare overflow fixup (one
 extra scatter into the output), never corrupting resident rows.
+
+Refresh is **hotness-scheduled**: online updates (or a poll cycle) mark
+resident rows dirty; ``refresh_chunk`` claims up to a per-cycle budget of
+the dirtiest-AND-hottest rows (LFU counters order the backlog), re-pulls
+them from the lower levels outside the lock, and scatters only rows whose
+id->slot binding survived — so refresh interleaves with serving instead
+of stopping the world. ``refresh_once`` (mark everything + drain) remains
+as the full-repull convenience.
 """
 from __future__ import annotations
 
@@ -37,28 +59,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.core.hps.payload_store import ShardedPayloadStore
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+class LookupPlan:
+    """Host-stage output: resolved slots + out-of-band overflow rows,
+    with the payload snapshot bound at device-stage time (``commit``)."""
+
+    __slots__ = ("slots", "ov_idx", "ov_rows", "payload")
+
+    def __init__(self, slots: np.ndarray, ov_idx: np.ndarray,
+                 ov_rows: np.ndarray, payload: Optional[jax.Array]):
+        self.slots = slots
+        self.ov_idx = ov_idx
+        self.ov_rows = ov_rows
+        self.payload = payload
 
 
 class DeviceEmbeddingCache:
 
     def __init__(self, capacity: int, dim: int, *,
                  fetch_fn: Callable[[np.ndarray], np.ndarray],
-                 decay: float = 0.99):
-        """``fetch_fn(missing_ids) -> rows`` pulls from VDB/PDB."""
+                 decay: float = 0.99, shards: int = 1, mesh=None,
+                 refresh_chunk_rows: int = 1024):
+        """``fetch_fn(missing_ids) -> rows`` pulls from VDB/PDB.
+
+        ``shards``/``mesh`` select the striped payload layout (see
+        ``payload_store``); ``shards=1`` is the classic single payload.
+        """
         self.capacity = capacity
         self.dim = dim
         self.fetch_fn = fetch_fn
         self.decay = decay
-        # physical rows padded to the gather kernel's tile so the jitted
-        # gather never copies the payload to pad it
-        bc = min(512, _round_up(capacity, 8))
-        self._phys_rows = _round_up(capacity, bc)
-        self.payload = jnp.zeros((self._phys_rows, dim), jnp.float32)
+        self._store = ShardedPayloadStore(capacity, dim, shards=shards,
+                                          mesh=mesh)
         self._id_of = np.full(capacity, -1, np.int64)
         self._freq = np.zeros(capacity, np.float64)
         self._next_free = 0
@@ -69,9 +103,29 @@ class DeviceEmbeddingCache:
         self._sorted_slots = np.empty(0, np.int64)
         self.hits = 0
         self.misses = 0
+        # deferred device stage: at most one pending scatter, plus the
+        # plan (if any) whose snapshot must bind when it flushes
+        self._pending: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._pending_plan: Optional[LookupPlan] = None
+        # refresh scheduler state
+        self._dirty = np.zeros(capacity, bool)
+        self.refresh_chunk_rows = refresh_chunk_rows
+        self.rows_refreshed = 0
+        self.refresh_chunks = 0
         self._lock = threading.RLock()
         self._refresh_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+
+    @property
+    def shards(self) -> int:
+        return self._store.shards
+
+    @property
+    def payload(self) -> jax.Array:
+        """Current payload snapshot (pending device stage flushed)."""
+        with self._lock:
+            self._flush_pending_locked()
+            return self._store.snapshot()
 
     # -- host index --------------------------------------------------------------
 
@@ -95,31 +149,72 @@ class DeviceEmbeddingCache:
         with self._lock:
             return self._sorted_ids.copy()
 
-    # -- query -------------------------------------------------------------------
+    # -- two-stage query ---------------------------------------------------------
+
+    def probe(self, ids: np.ndarray) -> LookupPlan:
+        """HOST stage: resolve ``ids [n]`` (-1 = pad) to payload slots,
+        fetching + index-inserting misses; the payload scatter is
+        deferred to the device stage (``commit``).
+
+        The snapshot for an all-hit plan binds immediately (the payload
+        is already current); a plan with pending insertions gets its
+        snapshot when the scatter flushes — in ``commit``, or in the
+        next ``probe``/refresh on this cache, whichever comes first.
+        Either way the snapshot is bound *before* any later query can
+        change the index, so the plan's slots always gather correctly
+        from it.
+        """
+        with self._lock:
+            self._flush_pending_locked()
+            slots, ov_idx, ov_rows = self._probe_locked(
+                np.asarray(ids, np.int64))
+            plan = LookupPlan(slots, ov_idx, ov_rows, None)
+            if self._pending is None:
+                plan.payload = self._store.snapshot()
+            else:
+                self._pending_plan = plan
+            return plan
+
+    def commit(self, plan: LookupPlan) -> jax.Array:
+        """DEVICE stage: dispatch the plan's deferred payload scatter
+        (if still pending) and return its lock-consistent snapshot.
+        Gather from IT, not ``self.payload`` — a later query may evict
+        the plan's slots and rebind the store before the gather runs."""
+        if plan.payload is None:
+            with self._lock:
+                self._flush_pending_locked()
+        return plan.payload
 
     def acquire_slots(self, ids: np.ndarray
                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                  jax.Array]:
-        """Resolve ``ids [n]`` (-1 = pad) to payload slots, inserting misses.
+        """Both stages back-to-back (the unpipelined path).
 
         Returns ``(slots [n], ov_idx [m], ov_rows [m, D], payload)``:
-        ``slots`` are payload row indices (-1 for pads and overflowed
+        ``slots`` are logical payload slots (-1 for pads and overflowed
         ids); overflowed ids — misses that could not be cached without
         evicting this query's own rows — are served out-of-band via
-        ``ov_rows`` at positions ``ov_idx``. ``payload`` is the
-        post-insertion snapshot bound under the same lock: gather from
-        IT, not ``self.payload`` — a concurrent query may evict the
-        returned slots and rebind ``self.payload`` before the gather
-        runs (eviction only protects the evicting query's own hits).
-        Performs at most ONE ``fetch_fn`` call and ONE device scatter.
+        ``ov_rows`` at positions ``ov_idx``. Performs at most ONE
+        ``fetch_fn`` call and ONE device scatter.
         """
-        with self._lock:
-            slots, ov_idx, ov_rows = self._acquire_locked(
-                np.asarray(ids, np.int64))
-            return slots, ov_idx, ov_rows, self.payload
+        plan = self.probe(ids)
+        return plan.slots, plan.ov_idx, plan.ov_rows, self.commit(plan)
 
-    def _acquire_locked(self, ids: np.ndarray
-                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def _flush_pending_locked(self) -> None:
+        """Dispatch the deferred scatter and bind the waiting plan's
+        snapshot. Called on every lock acquisition that reads or mutates
+        the payload, preserving the invariant: index state and payload
+        content agree whenever the lock is held."""
+        if self._pending is not None:
+            dest, rows = self._pending
+            self._pending = None
+            self._scatter(dest, rows)
+        if self._pending_plan is not None:
+            self._pending_plan.payload = self._store.snapshot()
+            self._pending_plan = None
+
+    def _probe_locked(self, ids: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         n = len(ids)
         empty = (np.empty(0, np.int64),
                  np.empty((0, self.dim), np.float32))
@@ -175,9 +270,10 @@ class DeviceEmbeddingCache:
             self._next_free = n_occ + free
             self._id_of[dest] = miss_ids[sel]
             self._freq[dest] = counts[miss][sel].astype(np.float64)
+            self._dirty[dest] = False      # fresh from the lower levels
             self._rebuild_index()
-            if ins:  # the ONE device scatter for this query
-                self._scatter(dest, rows[sel])
+            if ins:  # the ONE device scatter, deferred to commit()
+                self._pending = (dest, rows[sel])
             miss_slots = np.full(k, -1, np.int64)
             miss_slots[sel] = dest
             slots_u[miss] = miss_slots
@@ -193,24 +289,16 @@ class DeviceEmbeddingCache:
         return slots_u[inv].astype(np.int64), ov_idx, ov_rows
 
     def _scatter(self, slots: np.ndarray, rows: np.ndarray) -> None:
-        """One ``payload.at[slots].set(rows)``, size-bucketed so XLA
-        compiles O(log) scatter shapes instead of one per miss count
-        (padding repeats the first row — idempotent under ``set``)."""
-        pad = _round_up(len(slots), 64) - len(slots)
-        if pad:
-            slots = np.concatenate([slots, np.full(pad, slots[0])])
-            rows = np.concatenate(
-                [rows, np.broadcast_to(rows[:1], (pad, rows.shape[1]))])
-        self.payload = self.payload.at[
-            jnp.asarray(slots, jnp.int32)].set(jnp.asarray(rows))
+        """The one device scatter (striping handled by the store)."""
+        self._store.scatter(slots, rows)
 
     def query(self, ids: np.ndarray) -> jax.Array:
         """Batched lookup ``[n] -> [n, D]`` with dynamic insertion.
 
         One host index pass, at most one fetch + one scatter, and exactly
-        one Pallas gather dispatch for the payload read. Query lengths
-        are bucketed to powers of two so XLA compiles O(log) gather
-        shapes rather than one per batch size.
+        one gather dispatch for the payload read. Query lengths are
+        bucketed to powers of two so XLA compiles O(log) gather shapes
+        rather than one per batch size.
         """
         slots, ov_idx, ov_rows, payload = self.acquire_slots(ids)
         n = len(slots)
@@ -218,27 +306,86 @@ class DeviceEmbeddingCache:
             return jnp.zeros((0, self.dim), jnp.float32)
         bucket = 1 << (n - 1).bit_length()
         spad = np.pad(slots, (0, bucket - n), constant_values=-1)
-        out = ops.cache_gather(payload, spad)[:n]
+        out = self._store.gather(payload, spad)[:n]
         if len(ov_idx):  # rare: batch exceeded evictable capacity
             out = out.at[jnp.asarray(ov_idx)].set(jnp.asarray(ov_rows))
         return out
 
-    # -- refresh (async propagation of online updates) --------------------------
+    # -- hotness-scheduled refresh (propagation of online updates) ---------------
 
-    def refresh_once(self) -> int:
-        """Re-pull every resident row from the lower levels (one scatter)."""
+    def mark_dirty(self, ids: np.ndarray) -> int:
+        """Schedule resident rows among ``ids`` for refresh (the lower
+        levels changed under them). Returns how many were resident."""
+        ids = np.unique(np.asarray(ids, np.int64))
         with self._lock:
-            res_ids = self._sorted_ids.copy()
-            res_slots = self._sorted_slots.copy()
-        if len(res_ids) == 0:
+            slots = self._find(ids)
+            slots = slots[slots >= 0]
+            self._dirty[slots] = True
+            return len(slots)
+
+    def mark_all_dirty(self) -> int:
+        """Schedule every resident row (the poll-cycle fallback when no
+        update stream says which rows changed)."""
+        with self._lock:
+            n = self._next_free
+            self._dirty[:n] = True
+            return n
+
+    def refresh_backlog(self) -> int:
+        """Rows currently scheduled for refresh."""
+        with self._lock:
+            return int(self._dirty[:self._next_free].sum())
+
+    def refresh_chunk(self, budget: Optional[int] = None) -> int:
+        """Refresh up to ``budget`` scheduled rows, hottest first.
+
+        Claims the selected rows (clears their dirty bit) under the lock,
+        re-pulls them from the lower levels with the lock RELEASED (the
+        slow IO never blocks serving), then scatters only rows whose
+        id->slot binding survived the interim — an update that lands
+        mid-fetch re-marks the row, so the next chunk repairs it.
+        Returns the number of rows actually refreshed on device.
+        """
+        budget = self.refresh_chunk_rows if budget is None else budget
+        if budget <= 0:
             return 0
-        rows = np.asarray(self.fetch_fn(res_ids), np.float32)  # slow IO
         with self._lock:
-            # ids may have been evicted/moved meanwhile; re-check
-            keep = self._find(res_ids) == res_slots
-            if keep.any():
-                self._scatter(res_slots[keep], rows[keep])
-            return int(keep.sum())
+            self._flush_pending_locked()
+            occ = self._next_free
+            cand = np.nonzero(self._dirty[:occ])[0]
+            if len(cand) == 0:
+                return 0
+            if len(cand) > budget:
+                hot = np.argpartition(-self._freq[cand], budget - 1)
+                cand = cand[hot[:budget]]
+            slots = np.sort(cand).astype(np.int64)
+            self._dirty[slots] = False            # claimed
+            ids = self._id_of[slots].copy()
+        rows = np.asarray(self.fetch_fn(ids), np.float32)   # slow IO
+        with self._lock:
+            keep = self._find(ids) == slots       # binding may have moved
+            kept = int(keep.sum())
+            if kept:
+                self._scatter(slots[keep], rows[keep])
+            self.rows_refreshed += kept
+            self.refresh_chunks += 1
+            return kept
+
+    def refresh_once(self, chunk: Optional[int] = None) -> int:
+        """Re-pull every resident row from the lower levels, in
+        hotness-ordered bounded chunks (the full-repull convenience)."""
+        marked = self.mark_all_dirty()
+        if marked == 0:
+            return 0
+        chunk = chunk or self.refresh_chunk_rows
+        total = 0
+        # enough rounds to drain what we just marked; rows re-marked
+        # concurrently are the next cycle's work
+        for _ in range(-(-marked // chunk) + 1):
+            if self.refresh_backlog() == 0:
+                break
+            total += self.refresh_chunk(chunk)
+        return total
 
     def start_refresh(self, interval_s: float):
         def loop():

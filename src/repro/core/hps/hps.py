@@ -2,44 +2,64 @@
 
 Lookup path per table: L1 device cache -> L2 volatile DB -> L3 persistent
 DB, with promotion on miss at every level. The online-update Consumer
-applies trainer messages to L2/L3; the L1 cache's async refresh cycle then
-picks them up (poll-based, configurable period — the paper's design).
+applies trainer messages to L2/L3 AND marks the touched L1 rows dirty;
+the hotness-scheduled refresh (driven by the serving loop, see
+``serve.server``) then re-pulls them in bounded chunks, hot rows first.
 
-Batched lookup path: ``lookup`` resolves ALL tables of a query on the
-host index first (misses coalesced per table into one fetch + one payload
-scatter each), then computes the stacked pooled output ``[B, T, D]`` in a
-SINGLE jitted device call — the per-table slot arrays are the only
-host->device transfer, and the pooled activations never bounce through
-host memory. Pooling honors each table's combiner (sum or mean); the
-``hotness`` argument selects the valid id columns per table (and is
-validated against the query shape instead of being silently ignored).
+Batched lookup path: each table resolves through a HOST stage (sorted
+index probe + ONE coalesced miss fetch) and a DEVICE stage (the one
+payload scatter + slot transfer), and the stacked pooled output
+``[B, T, D]`` is computed in a SINGLE jitted device call at the end — the
+per-table slot arrays are the only host->device transfer, and the pooled
+activations never bounce through host memory. With ``pipelined=True`` the
+two stages are double-buffered on a dedicated host worker so table
+*t+1*'s index probe overlaps table *t*'s device scatter;
+``lookup_stream`` extends the same pipeline across consecutive queries
+(query *i+1*'s probes run while the host blocks materializing query *i*'s
+result — the serving-loop shape). Pooling honors each table's combiner
+(sum or mean); the ``hotness`` argument selects the valid id columns per
+table (and is validated against the query shape instead of being silently
+ignored).
+
+When the caches are built with ``cache_shards=N`` (optionally over a
+``cache_mesh``), the pooled gather reads the striped payload through
+``ops.sharded_pooled_lookup`` — same single dispatch, payload distributed
+row ``r`` -> stripe ``r % N``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+import threading
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import EmbeddingTableConfig
-from repro.core.hps.embedding_cache import DeviceEmbeddingCache
+from repro.core.hps.embedding_cache import DeviceEmbeddingCache, LookupPlan
 from repro.core.hps.message_bus import Consumer, MessageBus
 from repro.core.hps.persistent_db import PersistentDB
 from repro.core.hps.volatile_db import VolatileDB
 from repro.kernels import ops
 
 
-@functools.partial(jax.jit, static_argnames=("combiners", "apply_mean"))
+@functools.partial(jax.jit, static_argnames=("combiners", "apply_mean",
+                                             "shards", "mesh", "axis"))
 def _pooled_stack(payloads: Tuple[jax.Array, ...],
                   slots: Tuple[jax.Array, ...],
                   combiners: Tuple[str, ...],
-                  apply_mean: bool = True) -> jax.Array:
+                  apply_mean: bool = True, shards: int = 1,
+                  mesh=None, axis: str = "cache") -> jax.Array:
     """One device dispatch: per-table pooled gathers stacked to [B, T, D]."""
     outs = []
     for p, s, comb in zip(payloads, slots, combiners):
-        pooled = ops.pooled_cache_lookup(p, s)           # [B, D] sum over H
+        if shards == 1:
+            pooled = ops.pooled_cache_lookup(p, s)       # [B, D] sum over H
+        else:
+            pooled = ops.sharded_pooled_lookup(p, s, mesh=mesh, axis=axis)
         if comb == "mean" and apply_mean:
             denom = jnp.maximum((s >= 0).sum(axis=1, keepdims=True), 1)
             pooled = pooled / denom.astype(pooled.dtype)
@@ -54,35 +74,56 @@ class HPS:
                  pdb: PersistentDB, *,
                  vdb: Optional[VolatileDB] = None,
                  cache_capacity: int = 4096,
-                 bus: Optional[MessageBus] = None):
+                 bus: Optional[MessageBus] = None,
+                 cache_shards: int = 1, cache_mesh=None,
+                 refresh_chunk_rows: int = 1024):
         self.model_name = model_name
         self.tables = tuple(tables)
         self.pdb = pdb
         self.vdb = vdb or VolatileDB()
+        self.cache_shards = cache_shards
+        self.cache_mesh = cache_mesh
+        # O(1) per-table config (the L2/L3 fetch path runs per miss batch)
+        self._table_cfg: Dict[str, EmbeddingTableConfig] = {
+            t.name: t for t in tables}
+        self._l3_fetch_calls: Dict[str, int] = {t.name: 0 for t in tables}
+        self._l3_fetch_rows: Dict[str, int] = {t.name: 0 for t in tables}
+        # refresh fetches run with the cache lock released, so the L3
+        # counters need their own (probe and refresh can fetch at once)
+        self._l3_stats_lock = threading.Lock()
         self.caches: Dict[str, DeviceEmbeddingCache] = {}
         for t in tables:
             self.caches[t.name] = DeviceEmbeddingCache(
                 min(cache_capacity, t.vocab_size), t.dim,
-                fetch_fn=self._make_fetch(t.name))
+                fetch_fn=self._make_fetch(t.name),
+                shards=cache_shards, mesh=cache_mesh,
+                refresh_chunk_rows=refresh_chunk_rows)
         self.consumer = Consumer(bus, model_name) if bus else None
+        self._host_pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
 
     # -- L2/L3 fall-through ------------------------------------------------------
 
     def _make_fetch(self, table: str):
+        dim = self._table_cfg[table].dim
+
         def fetch(ids: np.ndarray) -> np.ndarray:
             mask, rows = self.vdb.query(table, ids)
             if rows is None:
-                rows = np.zeros((len(ids), self._dim(table)), np.float32)
+                rows = np.zeros((len(ids), dim), np.float32)
             if not mask.all():
                 missing = ids[~mask]
                 fetched = self.pdb.fetch(self.model_name, table, missing)
+                with self._l3_stats_lock:
+                    self._l3_fetch_calls[table] += 1
+                    self._l3_fetch_rows[table] += len(missing)
                 rows[~mask] = fetched
                 self.vdb.insert(table, missing, fetched)  # promote
             return rows
         return fetch
 
     def _dim(self, table: str) -> int:
-        return next(t.dim for t in self.tables if t.name == table)
+        return self._table_cfg[table].dim
 
     # -- public lookup ------------------------------------------------------------
 
@@ -126,53 +167,88 @@ class HPS:
                     blocks[ti] = blk
         return blocks
 
-    def lookup(self, cat: np.ndarray, hotness: Optional[List[int]] = None
-               ) -> jax.Array:
-        """``cat [B, T, H]`` or ``[B, sum(hotness)]`` (-1 pad) -> pooled
-        ``[B, T, D]`` on device, honoring each table's combiner.
+    # -- two-stage lookup pipeline -------------------------------------------------
 
-        All tables resolve before the single jitted device call; per-table
-        misses are coalesced by the L1 cache into one fetch + one scatter.
-        Batch sizes are bucketed to powers of two so the variable-size
-        serve loop compiles O(log) pooled-gather shapes, not one per
-        drained batch size.
-        """
-        cat = np.asarray(cat)
-        blocks = self._split_query(cat, hotness)
+    def _host_worker(self) -> ThreadPoolExecutor:
+        """The host-stage workers: index probes + miss fetches run here
+        in pipelined mode while the caller's thread owns the device
+        stages. Two workers (the double buffer) let table *t+1*'s index
+        probe proceed while table *t*'s miss fetch waits on the lower
+        levels (remote-L2/SSD IO releases the GIL). Same-table probes
+        stay ordered: a probe holds its cache's lock, and with two
+        workers at most one successor can be waiting on it. For a
+        single-table model one worker suffices — cross-query overlap
+        still applies, and FIFO execution keeps deep streams ordered."""
+        with self._pool_lock:
+            if self._host_pool is None:
+                self._host_pool = ThreadPoolExecutor(
+                    max_workers=min(2, len(self.tables)),
+                    thread_name_prefix="hps-host")
+            return self._host_pool
+
+    def close(self) -> None:
+        """Release the host-stage workers (idempotent; a later pipelined
+        lookup just recreates them)."""
+        with self._pool_lock:
+            pool, self._host_pool = self._host_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    def _probe(self, ti: int, blocks: List[np.ndarray]) -> LookupPlan:
+        """HOST stage for table ``ti``: probe + coalesced miss fetch."""
+        flat = np.ascontiguousarray(blocks[ti], np.int64).reshape(-1)
+        return self.caches[self.tables[ti].name].probe(flat)
+
+    def _device_stage(self, ti: int, plan: LookupPlan, b: int, bp: int,
+                      h: int) -> Tuple[jax.Array, jax.Array]:
+        """DEVICE stage for table ``ti``: flush the plan's deferred
+        scatter, bind its payload snapshot, and ship the slot block."""
+        payload = self.caches[self.tables[ti].name].commit(plan)
+        slots = np.pad(plan.slots.reshape(b, h), ((0, bp - b), (0, 0)),
+                       constant_values=-1)
+        return jnp.asarray(slots, jnp.int32), payload
+
+    def _collect_plan(self, ti: int, plan: LookupPlan, b: int, bp: int,
+                      blocks: List[np.ndarray],
+                      slot_blocks: List[jax.Array],
+                      payloads: List[jax.Array],
+                      overflow: List[Tuple[int, np.ndarray, np.ndarray,
+                                           int]]) -> jax.Array:
+        """Run table ``ti``'s device stage and record its outputs — the
+        per-plan bookkeeping shared by every engine variant."""
+        sb, payload = self._device_stage(ti, plan, b, bp,
+                                         blocks[ti].shape[1])
+        slot_blocks.append(sb)
+        payloads.append(payload)
+        if len(plan.ov_idx):
+            overflow.append((ti, plan.ov_idx, plan.ov_rows,
+                             blocks[ti].shape[1]))
+        return payload
+
+    def _check_dims(self) -> int:
         dims = {t.dim for t in self.tables}
         if len(dims) != 1:
             raise ValueError(
                 f"stacked lookup needs equal table dims, got {sorted(dims)}")
-        b = cat.shape[0]
-        if b == 0:
-            return jnp.zeros((0, len(self.tables), self.tables[0].dim),
-                             jnp.float32)
-        bp = 1 << (b - 1).bit_length()
+        return dims.pop()
 
-        slot_blocks: List[jax.Array] = []
-        payloads: List[jax.Array] = []
-        overflow: List[Tuple[int, np.ndarray, np.ndarray, int]] = []
-        for ti, (t, ids) in enumerate(zip(self.tables, blocks)):
-            flat = np.ascontiguousarray(ids, np.int64).reshape(-1)
-            slots, ov_idx, ov_rows, payload = \
-                self.caches[t.name].acquire_slots(flat)
-            slots = np.pad(slots.reshape(b, ids.shape[1]),
-                           ((0, bp - b), (0, 0)), constant_values=-1)
-            slot_blocks.append(jnp.asarray(slots, jnp.int32))
-            payloads.append(payload)  # lock-consistent snapshot
-            if len(ov_idx):
-                overflow.append((ti, ov_idx, ov_rows, ids.shape[1]))
-
+    def _finalize(self, payloads: List[jax.Array],
+                  slot_blocks: List[jax.Array],
+                  blocks: List[np.ndarray],
+                  overflow: List[Tuple[int, np.ndarray, np.ndarray, int]],
+                  b: int) -> jax.Array:
+        """The single jitted pooled-stack dispatch (+ rare overflow fix)."""
         combiners = tuple("mean" if t.combiner == "mean" else "sum"
                           for t in self.tables)
+        stack = functools.partial(
+            _pooled_stack, tuple(payloads), tuple(slot_blocks), combiners,
+            shards=self.cache_shards, mesh=self.cache_mesh)
         if not overflow:
-            return _pooled_stack(tuple(payloads), tuple(slot_blocks),
-                                 combiners)[:b]
+            return stack()[:b]
 
         # rare path: some ids exceeded L1 evictable capacity; add their
         # contribution host-side, then apply the mean denominators exactly
-        out = _pooled_stack(tuple(payloads), tuple(slot_blocks), combiners,
-                            apply_mean=False)[:b]
+        out = stack(apply_mean=False)[:b]
         dim = self.tables[0].dim
         corr = np.zeros((b, len(self.tables), dim), np.float32)
         for ti, ov_idx, ov_rows, h in overflow:
@@ -187,20 +263,146 @@ class HPS:
                             out / jnp.asarray(denom), out)
         return out
 
+    def lookup(self, cat: np.ndarray, hotness: Optional[List[int]] = None,
+               *, pipelined: bool = False) -> jax.Array:
+        """``cat [B, T, H]`` or ``[B, sum(hotness)]`` (-1 pad) -> pooled
+        ``[B, T, D]`` on device, honoring each table's combiner.
+
+        All tables resolve before the single jitted device call; per-table
+        misses are coalesced by the L1 cache into one fetch + one scatter.
+        Batch sizes are bucketed to powers of two so the variable-size
+        serve loop compiles O(log) pooled-gather shapes, not one per
+        drained batch size.
+
+        ``pipelined=True`` double-buffers the per-table host stage (index
+        probe + miss fetch, on the HPS host worker) against the device
+        stage (scatter + slot transfer, on the calling thread): table
+        *t+1* is being probed while table *t*'s scatter is in flight.
+        Results are identical to the sequential path — each table's plan
+        carries a lock-consistent payload snapshot.
+        """
+        cat = np.asarray(cat)
+        blocks = self._split_query(cat, hotness)
+        self._check_dims()
+        T = len(self.tables)
+        b = cat.shape[0]
+        if b == 0:
+            return jnp.zeros((0, T, self.tables[0].dim), jnp.float32)
+        bp = 1 << (b - 1).bit_length()
+
+        slot_blocks: List[jax.Array] = []
+        payloads: List[jax.Array] = []
+        overflow: List[Tuple[int, np.ndarray, np.ndarray, int]] = []
+
+        if pipelined and T > 1:
+            pool = self._host_worker()
+            futs: Dict[int, Future] = {
+                ti: pool.submit(self._probe, ti, blocks)
+                for ti in range(min(3, T))}          # 2 running + 1 queued
+            for ti in range(T):
+                plan = futs.pop(ti).result()
+                if ti + 3 < T:
+                    futs[ti + 3] = pool.submit(self._probe, ti + 3, blocks)
+                self._collect_plan(ti, plan, b, bp, blocks, slot_blocks,
+                                   payloads, overflow)
+        else:
+            for ti in range(T):
+                self._collect_plan(ti, self._probe(ti, blocks), b, bp,
+                                   blocks, slot_blocks, payloads, overflow)
+
+        return self._finalize(payloads, slot_blocks, blocks, overflow, b)
+
+    def lookup_stream(self, cats: Iterable[np.ndarray],
+                      hotness: Optional[List[int]] = None, *,
+                      depth: int = 2) -> Iterator[np.ndarray]:
+        """Serve a stream of queries through the two-stage pipeline,
+        yielding MATERIALIZED ``[B, T, D]`` numpy outputs in order.
+
+        Double-buffered on BOTH ends: the host workers run query
+        *i+1*'s probes (and their L2/L3 miss fetches) while the calling
+        thread handles query *i*'s device stages, and query *i*'s pooled
+        output is materialized only after query *i+1*'s device work has
+        been dispatched — so the device is computing one query while the
+        host probes another, the serving loop of the paper's HPS.
+        ``depth`` bounds the lookahead (queries whose fetched rows may be
+        held in flight).
+        """
+        self._check_dims()
+        pool = self._host_worker()
+        it = iter(cats)
+        pending: "deque" = deque()          # (b, blocks, probe futures)
+        exhausted = False
+
+        def admit():
+            nonlocal exhausted
+            while not exhausted and len(pending) < max(1, depth):
+                try:
+                    cat = np.asarray(next(it))
+                except StopIteration:
+                    exhausted = True
+                    return
+                blocks = self._split_query(cat, hotness)
+                futs = [pool.submit(self._probe, ti, blocks)
+                        for ti in range(len(self.tables))]
+                pending.append((cat.shape[0], blocks, futs))
+
+        in_flight: List[jax.Array] = []     # dispatched, not yet synced
+        try:
+            admit()
+            while pending:
+                b, blocks, futs = pending.popleft()
+                plans = [f.result() for f in futs]
+                bp = 1 << (b - 1).bit_length()
+                slot_blocks, payloads, overflow = [], [], []
+                for ti, plan in enumerate(plans):
+                    self._collect_plan(ti, plan, b, bp, blocks,
+                                       slot_blocks, payloads, overflow)
+                in_flight.append(self._finalize(payloads, slot_blocks,
+                                                blocks, overflow, b))
+                admit()                     # next query probes first ...
+                if len(in_flight) > 1:      # ... then sync, one behind:
+                    # the device computes query i while the host is
+                    # already probing/dispatching query i+1
+                    yield np.asarray(in_flight.pop(0))
+            for out in in_flight:
+                yield np.asarray(out)
+        finally:
+            for _, _, futs in pending:      # abandoned mid-stream
+                for f in futs:
+                    f.cancel()
+
     # -- online updates -------------------------------------------------------------
 
     def apply_updates(self) -> int:
-        """Poll the message bus into VDB+PDB (L1 refresh is separate)."""
+        """Poll the message bus into VDB+PDB and schedule the touched L1
+        rows for refresh (the hotness scheduler drains them)."""
         if self.consumer is None:
             return 0
 
         def apply(table, ids, rows):
             self.pdb.upsert(self.model_name, table, ids, rows)
             self.vdb.insert(table, ids, rows)
+            cache = self.caches.get(table)
+            if cache is not None:
+                cache.mark_dirty(ids)
 
         return self.consumer.poll(apply)
 
+    def schedule_refresh(self) -> int:
+        """Mark every resident L1 row stale (poll-cycle fallback when no
+        update stream identifies the changed rows)."""
+        return sum(c.mark_all_dirty() for c in self.caches.values())
+
+    def refresh_step(self, budget: Optional[int] = None) -> int:
+        """Drain one bounded, hotness-ordered chunk of the refresh
+        backlog per table — the serving loop calls this between batches."""
+        return sum(c.refresh_chunk(budget) for c in self.caches.values())
+
+    def refresh_backlog(self) -> int:
+        return sum(c.refresh_backlog() for c in self.caches.values())
+
     def refresh_caches(self) -> int:
+        """Full re-pull of every resident row (offline convenience)."""
         return sum(c.refresh_once() for c in self.caches.values())
 
     def start_refresh(self, interval_s: float):
@@ -218,4 +420,14 @@ class HPS:
             "l1_hit_rate": {k: c.hit_rate for k, c in self.caches.items()},
             "l2_hits": self.vdb.hits,
             "l2_misses": self.vdb.misses,
+            "l2": self.vdb.stats(),
+            "l3_fetches": {"calls": dict(self._l3_fetch_calls),
+                           "rows": dict(self._l3_fetch_rows)},
+            "refresh": {
+                "rows_refreshed": sum(c.rows_refreshed
+                                      for c in self.caches.values()),
+                "chunks": sum(c.refresh_chunks
+                              for c in self.caches.values()),
+                "backlog": self.refresh_backlog(),
+            },
         }

@@ -1,0 +1,107 @@
+"""Striped physical storage for the L1 device payload.
+
+``DeviceEmbeddingCache`` resolves ids to *logical slots*; this module owns
+where a slot physically lives. The companion HPS paper (arXiv 2210.08804)
+stripes the GPU embedding cache across devices so the hot working set
+scales past one device's HBM — here slot ``s`` lives on stripe ``s % N``
+at local row ``s // N``, and the stripes are laid out over a 1-D mesh
+axis (``launch.mesh.make_cache_mesh``) when one is available, or kept as
+host shards of a single stacked array otherwise. Because callers only
+ever see logical slots, the cache's index/eviction machinery is entirely
+layout-agnostic.
+
+``shards=1`` reproduces the original single-payload behavior bit-exactly:
+same physical padding, same one-scatter write path, same
+``ops.cache_gather`` read path.
+
+Snapshots are immutable jax arrays: ``scatter`` rebinds the payload, so a
+reader holding a snapshot is never affected by concurrent writes — the
+property the cache's lock-consistent query path relies on.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ops import _round_up
+
+
+class ShardedPayloadStore:
+    """Physical slot storage: single ``[C, D]`` payload (``shards=1``) or
+    ``[N, Cl, D]`` stripes (``shards=N``), optionally mesh-placed."""
+
+    def __init__(self, capacity: int, dim: int, *, shards: int = 1,
+                 mesh=None, axis: str = "cache"):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shards > capacity:
+            raise ValueError(
+                f"shards={shards} exceeds capacity={capacity}")
+        if mesh is not None:
+            size = mesh.shape.get(axis, 1)
+            if shards % size:
+                raise ValueError(
+                    f"shards={shards} does not tile mesh axis "
+                    f"'{axis}' of size {size}")
+        self.capacity = capacity
+        self.dim = dim
+        self.shards = shards
+        self.mesh = mesh
+        self.axis = axis
+        if shards == 1:
+            # physical rows padded to the gather kernel's tile so the
+            # jitted gather never copies the payload to pad it
+            bc = min(512, _round_up(capacity, 8))
+            self.phys_rows = _round_up(capacity, bc)
+            self._payload = jnp.zeros((self.phys_rows, dim), jnp.float32)
+        else:
+            local_cap = -(-capacity // shards)        # rows per stripe
+            bc = min(512, _round_up(local_cap, 8))
+            self.local_rows = _round_up(local_cap, bc)
+            self.phys_rows = shards * self.local_rows
+            stripes = jnp.zeros((shards, self.local_rows, dim), jnp.float32)
+            if mesh is not None and mesh.shape.get(axis, 1) > 1:
+                from jax.sharding import NamedSharding, PartitionSpec
+                stripes = jax.device_put(
+                    stripes, NamedSharding(mesh, PartitionSpec(axis)))
+            self._payload = stripes
+
+    # -- write (the ONE device scatter per cache mutation) -------------------
+
+    def scatter(self, slots: np.ndarray, rows: np.ndarray) -> None:
+        """One ``at[...].set`` over the stripes, size-bucketed so XLA
+        compiles O(log) scatter shapes instead of one per miss count
+        (padding repeats the first slot — idempotent under ``set``)."""
+        pad = _round_up(len(slots), 64) - len(slots)
+        if pad:
+            slots = np.concatenate([slots, np.full(pad, slots[0])])
+            rows = np.concatenate(
+                [rows, np.broadcast_to(rows[:1], (pad, rows.shape[1]))])
+        if self.shards == 1:
+            self._payload = self._payload.at[
+                jnp.asarray(slots, jnp.int32)].set(jnp.asarray(rows))
+        else:
+            stripe = jnp.asarray(slots % self.shards, jnp.int32)
+            local = jnp.asarray(slots // self.shards, jnp.int32)
+            self._payload = self._payload.at[stripe, local].set(
+                jnp.asarray(rows))
+
+    # -- read ----------------------------------------------------------------
+
+    def snapshot(self) -> jax.Array:
+        """The current immutable payload (``[C, D]`` or ``[N, Cl, D]``).
+        Gather from the snapshot you were handed, never from a re-read:
+        a later scatter rebinds the store but can never mutate it."""
+        return self._payload
+
+    def gather(self, snapshot: jax.Array, slots) -> jax.Array:
+        """Logical ``slots [n]`` (-1 = hole) -> ``[n, D]`` rows off a
+        snapshot taken from THIS store."""
+        if self.shards == 1:
+            return ops.cache_gather(snapshot, slots)
+        return ops.sharded_cache_gather(snapshot, slots, mesh=self.mesh,
+                                        axis=self.axis)

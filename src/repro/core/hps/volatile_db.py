@@ -11,9 +11,14 @@ with one ``np.searchsorted`` per shard and inserts are one slice-assign.
 Rows are **copied** on insert and on query — the store never aliases
 caller arrays (the seed kept views into the caller's row buffers, so
 later in-place writes by the caller silently mutated the DB).
+
+Access is serialized by one store-wide lock: the HPS pipelined lookup
+probes tables from a host worker while the serving thread may apply
+online updates or refresh fetches, and all of those paths land here.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -103,6 +108,7 @@ class VolatileDB:
         self._now = 0
         self.hits = 0
         self.misses = 0
+        self._lock = threading.RLock()
 
     def _ns(self, table: str) -> List[_Shard]:
         if table not in self._store:
@@ -116,6 +122,11 @@ class VolatileDB:
 
         ``rows`` is freshly allocated (never a view into the store).
         """
+        with self._lock:
+            return self._query_locked(table, ids)
+
+    def _query_locked(self, table: str, ids: np.ndarray
+                      ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
         ns = self._ns(table)
         ids = np.asarray(ids, np.int64)
         self._now += 1
@@ -140,24 +151,38 @@ class VolatileDB:
         return mask, rows
 
     def insert(self, table: str, ids: np.ndarray, rows: np.ndarray) -> None:
-        ns = self._ns(table)
-        ids = np.asarray(ids, np.int64)
-        rows = np.asarray(rows, np.float32)
-        self._now += 1
-        shard_of = ids % self.shards
-        for s, shard in enumerate(ns):
-            in_s = np.nonzero(shard_of == s)[0]
-            if len(in_s):
-                shard.insert(ids[in_s], rows[in_s].copy(), self._now)
+        with self._lock:
+            ns = self._ns(table)
+            ids = np.asarray(ids, np.int64)
+            rows = np.asarray(rows, np.float32)
+            self._now += 1
+            shard_of = ids % self.shards
+            for s, shard in enumerate(ns):
+                in_s = np.nonzero(shard_of == s)[0]
+                if len(in_s):
+                    shard.insert(ids[in_s], rows[in_s].copy(), self._now)
 
     def evict(self, table: str, ids: np.ndarray) -> None:
-        ns = self._ns(table)
-        ids = np.asarray(ids, np.int64)
-        shard_of = ids % self.shards
-        for s, shard in enumerate(ns):
-            in_s = np.nonzero(shard_of == s)[0]
-            if len(in_s):
-                shard.evict_ids(ids[in_s])
+        with self._lock:
+            ns = self._ns(table)
+            ids = np.asarray(ids, np.int64)
+            shard_of = ids % self.shards
+            for s, shard in enumerate(ns):
+                in_s = np.nonzero(shard_of == s)[0]
+                if len(in_s):
+                    shard.evict_ids(ids[in_s])
 
     def size(self, table: str) -> int:
-        return sum(s.n for s in self._ns(table))
+        with self._lock:
+            return sum(s.n for s in self._ns(table))
+
+    def stats(self) -> Dict:
+        """Per-table occupancy for the serving L1/L2/L3 picture."""
+        with self._lock:
+            cap = self.shards * self.capacity
+            tables = {t: {"rows": sum(s.n for s in shards),
+                          "fill": sum(s.n for s in shards) / cap}
+                      for t, shards in self._store.items()}
+            return {"hits": self.hits, "misses": self.misses,
+                    "shards": self.shards, "capacity_per_shard":
+                    self.capacity, "tables": tables}

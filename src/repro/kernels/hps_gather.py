@@ -12,6 +12,14 @@ the cache's overflow path overwrites separately.
 
 Grid layout: the payload-tile reduction dim is trailing (Pallas TPU
 requirement for output-block accumulation): grid = (N/bN, C/bC).
+
+``sharded_gather_rows`` is the multi-device entry point for the striped
+L1 payload (companion HPS paper, arXiv 2210.08804 §4): slot ``s`` lives
+on stripe ``s % n_stripes``, stripes are laid out over a 1-D mesh axis,
+and every device runs the same local gather over the stripes it owns —
+non-owned slots become holes (zero rows) — so ONE ``psum`` reassembles
+the full batch. The payload never leaves its owning device; only the
+``[n, D]`` result crosses the interconnect.
 """
 from __future__ import annotations
 
@@ -20,6 +28,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.kernels.ops import _round_up
 
 
 def _gather_kernel(slots_ref, payload_ref, o_ref, *, bc: int):
@@ -58,3 +70,69 @@ def gather_rows(payload: jax.Array, slots: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
         interpret=interpret,
     )(slots, payload)
+
+
+def _local_stripe_gather(stripes: jax.Array, slots: jax.Array,
+                         n_stripes: int, axis: str, *,
+                         use_kernel: bool, block_n: int, block_c: int,
+                         interpret: bool) -> jax.Array:
+    """Per-device body: gather the slots whose stripe this device owns.
+
+    ``stripes [k, Cl, D]`` is the local block of the striped payload
+    (``k = n_stripes / mesh_axis_size``); global slot ``s`` maps to
+    stripe ``s % n_stripes``, local row ``s // n_stripes``. Slots owned
+    elsewhere turn into -1 holes, so the cross-device ``psum`` of the
+    per-device gathers is exact (holes contribute zero rows).
+    """
+    k, cl, d = stripes.shape
+    idx = jax.lax.axis_index(axis)
+    first = idx * k                                   # first stripe owned
+    stripe_of = jnp.where(slots >= 0, slots % n_stripes, -1)
+    mine = (stripe_of >= first) & (stripe_of < first + k)
+    flat = stripes.reshape(k * cl, d)
+    local = (stripe_of - first) * cl + slots // n_stripes
+    local = jnp.where(mine, local, -1)
+    if not use_kernel:
+        valid = local >= 0
+        rows = jnp.take(flat, jnp.where(valid, local, 0), axis=0)
+        rows = jnp.where(valid[:, None], rows, 0.0).astype(jnp.float32)
+    else:
+        n = local.shape[0]
+        bn = min(block_n, _round_up(n, 8))
+        bc = min(block_c, _round_up(k * cl, 8))
+        npad, cpad = _round_up(n, bn), _round_up(k * cl, bc)
+        fpad = jnp.pad(flat, ((0, cpad - k * cl), (0, 0)))
+        lpad = jnp.pad(local.astype(jnp.int32), (0, npad - n),
+                       constant_values=-1)[:, None]
+        rows = gather_rows(fpad, lpad, block_n=bn, block_c=bc,
+                           interpret=interpret)[:n]
+    return jax.lax.psum(rows, axis)
+
+
+def sharded_gather_rows(stripes: jax.Array, slots: jax.Array, *,
+                        mesh: Mesh, axis: str = "cache",
+                        use_kernel: bool = True, block_n: int = 256,
+                        block_c: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """Striped-payload gather: ``stripes [N, Cl, D]`` laid out over the
+    mesh's ``axis`` (stripe ``i`` on device ``i * size / N``), ``slots
+    [n]`` GLOBAL slot ids (-1 = hole) -> ``[n, D]`` f32, replicated.
+
+    Each device gathers only the stripes it holds (one kernel dispatch)
+    and one ``psum`` over ``axis`` combines the partial batches.
+    """
+    n_stripes = stripes.shape[0]
+    size = mesh.shape[axis]
+    if n_stripes % size:
+        raise ValueError(
+            f"{n_stripes} stripes do not tile mesh axis '{axis}' "
+            f"of size {size}")
+    body = functools.partial(
+        _local_stripe_gather, n_stripes=n_stripes, axis=axis,
+        use_kernel=use_kernel, block_n=block_n, block_c=block_c,
+        interpret=interpret)
+    spec = P(axis) if size > 1 else P()
+    fn = compat.shard_map(body, mesh=compat.shard_map_mesh(mesh),
+                          in_specs=(spec, P()), out_specs=P(),
+                          check_vma=False)
+    return fn(stripes, slots.astype(jnp.int32))

@@ -144,6 +144,66 @@ def cache_gather(payload: jax.Array, slots, *, block_n: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# Striped (sharded) L1 payload: stripes [N, Cl, D], slot s at [s % N, s // N]
+# ---------------------------------------------------------------------------
+
+def flatten_striped_slots(stripes: jax.Array, slots: jax.Array) -> jax.Array:
+    """Remap GLOBAL slot ids onto the row-major flattening of ``stripes``
+    (``[N, Cl, D] -> [N * Cl, D]``), preserving -1 holes — the
+    single-device ("host shard") view of the striped layout."""
+    n_stripes, local_rows = stripes.shape[0], stripes.shape[1]
+    return jnp.where(slots >= 0,
+                     (slots % n_stripes) * local_rows + slots // n_stripes,
+                     -1)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _sharded_gather_flat(stripes, slots, use_kernel):
+    flat = stripes.reshape(-1, stripes.shape[-1])
+    return _cache_gather_jit(flat, flatten_striped_slots(stripes, slots),
+                             256, 512, use_kernel)
+
+
+def sharded_cache_gather(stripes: jax.Array, slots, *, mesh=None,
+                         axis: str = "cache", use_kernel=None) -> jax.Array:
+    """``stripes [N, Cl, D]``, GLOBAL ``slots [n]`` (-1 = hole) ->
+    ``[n, D]`` f32.
+
+    With a ``mesh`` whose ``axis`` the stripes are laid out over, this is
+    the ``hps_gather.sharded_gather_rows`` shard_map (per-device gather +
+    one psum — the payload never moves). Without one, the same striped
+    layout is served from host-shard stripes in a single jitted dispatch
+    via the flattened-slot remap, which is bit-identical row-wise.
+    """
+    if use_kernel is None:
+        use_kernel = not _interpret()
+    slots = jnp.asarray(slots)
+    if mesh is not None and axis in mesh.shape and mesh.shape[axis] > 1:
+        from repro.kernels import hps_gather as _hg
+        return _hg.sharded_gather_rows(stripes, slots, mesh=mesh, axis=axis,
+                                       use_kernel=use_kernel,
+                                       interpret=_interpret())
+    return _sharded_gather_flat(stripes, slots, use_kernel)
+
+
+def sharded_pooled_lookup(stripes: jax.Array, slots: jax.Array, *,
+                          mesh=None, axis: str = "cache") -> jax.Array:
+    """Pooled serving gather off the striped payload: ``stripes
+    [N, Cl, D]``, GLOBAL ``slots [B, H]`` (-1 = hole) -> sum-pooled
+    ``[B, D]`` — the striped twin of ``pooled_cache_lookup``."""
+    if mesh is not None and axis in mesh.shape and mesh.shape[axis] > 1:
+        from repro.kernels import hps_gather as _hg
+        b, h = slots.shape
+        rows = _hg.sharded_gather_rows(stripes, slots.reshape(-1),
+                                       mesh=mesh, axis=axis,
+                                       use_kernel=not _interpret(),
+                                       interpret=_interpret())
+        return rows.reshape(b, h, -1).sum(axis=1)
+    flat = stripes.reshape(-1, stripes.shape[-1])
+    return pooled_cache_lookup(flat, flatten_striped_slots(stripes, slots))
+
+
+# ---------------------------------------------------------------------------
 # DLRM dot interaction
 # ---------------------------------------------------------------------------
 

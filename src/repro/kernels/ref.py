@@ -46,6 +46,17 @@ def cache_gather_ref(payload: jax.Array, slots: jax.Array) -> jax.Array:
     return jnp.where(valid[:, None], rows, 0.0)
 
 
+def sharded_gather_ref(stripes: jax.Array, slots: jax.Array) -> jax.Array:
+    """Striped-payload gather oracle: ``stripes [N, Cl, D]``, ``slots
+    [n]`` GLOBAL slot ids (-1 = hole) -> ``[n, D]`` f32; global slot
+    ``s`` lives at ``stripes[s % N, s // N]``."""
+    n_stripes = stripes.shape[0]
+    valid = slots >= 0
+    safe = jnp.where(valid, slots, 0)
+    rows = stripes[safe % n_stripes, safe // n_stripes].astype(jnp.float32)
+    return jnp.where(valid[:, None], rows, 0.0)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True, window=None) -> jax.Array:
     """Naive softmax attention oracle: ``q [B, S, Hq, D]``,

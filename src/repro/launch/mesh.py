@@ -37,6 +37,20 @@ def make_test_mesh(shape: Sequence[int] = (1, 1),
     )
 
 
+def make_cache_mesh(stripes: int, *, axis: str = "cache") -> Mesh:
+    """1-D mesh for the striped HPS L1 payload: as many devices as can
+    tile ``stripes`` evenly (so stripe ``i`` lands on device
+    ``i * size / stripes``), degrading to a 1-device mesh when the
+    stripe count and the device count don't divide."""
+    import numpy as np
+
+    n_dev = len(jax.devices())
+    size = min(stripes, n_dev)
+    while size > 1 and stripes % size:
+        size -= 1
+    return Mesh(np.asarray(jax.devices()[:size]), (axis,))
+
+
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Axes carrying the batch dimension (everything except "model")."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -12,7 +12,16 @@ misses coalesce into one fetch + one payload scatter; the stacked pooled
 ``[B, T, D]`` comes back in a single jitted device call) and feeds the
 jitted dense net without bouncing through host memory — so batching
 requests amortizes both the host index work and the device dispatches,
-which is what produces the paper's batch-dependent speedup curve.
+which is what produces the paper's batch-dependent speedup curve. With
+two or more tables the lookup runs pipelined: the HPS host worker probes
+table *t+1* while table *t*'s scatter is in flight.
+
+The serve loop also drives update propagation (no bare timer threads):
+between drained batches it polls the message bus into L2/L3, marks the
+touched L1 rows dirty, and drains one bounded hotness-ordered refresh
+chunk per tick — so refresh IO interleaves with serving instead of
+stopping the world, and a periodic ``refresh_poll_s`` full-mark sweeps
+rows whose updates arrived out of band.
 """
 from __future__ import annotations
 
@@ -63,7 +72,9 @@ class InferenceServer:
     def __init__(self, model, dense_params: Dict, hps: HPS, *,
                  max_batch: int = 1024, needs_wide: bool = False,
                  wide_hps: Optional[HPS] = None,
-                 hotness: Optional[Sequence[int]] = None):
+                 hotness: Optional[Sequence[int]] = None,
+                 refresh_budget: int = 512,
+                 refresh_poll_s: Optional[float] = None):
         self.model = model
         self.hps = hps
         self.wide_hps = wide_hps
@@ -72,6 +83,13 @@ class InferenceServer:
         self.hotness = list(hotness) if hotness is not None else None
         self.dense_params = dense_params
         self.max_batch = max_batch
+        #: rows re-pulled per refresh chunk between drained batches
+        self.refresh_budget = refresh_budget
+        #: period of the full-mark sweep (None = only bus-marked rows)
+        self.refresh_poll_s = refresh_poll_s
+        self.updates_applied = 0
+        self.rows_refreshed = 0
+        self._last_poll = time.monotonic()
         self._predict = jax.jit(
             lambda p, d, e, w: model.apply_dense(p, d, e, w))
         self._predict_nowide = jax.jit(
@@ -85,9 +103,12 @@ class InferenceServer:
 
     def predict(self, dense: np.ndarray, cat: np.ndarray) -> np.ndarray:
         t0 = time.perf_counter()
-        emb = self.hps.lookup(cat, self.hotness)
+        pipelined = len(self.hps.tables) > 1
+        emb = self.hps.lookup(cat, self.hotness, pipelined=pipelined)
         if self.wide_hps is not None:
-            wide = self.wide_hps.lookup(cat, self.hotness)
+            wide = self.wide_hps.lookup(
+                cat, self.hotness,
+                pipelined=len(self.wide_hps.tables) > 1)
             out = self._predict(self.dense_params, jnp.asarray(dense),
                                 emb, wide)
         else:
@@ -96,6 +117,29 @@ class InferenceServer:
         out = np.asarray(jax.nn.sigmoid(out))
         self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
         return out
+
+    # -- refresh scheduling (runs on the serve loop, between batches) -------------
+
+    def _refresh_tick(self) -> None:
+        """One serving-loop tick of update propagation: bus -> L2/L3 (+
+        dirty marks), a periodic full-mark sweep, and ONE bounded
+        hotness-ordered refresh chunk — never a stop-the-world re-pull.
+        Covers every HPS this server reads from (deep AND wide)."""
+        sweep = False
+        if self.refresh_poll_s is not None:
+            now = time.monotonic()
+            if now - self._last_poll >= self.refresh_poll_s:
+                self._last_poll = now
+                sweep = True
+        for hps in (self.hps, self.wide_hps):
+            if hps is None:
+                continue
+            if hps.consumer is not None:
+                self.updates_applied += hps.apply_updates()
+            if sweep:
+                hps.schedule_refresh()
+            if hps.refresh_backlog():
+                self.rows_refreshed += hps.refresh_step(self.refresh_budget)
 
     # -- queued/batched path --------------------------------------------------------
 
@@ -109,6 +153,7 @@ class InferenceServer:
             try:
                 first = self._q.get(timeout=0.05)
             except queue.Empty:
+                self._refresh_tick()     # idle: drain the refresh backlog
                 continue
             reqs = [first]
             rows = first[0].shape[0]
@@ -127,6 +172,7 @@ class InferenceServer:
                 n = r[0].shape[0]
                 r[2].put(preds[off:off + n])
                 off += n
+            self._refresh_tick()         # interleave refresh with serving
 
     def start(self):
         self._worker = threading.Thread(target=self._serve_loop, daemon=True)

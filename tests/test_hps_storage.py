@@ -1,0 +1,137 @@
+"""Direct coverage for the HPS storage plumbing: the Kafka-analogue
+message bus (serialization round-trips, multi-topic consumption, offset
+bookkeeping, producer batching thresholds) and the level-3 persistent DB
+(create/open/fetch/upsert/flush against the on-disk memmaps)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.hps.message_bus import (Consumer, MessageBus, Producer,
+                                        _deserialize, _serialize)
+from repro.core.hps.persistent_db import PersistentDB
+
+
+# ---------------------------------------------------------------------------
+# message bus
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(0, 4), (1, 1), (3, 16), (257, 8)])
+def test_serialize_roundtrip_shapes(n, d):
+    rng = np.random.default_rng(n * 31 + d)
+    ids = rng.integers(0, 2**62, size=n).astype(np.int64)
+    rows = rng.normal(size=(n, d)).astype(np.float32)
+    i2, r2 = _deserialize(_serialize(ids, rows))
+    np.testing.assert_array_equal(ids, i2)
+    np.testing.assert_array_equal(rows, r2)
+    assert i2.dtype == np.int64 and r2.dtype == np.float32
+
+
+def test_deserialized_arrays_are_writable_copies():
+    ids = np.asarray([1, 2], np.int64)
+    rows = np.ones((2, 3), np.float32)
+    i2, r2 = _deserialize(_serialize(ids, rows))
+    i2[0] = 99          # frombuffer views would raise here
+    r2[0] = 99.0
+    assert ids[0] == 1 and rows[0, 0] == 1.0
+
+
+def test_consumer_polls_multiple_topics_with_offsets():
+    bus = MessageBus()
+    prod = Producer(bus, "m")
+    for t, base in (("t0", 0), ("t1", 100)):
+        prod.send(t, np.asarray([base, base + 1]),
+                  np.full((2, 4), float(base), np.float32))
+    prod.flush()
+    # a different model's topic must be invisible to this consumer
+    other = Producer(bus, "other_model")
+    other.send("t0", np.asarray([7]), np.zeros((1, 4), np.float32))
+    other.flush()
+
+    cons = Consumer(bus, "m")
+    assert sorted(cons.discover()) == ["hps.m.t0", "hps.m.t1"]
+    seen = {}
+    n = cons.poll(lambda t, ids, rows: seen.setdefault(t, []).extend(
+        ids.tolist()))
+    assert n == 2
+    assert seen == {"t0": [0, 1], "t1": [100, 101]}
+    # offsets advanced: a second poll sees nothing, a new message only
+    prod.send("t1", np.asarray([102]), np.zeros((1, 4), np.float32))
+    prod.flush("t1")
+    again = {}
+    assert cons.poll(lambda t, ids, rows: again.setdefault(t, [])
+                     .extend(ids.tolist())) == 1
+    assert again == {"t1": [102]}
+
+
+def test_producer_batches_at_row_threshold():
+    bus = MessageBus()
+    prod = Producer(bus, "m", max_batch_rows=4)
+    for i in range(3):
+        prod.send("t0", np.asarray([i]), np.ones((1, 2), np.float32))
+    assert bus.topics() == []                  # below threshold: buffered
+    prod.send("t0", np.asarray([3]), np.ones((1, 2), np.float32))
+    msgs, off = bus.fetch("hps.m.t0", 0)
+    assert len(msgs) == 1 and off == 1         # one coalesced message
+    ids, rows = _deserialize(msgs[0])
+    assert ids.tolist() == [0, 1, 2, 3] and rows.shape == (4, 2)
+
+
+def test_fetch_respects_offset_and_max():
+    bus = MessageBus()
+    for i in range(5):
+        bus.publish("tp", bytes([i]))
+    msgs, off = bus.fetch("tp", 1, max_messages=2)
+    assert msgs == [bytes([1]), bytes([2])] and off == 3
+    msgs, off = bus.fetch("tp", off, max_messages=64)
+    assert msgs == [bytes([3]), bytes([4])] and off == 5
+
+
+# ---------------------------------------------------------------------------
+# persistent DB
+# ---------------------------------------------------------------------------
+
+def test_pdb_create_fetch_upsert_flush_reopen(tmp_path):
+    root = str(tmp_path / "pdb")
+    pdb = PersistentDB(root)
+    rows = np.arange(40, dtype=np.float32).reshape(10, 4)
+    pdb.create_table("m", "emb", 10, 4, initial=rows)
+    assert pdb.table_shape("m", "emb") == (10, 4)
+    np.testing.assert_array_equal(pdb.fetch("m", "emb", np.asarray([2, 7])),
+                                  rows[[2, 7]])
+
+    pdb.upsert("m", "emb", np.asarray([3]), np.full((1, 4), 9.5, np.float32))
+    pdb.flush()
+
+    # a brand-new process-equivalent handle must see the flushed bytes
+    pdb2 = PersistentDB(root)
+    pdb2.open_table("m", "emb")
+    assert pdb2.table_shape("m", "emb") == (10, 4)
+    np.testing.assert_allclose(pdb2.fetch("m", "emb", np.asarray([3]))[0],
+                               9.5)
+    np.testing.assert_array_equal(pdb2.fetch("m", "emb", np.asarray([0])),
+                                  rows[[0]])
+    # reopened maps are writable too (r+): upsert round-trips
+    pdb2.upsert("m", "emb", np.asarray([0]), np.full((1, 4), -1.0,
+                                                     np.float32))
+    np.testing.assert_allclose(pdb2.fetch("m", "emb", np.asarray([0]))[0],
+                               -1.0)
+
+
+def test_pdb_create_without_initial_is_zeros(tmp_path):
+    pdb = PersistentDB(str(tmp_path / "pdb"))
+    pdb.create_table("m", "z", 6, 3)
+    np.testing.assert_array_equal(pdb.fetch("m", "z", np.arange(6)),
+                                  np.zeros((6, 3), np.float32))
+
+
+def test_pdb_namespaces_are_isolated(tmp_path):
+    pdb = PersistentDB(str(tmp_path / "pdb"))
+    pdb.create_table("m1", "t", 4, 2,
+                     initial=np.ones((4, 2), np.float32))
+    pdb.create_table("m2", "t", 4, 2,
+                     initial=np.full((4, 2), 2.0, np.float32))
+    np.testing.assert_allclose(pdb.fetch("m1", "t", np.asarray([0]))[0], 1.0)
+    np.testing.assert_allclose(pdb.fetch("m2", "t", np.asarray([0]))[0], 2.0)
+    files = os.listdir(str(tmp_path / "pdb"))
+    assert "m1__t.f32" in files and "m2__t.f32" in files
