@@ -1,70 +1,70 @@
-"""Quickstart: the paper's workflow in ~60 lines.
+"""Quickstart: the paper's workflow through the graph API, in ~60 lines.
 
-  1. build a DLRM with the HugeCTR-style embedding engine (planner picks
-     localized / distributed / hybrid placement per table),
-  2. train a few steps on synthetic Zipf CTR data,
-  3. deploy to the Hierarchical Parameter Server and serve predictions.
+  1. declare a DLRM as a HugeCTR-style layer graph (Solver + Input +
+     SparseEmbedding + DenseLayers wired by tensor names),
+  2. compile (the graph lowers onto the embedding planner + trainer)
+     and train a few steps on synthetic Zipf CTR data,
+  3. deploy: write the ps.json serving bundle, then reconstruct the
+     HPS-backed server FROM THE BUNDLE ALONE and serve predictions.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
+import os
 import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import TrainConfig
-from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
-from repro.core.hps.hps import HPS
-from repro.core.hps.persistent_db import PersistentDB
+from repro.api import (
+    CreateSolver, DataReaderParams, DenseLayer, Input, Model,
+    SparseEmbedding,
+)
 from repro.data.synthetic import SyntheticCTR
-from repro.launch.mesh import make_test_mesh
-from repro.models.recsys.model import RecsysModel
-from repro.serve.server import InferenceServer, deploy_from_training
-from repro.train.train_step import build_train_step, init_opt_state
+from repro.launch.serve import build_server_from_config
 
 
 def main():
-    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS["dlrm-criteo"])
-    mesh = make_test_mesh((1, 1))          # CPU demo; prod = (16, 16)
-    batch_size = 256
+    # -- 1. declare the model graph -----------------------------------------
+    solver = CreateSolver(batch_size=256, lr=1e-2)
+    reader = DataReaderParams(source="synthetic", num_dense_features=13)
+    m = Model(solver, reader, name="quickstart-dlrm")
+    m.add(Input(dense_dim=13))
+    m.add(SparseEmbedding(vocab_sizes=[1000, 584, 1000, 306, 24, 634],
+                          dim=16, top_name="emb"))
+    m.add(DenseLayer("mlp", ["dense"], ["bot"], units=(32, 16),
+                     final_activation=True))
+    m.add(DenseLayer("dot_interaction", ["bot", "emb"], ["inter"]))
+    m.add(DenseLayer("concat", ["bot", "inter"], ["top_in"]))
+    m.add(DenseLayer("mlp", ["top_in"], ["logit"], units=(32, 16, 1)))
+    m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
 
-    with mesh:
-        # -- 1. model + embedding placement ---------------------------------
-        model = RecsysModel(cfg, mesh, global_batch=batch_size)
-        for name, group in model.embedding.groups.items():
-            print(f"embedding group {name!r}: {group.num_tables} tables, "
-                  f"{group.total_rows} rows ({group.strategy})")
-        params = model.init(jax.random.PRNGKey(0))
+    # -- 2. compile (lowering) + train ---------------------------------------
+    m.compile()
+    m.summary()
+    for name, group in m.model.embedding.groups.items():
+        print(f"embedding group {name!r}: {group.num_tables} tables, "
+              f"{group.total_rows} rows ({group.strategy})")
+    hist = m.fit(steps=20, log_every=5)
+    print(f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
 
-        # -- 2. train --------------------------------------------------------
-        tcfg = TrainConfig(learning_rate=1e-2)
-        step = jax.jit(build_train_step(model, tcfg))
-        opt_state = init_opt_state(params, tcfg)
-        data = SyntheticCTR(cfg, batch_size)
-        for i in range(20):
-            batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-            params, opt_state, aux = step(params, opt_state, batch)
-            if i % 5 == 0:
-                print(f"step {i:3d}  loss={float(aux['loss']):.4f}")
-
-        # -- 3. deploy + serve ------------------------------------------------
-        with tempfile.TemporaryDirectory() as root:
-            pdb = PersistentDB(root)
-            deploy_from_training(model, params, pdb, "quickstart")
-            hps = HPS("quickstart", cfg.tables, pdb, cache_capacity=512)
-            dense = {k: v for k, v in params.items() if k != "embedding"}
-            server = InferenceServer(model, dense, hps)
-            warm = data.batch(998)
-            server.predict(warm["dense"], warm["cat"])   # jit + cache warmup
-            server.latencies_ms.clear()
-            req = data.batch(999)
-            preds = server.predict(req["dense"], req["cat"])
-            print(f"served {len(preds)} predictions; "
-                  f"p50 latency = {server.latency_percentiles()['p50']:.2f} ms; "
-                  f"L1 hit rate = "
-                  f"{np.mean(list(hps.stats()['l1_hit_rate'].values())):.2f}")
+    # -- 3. deploy: bundle -> config-driven server ---------------------------
+    with tempfile.TemporaryDirectory() as root:
+        m.deploy(root, cache_capacity=512)   # pdb/ graph.json dense.npz ps.json
+        server, loaded = build_server_from_config(
+            os.path.join(root, "ps.json"))
+        data = SyntheticCTR(loaded.cfg, 256)
+        warm = data.batch(998)
+        server.predict(warm["dense"], warm["cat"])  # jit + cache warmup
+        server.latencies_ms.clear()
+        req = data.batch(999)
+        preds = server.predict(req["dense"], req["cat"])
+        want = m.predict(req)
+        np.testing.assert_allclose(preds, want, rtol=2e-2, atol=2e-2)
+        hit = np.mean(list(server.hps.stats()["l1_hit_rate"].values()))
+        print(f"served {len(preds)} predictions from the ps.json bundle; "
+              f"p50 latency = "
+              f"{server.latency_percentiles()['p50']:.2f} ms; "
+              f"L1 hit rate = {hit:.2f}")
+        print("config-driven server matches the training forward pass")
 
 
 if __name__ == "__main__":

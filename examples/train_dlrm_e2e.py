@@ -1,40 +1,46 @@
-"""End-to-end driver: train a ~100M-parameter DLRM for a few hundred steps
-with the full production substrate — fault-tolerant Trainer, async atomic
-checkpoints, Zipf synthetic Criteo-like data, AUC eval, and an injected
-mid-run failure to demonstrate checkpoint-restore + deterministic replay.
+"""End-to-end driver: train a ~100M-parameter DLRM for a few hundred
+steps through the graph API with the full production substrate —
+fault-tolerant Trainer, async atomic checkpoints, Zipf synthetic
+Criteo-like data, AUC eval, and an injected mid-run failure to
+demonstrate checkpoint-restore + deterministic replay.
 
 Run:  PYTHONPATH=src python examples/train_dlrm_e2e.py [--steps 300]
 """
 import argparse
-import dataclasses
-import os
 import shutil
 import time
 
-import jax
 import numpy as np
 
-from repro.configs.base import TrainConfig
-from repro.configs.registry import RECSYS_ARCHS
-from repro.data.synthetic import SyntheticCTR
-from repro.launch.mesh import make_test_mesh
+from repro.api import (
+    CreateSolver, DataReaderParams, DenseLayer, Input, Model,
+    SparseEmbedding,
+)
+from repro.configs.registry import CRITEO_VOCAB_SIZES
 from repro.models.recsys.layers import auc
-from repro.models.recsys.model import RecsysModel
-from repro.train.trainer import Trainer
 
 
-def build_cfg():
+def build_model(batch: int, lr: float) -> Model:
     """~100M parameters: 26 tables, capped vocabs, D=64."""
-    base = RECSYS_ARCHS["dlrm-criteo"]
-    tables = tuple(dataclasses.replace(
-        t, vocab_size=min(t.vocab_size, 60_000), dim=64)
-        for t in base.tables)
-    cfg = dataclasses.replace(base, tables=tables, embedding_dim=64,
-                              bottom_mlp=(256, 128, 64),
-                              top_mlp=(512, 256, 1))
-    n = cfg.total_embedding_params
-    print(f"model: {cfg.num_tables} tables, {n / 1e6:.1f}M embedding params")
-    return cfg
+    sizes = [min(v, 60_000) for v in CRITEO_VOCAB_SIZES]
+    m = Model(CreateSolver(batch_size=batch, lr=lr, ckpt_interval=50),
+              DataReaderParams(num_dense_features=13),
+              name="dlrm-e2e")
+    m.add(Input(dense_dim=13))
+    m.add(SparseEmbedding(
+        vocab_sizes=sizes, dim=64, top_name="emb",
+        table_names=[f"C{i + 1}" for i in range(len(sizes))]))
+    m.add(DenseLayer("mlp", ["dense"], ["bot"], units=(256, 128, 64),
+                     final_activation=True))
+    m.add(DenseLayer("dot_interaction", ["bot", "emb"], ["inter"]))
+    m.add(DenseLayer("concat", ["bot", "inter"], ["top_in"]))
+    m.add(DenseLayer("mlp", ["top_in"], ["logit"],
+                     units=(512, 256, 1)))
+    m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
+    cfg = m.to_recsys_config()
+    print(f"model: {cfg.num_tables} tables, "
+          f"{cfg.total_embedding_params / 1e6:.1f}M embedding params")
+    return m
 
 
 def main():
@@ -46,47 +52,39 @@ def main():
     args = ap.parse_args()
 
     shutil.rmtree(args.ckpt_dir, ignore_errors=True)
-    cfg = build_cfg()
-    mesh = make_test_mesh((1, 1))
-    data = SyntheticCTR(cfg, args.batch)
+    m = build_model(args.batch, lr=5e-3)
+    m.compile()
 
-    with mesh:
-        model = RecsysModel(cfg, mesh, global_batch=args.batch)
-        tcfg = TrainConfig(learning_rate=5e-3)
-        trainer = Trainer(model, tcfg, mesh, data.batch,
-                          ckpt_dir=args.ckpt_dir, ckpt_interval=50)
-        if args.inject_failure:
-            armed = {"on": True}
+    inject = None
+    if args.inject_failure:
+        armed = {"on": True}
 
-            def inject(step):
-                if step == args.steps // 2 and armed["on"]:
-                    armed["on"] = False
-                    print(f"*** injecting node failure at step {step} ***")
-                    raise RuntimeError("injected failure")
+        def inject(step):
+            if step == args.steps // 2 and armed["on"]:
+                armed["on"] = False
+                print(f"*** injecting node failure at step {step} ***")
+                raise RuntimeError("injected failure")
 
-            trainer.failure_injector = inject
+    t0 = time.time()
+    hist = m.fit(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                 log_every=25, failure_injector=inject)
+    dt = time.time() - t0
 
-        t0 = time.time()
-        out = trainer.train(args.steps, log_every=25)
-        dt = time.time() - t0
-
-    hist = out["history"]
     print(f"\n{len(hist)} steps in {dt:.1f}s "
           f"({args.batch * len(hist) / dt:.0f} samples/s)")
     print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
-    print(f"stragglers flagged: {out['stragglers']}")
+    print(f"stragglers flagged: {m.stragglers}")
 
     # -- eval AUC on held-out steps ----------------------------------------
-    import jax.numpy as jnp
-    params = out["params"]
-    logits_all, labels_all = [], []
-    fwd = jax.jit(model.apply)
+    from repro.data.synthetic import SyntheticCTR
+    data = SyntheticCTR(m.cfg, args.batch)
+    probs_all, labels_all = [], []
     for s in range(10_000, 10_005):
         b = data.batch(s)
-        logits_all.append(np.asarray(fwd(
-            params, {k: jnp.asarray(v) for k, v in b.items()})))
+        probs_all.append(m.predict(b))
         labels_all.append(b["label"])
-    a = auc(np.concatenate(logits_all), np.concatenate(labels_all))
+    # AUC is rank-based, so probabilities work as well as logits
+    a = auc(np.concatenate(probs_all), np.concatenate(labels_all))
     print(f"held-out AUC: {a:.4f} (planted-signal synthetic data)")
     assert a > 0.6, "training failed to learn the planted signal"
 

@@ -1,193 +1,858 @@
-"""Keras-like high-level API (paper §2).
+"""HugeCTR-style declarative graph API (paper §2).
 
-HugeCTR ships a Python API whose *look & feel* follows Keras so that
-"the tedious task of deploying individual training and inference jobs in
-an optimized manner on a specific hardware topology can be delegated" to
-the framework. Same idea here: declare tables + dense layers, call
-``compile()`` / ``fit()`` / ``predict()`` / ``deploy()`` — mesh
-construction, placement planning, sharding, jit, checkpoints all happen
-inside.
+HugeCTR's Python API is a *model graph*, not a two-slot facade: a
+``Solver`` carries the run-level knobs, ``DataReaderParams`` describes
+the input source, and the network is a list of named layers wired by
+``bottom_names``/``top_names`` — serialized to JSON and consumed
+verbatim by the inference side. Same shape here:
 
-    from repro.api import Model, SparseEmbedding, Dense
+    from repro.api import (CreateSolver, DataReaderParams, DenseLayer,
+                           Input, Model, SparseEmbedding)
 
-    m = Model([
-        SparseEmbedding(vocab_sizes=[1000, 500, 200], dim=16, hotness=2),
-        Dense([64, 32, 1]),
-    ])
-    m.compile(optimizer="adamw", lr=1e-2)
-    hist = m.fit(data_fn, steps=100, ckpt_dir="/tmp/ckpt")
-    preds = m.predict(batch)
-    server = m.deploy("/tmp/pdb")          # -> HPS-backed server
+    solver = CreateSolver(batch_size=256, lr=1e-2)
+    reader = DataReaderParams(source="synthetic", num_dense_features=13)
+    m = Model(solver, reader, name="dlrm-demo")
+    m.add(Input(dense_dim=13))
+    m.add(SparseEmbedding(vocab_sizes=[1000, 500, 200], dim=16,
+                          top_name="emb"))
+    m.add(DenseLayer("mlp", ["dense"], ["bot"], units=(32, 16),
+                     final_activation=True))
+    m.add(DenseLayer("dot_interaction", ["bot", "emb"], ["inter"]))
+    m.add(DenseLayer("concat", ["bot", "inter"], ["top_in"]))
+    m.add(DenseLayer("mlp", ["top_in"], ["logit"], units=(32, 1)))
+    m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
+    m.compile()
+    m.summary()
+    m.fit(steps=100)                       # reader-driven data
+    m.graph_to_json("graph.json")          # round-trip: Model.from_json
+    m.save("ckpt_dir")                     # graph + weights; Model.load
+    server = m.deploy("deploy_dir")        # writes ps.json bundle, too
+
+``DenseLayer`` types: ``mlp | cross | dot_interaction | fm | concat |
+sigmoid``.  All four paper recipes are expressible (see
+``configs/{dlrm,dcn,deepfm,wdl}_criteo.py``); WDL/DeepFM declare TWO
+``SparseEmbedding`` groups — the deep one plus a dim-1 wide branch.
+
+The graph does not execute itself: ``compile()`` *lowers* it onto the
+existing ``RecsysConfig``/``RecsysModel``/``Trainer`` machinery by
+structurally matching one of the four canonical recipes (helpful errors
+otherwise), so every kernel, placement and fault-tolerance behaviour of
+the training stack is reused unchanged. ``graph_to_json`` embeds a hash
+of the lowered config; ``Model.from_json`` re-lowers and verifies it.
+
+``deploy(directory)`` writes a relocatable serving bundle — ``pdb/``
+(all tables, wide twins included), ``graph.json``, ``dense.npz`` and a
+ps.json-style ``HPSConfig`` — and ``launch/serve.py`` reconstructs the
+``HPS`` + ``InferenceServer`` from that bundle alone, no Python object
+from training in hand.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import json
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (
-    EmbeddingTableConfig, RecsysConfig, TrainConfig,
+    EmbeddingTableConfig, HPSConfig, RecsysConfig, TrainConfig,
+    hps_config_to_dict, recsys_config_hash,
 )
-from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+GRAPH_FORMAT = "repro-graph-v1"
+PS_FORMAT = "repro-ps-v1"
+
+
+class GraphError(ValueError):
+    """A model graph that cannot be lowered onto the training stack."""
+
+
+# ---------------------------------------------------------------------------
+# Run-level declarations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Solver:
+    """Run-level knobs (HugeCTR's ``CreateSolver``): batch, mesh, mode,
+    and both optimizers — everything ``compile()`` used to take as
+    keyword soup."""
+    batch_size: int = 256
+    lr: float = 1e-3
+    optimizer: str = "adamw"                  # dense tower optimizer
+    sparse_optimizer: str = "rowwise_adagrad"  # embedding optimizer
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    grad_allreduce_dtype: str = "f32"
+    mixed_precision: bool = True
+    mode: str = "gspmd"                       # "gspmd" | "manual"
+    #: None = size the mesh to the visible devices; (r, c) = test mesh
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    ckpt_interval: int = 50
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mesh_shape is not None:
+            self.mesh_shape = tuple(self.mesh_shape)
+
+    def to_train_config(self) -> TrainConfig:
+        return TrainConfig(
+            learning_rate=self.lr, dense_optimizer=self.optimizer,
+            sparse_optimizer=self.sparse_optimizer,
+            weight_decay=self.weight_decay, grad_clip=self.grad_clip,
+            mixed_precision=self.mixed_precision,
+            grad_allreduce_dtype=self.grad_allreduce_dtype)
+
+
+def CreateSolver(**kwargs) -> Solver:  # noqa: N802 — HugeCTR spelling
+    return Solver(**kwargs)
+
+
+@dataclasses.dataclass
+class DataReaderParams:
+    """Input source + feature spec. ``synthetic`` draws the stateless
+    Zipf CTR stream; ``criteo`` reads the TSV format at ``path``."""
+    source: str = "synthetic"
+    num_dense_features: int = 13
+    path: Optional[str] = None
+    seed: int = 0
+    zipf_a: float = 1.1
+
+    def __post_init__(self):
+        if self.source not in ("synthetic", "criteo"):
+            raise GraphError(f"unknown reader source {self.source!r}")
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Input:
+    """Declares the named input tensors every other layer wires to."""
+    dense_dim: int
+    dense_name: str = "dense"
+    sparse_name: str = "cat"
+    label_name: str = "label"
 
 
 @dataclasses.dataclass
 class SparseEmbedding:
-    """Declarative embedding layer: one table per categorical feature.
-
-    ``strategy="auto"`` delegates placement (localized / distributed /
-    hybrid / replicated) to the planner, per table.
-    """
+    """One embedding group: a set of tables sharing dim / combiner /
+    placement strategy. Repeatable — WDL/DeepFM add a second, dim-1
+    group for the wide branch."""
     vocab_sizes: Sequence[int]
     dim: int
-    hotness: int = 1
+    top_name: str = "emb"
+    bottom_name: str = "cat"
+    #: ids per sample, scalar or per-table
+    hotness: Union[int, Sequence[int]] = 1
     combiner: str = "sum"
     strategy: str = "auto"
     hot_fraction: float = 0.05
+    table_names: Optional[Sequence[str]] = None
 
-    def to_tables(self):
+    def __post_init__(self):
+        self.vocab_sizes = tuple(int(v) for v in self.vocab_sizes)
+        if not isinstance(self.hotness, int):
+            self.hotness = tuple(int(h) for h in self.hotness)
+        if self.table_names is not None:
+            self.table_names = tuple(self.table_names)
+            if len(self.table_names) != len(self.vocab_sizes):
+                raise GraphError(
+                    f"{len(self.table_names)} table_names for "
+                    f"{len(self.vocab_sizes)} vocab_sizes")
+
+    def to_tables(self) -> Tuple[EmbeddingTableConfig, ...]:
+        names = self.table_names or tuple(
+            f"f{i}" for i in range(len(self.vocab_sizes)))
+        hot = self.hotness if not isinstance(self.hotness, int) else \
+            (self.hotness,) * len(self.vocab_sizes)
         return tuple(
-            EmbeddingTableConfig(f"f{i}", v, self.dim,
-                                 hotness=self.hotness,
+            EmbeddingTableConfig(names[i], v, self.dim, hotness=hot[i],
                                  combiner=self.combiner,
                                  strategy=self.strategy,
                                  hot_fraction=self.hot_fraction)
             for i, v in enumerate(self.vocab_sizes))
 
 
-@dataclasses.dataclass
-class Dense:
-    """The dense tower (MLP over [dense_features; flattened embeddings])."""
-    units: Sequence[int]
-    num_dense_features: int = 13
+DENSE_LAYER_TYPES = ("mlp", "cross", "dot_interaction", "fm", "concat",
+                     "sigmoid")
 
 
 @dataclasses.dataclass
-class Interaction:
-    """DLRM-style pairwise-dot interaction between embedding vectors."""
-    bottom_mlp: Sequence[int] = (64, 16)
-    top_mlp: Sequence[int] = (64, 32, 1)
-    num_dense_features: int = 13
+class DenseLayer:
+    """One named dense layer, wired by tensor names.
+
+    ``mlp``              — MLP over the (implicitly concatenated)
+                           bottoms; ``units`` per layer,
+                           ``final_activation`` keeps the last ReLU.
+    ``cross``            — DCN cross net, ``num_layers`` deep.
+    ``dot_interaction``  — DLRM pairwise dots over
+                           ``[bottom_mlp_out, emb]``.
+    ``fm``               — factorization-machine first+second order term
+                           over ``[dense, wide, emb]``.
+    ``concat``           — feature concatenation (3-D embeddings
+                           flatten).
+    ``sigmoid``          — terminal: sums its bottom logits, emits the
+                           probability.
+    """
+    type: str
+    bottom_names: Sequence[str]
+    top_names: Sequence[str]
+    units: Sequence[int] = ()
+    num_layers: int = 0                 # cross only
+    final_activation: bool = False      # mlp only
+
+    def __post_init__(self):
+        if self.type not in DENSE_LAYER_TYPES:
+            raise GraphError(
+                f"unknown DenseLayer type {self.type!r}; expected one "
+                f"of {DENSE_LAYER_TYPES}")
+        self.bottom_names = tuple(self.bottom_names)
+        self.top_names = tuple(self.top_names)
+        self.units = tuple(int(u) for u in self.units)
+        if len(self.top_names) != 1:
+            raise GraphError(
+                f"DenseLayer({self.type}) must produce exactly one "
+                f"output, got top_names={self.top_names}")
+
+    @property
+    def top(self) -> str:
+        return self.top_names[0]
+
+
+# ---------------------------------------------------------------------------
+# Lowering: layer graph -> RecsysConfig
+# ---------------------------------------------------------------------------
+
+def _check_wiring(inp: Input, embs: List[SparseEmbedding],
+                  layers: List[DenseLayer]) -> None:
+    produced = {inp.dense_name}
+    for e in embs:
+        if e.bottom_name != inp.sparse_name:
+            raise GraphError(
+                f"SparseEmbedding {e.top_name!r} reads "
+                f"{e.bottom_name!r} but the Input's sparse tensor is "
+                f"{inp.sparse_name!r}")
+        if e.top_name in produced:
+            raise GraphError(f"duplicate tensor name {e.top_name!r}")
+        produced.add(e.top_name)
+    for l in layers:
+        for b in l.bottom_names:
+            if b not in produced:
+                raise GraphError(
+                    f"DenseLayer({l.type}) -> {l.top!r} reads unknown "
+                    f"tensor {b!r}; layers must be added in topological "
+                    f"order (known so far: {sorted(produced)})")
+        if l.top in produced:
+            raise GraphError(f"duplicate tensor name {l.top!r}")
+        produced.add(l.top)
+
+
+def _split_embeddings(embs: List[SparseEmbedding]
+                      ) -> Tuple[SparseEmbedding, Optional[SparseEmbedding]]:
+    if len(embs) == 1:
+        return embs[0], None
+    wides = [e for e in embs if e.dim == 1]
+    if len(wides) != 1:
+        raise GraphError(
+            "with two SparseEmbedding groups exactly one must be the "
+            f"dim-1 wide branch; got dims "
+            f"{[e.dim for e in embs]}")
+    wide = wides[0]
+    deep = next(e for e in embs if e is not wide)
+    if wide.vocab_sizes != deep.vocab_sizes:
+        raise GraphError(
+            "the wide branch must mirror the deep tables: vocab_sizes "
+            f"differ ({len(wide.vocab_sizes)} vs "
+            f"{len(deep.vocab_sizes)} tables or unequal sizes)")
+    if wide.combiner != "sum":
+        raise GraphError("the wide branch pools with combiner='sum'")
+    return deep, wide
+
+
+def _one(layers: List[DenseLayer], type_: str, *, what: str,
+         optional: bool = False) -> Optional[DenseLayer]:
+    found = [l for l in layers if l.type == type_]
+    if len(found) > 1:
+        raise GraphError(f"expected at most one {type_!r} layer "
+                         f"({what}), got {len(found)}")
+    if not found:
+        if optional:
+            return None
+        raise GraphError(f"missing the {type_!r} layer ({what})")
+    return found[0]
+
+
+def _producer(layers: List[DenseLayer], name: str, *,
+              what: str) -> DenseLayer:
+    for l in layers:
+        if l.top == name:
+            return l
+    raise GraphError(f"no layer produces {name!r} ({what})")
+
+
+def _unused(layers: List[DenseLayer], used: List[DenseLayer],
+            kind: str) -> None:
+    left = [l for l in layers if not any(l is u for u in used)]
+    if left:
+        l = left[0]
+        raise GraphError(
+            f"DenseLayer({l.type}) -> {l.top!r} does not fit the "
+            f"{kind} recipe (see configs/{kind}_criteo.py for the "
+            f"canonical graph)")
+
+
+def _match_terminal_sigmoid(layers: List[DenseLayer],
+                            logits: Tuple[str, ...],
+                            used: List[DenseLayer], *,
+                            required: bool) -> None:
+    sig = _one(layers, "sigmoid", what="terminal probability",
+               optional=not required)
+    if sig is None:
+        return
+    if set(sig.bottom_names) != set(logits):
+        raise GraphError(
+            f"the sigmoid layer must sum exactly the logit tensors "
+            f"{sorted(logits)}, got {sorted(sig.bottom_names)}")
+    used.append(sig)
+
+
+def _lower_dlrm(name: str, inp: Input, deep: SparseEmbedding,
+                layers: List[DenseLayer]) -> RecsysConfig:
+    inter = _one(layers, "dot_interaction", what="DLRM interaction")
+    if inter.bottom_names[-1:] != (deep.top_name,) or \
+            len(inter.bottom_names) != 2:
+        raise GraphError(
+            "dot_interaction takes [bottom_mlp_out, "
+            f"{deep.top_name!r}], got {list(inter.bottom_names)}")
+    bot = _producer(layers, inter.bottom_names[0], what="bottom MLP")
+    if bot.type != "mlp" or bot.bottom_names != (inp.dense_name,):
+        raise GraphError(
+            f"the DLRM bottom tower must be an mlp over "
+            f"[{inp.dense_name!r}]")
+    if bot.units[-1] != deep.dim:
+        raise GraphError(
+            f"bottom mlp must end at the embedding dim for the "
+            f"interaction: units[-1]={bot.units[-1]} != {deep.dim}")
+    used = [bot, inter]
+    top_bottoms = (bot.top, inter.top)
+    cat = _one(layers, "concat", what="[bottom, interaction] concat",
+               optional=True)
+    if cat is not None:
+        if cat.bottom_names != top_bottoms:
+            raise GraphError(
+                f"the DLRM concat joins {list(top_bottoms)} in that "
+                f"order, got {list(cat.bottom_names)}")
+        used.append(cat)
+        top_bottoms = (cat.top,)
+    tops = [l for l in layers if l.type == "mlp" and l is not bot]
+    if len(tops) != 1 or tops[0].bottom_names != top_bottoms:
+        raise GraphError(
+            f"the DLRM top tower must be one mlp over "
+            f"{list(top_bottoms)}")
+    top = tops[0]
+    if top.units[-1] != 1:
+        raise GraphError(f"top mlp must end in 1 logit unit, got "
+                         f"units={top.units}")
+    used.append(top)
+    _match_terminal_sigmoid(layers, (top.top,), used, required=False)
+    _unused(layers, used, "dlrm")
+    return RecsysConfig(
+        name=name, model="dlrm", tables=deep.to_tables(),
+        num_dense_features=inp.dense_dim, bottom_mlp=bot.units,
+        top_mlp=top.units, embedding_dim=deep.dim)
+
+
+def _match_flat(layers: List[DenseLayer], inp: Input,
+                deep: SparseEmbedding) -> DenseLayer:
+    for l in layers:
+        if l.type == "concat" and \
+                l.bottom_names == (inp.dense_name, deep.top_name):
+            return l
+    raise GraphError(
+        f"missing the concat([{inp.dense_name!r}, {deep.top_name!r}]) "
+        "feature layer")
+
+
+def _lower_dcn(name: str, inp: Input, deep: SparseEmbedding,
+               layers: List[DenseLayer]) -> RecsysConfig:
+    flat = _match_flat(layers, inp, deep)
+    cross = _one(layers, "cross", what="DCN cross net", optional=True)
+    crossed = flat.top
+    used = [flat]
+    if cross is not None:
+        if cross.bottom_names != (flat.top,):
+            raise GraphError(
+                f"the cross net runs over [{flat.top!r}], got "
+                f"{list(cross.bottom_names)}")
+        crossed = cross.top
+        used.append(cross)
+    mlps = [l for l in layers if l.type == "mlp"]
+    deep_mlp = next((l for l in mlps if l.bottom_names == (flat.top,)),
+                    None)
+    if deep_mlp is None:
+        raise GraphError(f"missing the deep mlp over [{flat.top!r}]")
+    used.append(deep_mlp)
+    both = next((l for l in layers if l.type == "concat"
+                 and l.bottom_names == (crossed, deep_mlp.top)), None)
+    if both is None:
+        raise GraphError(
+            f"missing the concat([{crossed!r}, {deep_mlp.top!r}]) "
+            "combine input")
+    used.append(both)
+    combine = next((l for l in mlps if l.bottom_names == (both.top,)),
+                   None)
+    if combine is None or combine.units != (1,):
+        raise GraphError(
+            f"the combine head must be mlp([{both.top!r}], units=(1,))")
+    used.append(combine)
+    _match_terminal_sigmoid(layers, (combine.top,), used, required=False)
+    _unused(layers, used, "dcn")
+    return RecsysConfig(
+        name=name, model="dcn", tables=deep.to_tables(),
+        num_dense_features=inp.dense_dim, bottom_mlp=(),
+        top_mlp=deep_mlp.units, embedding_dim=deep.dim,
+        num_cross_layers=cross.num_layers if cross is not None else 0)
+
+
+def _match_wide_deep_mlp(layers: List[DenseLayer], inp: Input,
+                         deep: SparseEmbedding, kind: str
+                         ) -> Tuple[DenseLayer, DenseLayer]:
+    """The concat+deep-tower pair shared by DeepFM and WDL; the deep
+    tower declares its 1-logit head explicitly (units end in 1)."""
+    flat = _match_flat(layers, inp, deep)
+    deep_mlp = next((l for l in layers if l.type == "mlp"
+                     and l.bottom_names == (flat.top,)), None)
+    if deep_mlp is None:
+        raise GraphError(f"missing the deep mlp over [{flat.top!r}]")
+    if deep_mlp.units[-1] != 1:
+        raise GraphError(
+            f"the {kind} deep tower ends in its own 1-unit logit head: "
+            f"units must end in 1, got {deep_mlp.units}")
+    return flat, deep_mlp
+
+
+def _lower_deepfm(name: str, inp: Input, deep: SparseEmbedding,
+                  wide: Optional[SparseEmbedding],
+                  layers: List[DenseLayer]) -> RecsysConfig:
+    if wide is None:
+        raise GraphError("DeepFM needs the dim-1 wide SparseEmbedding "
+                         "for its first-order term")
+    flat, deep_mlp = _match_wide_deep_mlp(layers, inp, deep, "deepfm")
+    fm = _one(layers, "fm", what="FM first+second order term")
+    if set(fm.bottom_names) != {inp.dense_name, wide.top_name,
+                               deep.top_name}:
+        raise GraphError(
+            f"the fm layer reads [{inp.dense_name!r}, "
+            f"{wide.top_name!r}, {deep.top_name!r}], got "
+            f"{list(fm.bottom_names)}")
+    used = [flat, deep_mlp, fm]
+    _match_terminal_sigmoid(layers, (fm.top, deep_mlp.top), used,
+                            required=True)
+    _unused(layers, used, "deepfm")
+    return RecsysConfig(
+        name=name, model="deepfm", tables=deep.to_tables(),
+        num_dense_features=inp.dense_dim, bottom_mlp=(),
+        top_mlp=deep_mlp.units[:-1], embedding_dim=deep.dim)
+
+
+def _lower_wdl(name: str, inp: Input, deep: SparseEmbedding,
+               wide: Optional[SparseEmbedding],
+               layers: List[DenseLayer]) -> RecsysConfig:
+    if wide is None:
+        raise GraphError("WDL needs the dim-1 wide SparseEmbedding "
+                         "branch")
+    flat, deep_mlp = _match_wide_deep_mlp(layers, inp, deep, "wdl")
+    heads = [l for l in layers if l.type == "mlp"
+             and set(l.bottom_names) == {inp.dense_name, wide.top_name}]
+    if len(heads) != 1 or heads[0].units != (1,):
+        raise GraphError(
+            f"the wide head must be mlp([{inp.dense_name!r}, "
+            f"{wide.top_name!r}], units=(1,))")
+    used = [flat, deep_mlp, heads[0]]
+    _match_terminal_sigmoid(layers, (heads[0].top, deep_mlp.top), used,
+                            required=True)
+    _unused(layers, used, "wdl")
+    return RecsysConfig(
+        name=name, model="wdl", tables=deep.to_tables(),
+        num_dense_features=inp.dense_dim, bottom_mlp=(),
+        top_mlp=deep_mlp.units[:-1], embedding_dim=deep.dim)
+
+
+def lower_graph(name: str, inp: Optional[Input],
+                embs: List[SparseEmbedding],
+                layers: List[DenseLayer]) -> RecsysConfig:
+    """Structurally match the layer graph onto one of the four recipes
+    the training stack executes; raise :class:`GraphError` otherwise."""
+    if inp is None:
+        raise GraphError("the graph needs an Input layer")
+    if not embs:
+        raise GraphError("the graph needs at least one SparseEmbedding")
+    if len(embs) > 2:
+        raise GraphError("at most two SparseEmbedding groups (deep + "
+                         f"wide) are supported, got {len(embs)}")
+    _check_wiring(inp, embs, layers)
+    deep, wide = _split_embeddings(embs)
+    types = {l.type for l in layers}
+    if "dot_interaction" in types:
+        if wide is not None:
+            raise GraphError("DLRM takes a single embedding group")
+        return _lower_dlrm(name, inp, deep, layers)
+    if "fm" in types:
+        return _lower_deepfm(name, inp, deep, wide, layers)
+    if wide is not None:
+        return _lower_wdl(name, inp, deep, wide, layers)
+    return _lower_dcn(name, inp, deep, layers)
+
+
+# ---------------------------------------------------------------------------
+# The model graph
+# ---------------------------------------------------------------------------
+
+def _auto_mesh(mesh_shape: Optional[Tuple[int, ...]]):
+    from repro.launch.mesh import make_production_mesh, make_test_mesh
+    if mesh_shape is not None:
+        return make_test_mesh(tuple(mesh_shape))
+    n_dev = len(jax.devices())
+    return make_test_mesh((n_dev, 1)) if n_dev < 256 \
+        else make_production_mesh()
 
 
 class Model:
+    """A declarative model graph; ``compile()`` lowers it, everything
+    else (fit / predict / save / load / deploy) drives the lowered
+    stack."""
 
-    def __init__(self, layers: List, *, name: str = "model",
-                 mesh=None):
+    def __init__(self, solver: Optional[Solver] = None,
+                 reader: Optional[DataReaderParams] = None, *,
+                 name: str = "model", mesh=None):
+        self.solver = solver or Solver()
+        self.reader = reader
         self.name = name
-        emb = [l for l in layers if isinstance(l, SparseEmbedding)]
-        if len(emb) != 1:
-            raise ValueError("exactly one SparseEmbedding layer required")
-        self._emb = emb[0]
-        dense = [l for l in layers if isinstance(l, (Dense, Interaction))]
-        if len(dense) != 1:
-            raise ValueError("exactly one Dense or Interaction layer "
-                             "required")
-        self._dense = dense[0]
-        n_dev = len(jax.devices())
-        self.mesh = mesh or (make_test_mesh((n_dev, 1)) if n_dev < 256
-                             else make_production_mesh())
-        self._model = None
+        self._mesh_override = mesh
+        self._input: Optional[Input] = None
+        self._embeddings: List[SparseEmbedding] = []
+        self._dense_layers: List[DenseLayer] = []
+        self.cfg: Optional[RecsysConfig] = None
+        self.mesh = None
+        self._model = None            # lowered RecsysModel
+        self._apply_jit = None
+        self._tcfg: Optional[TrainConfig] = None
         self._params = None
         self._opt_state = None
-        self._tcfg: Optional[TrainConfig] = None
         self._trainer = None
+        self.stragglers = 0
 
-    # -- build ----------------------------------------------------------------
+    # -- graph construction ---------------------------------------------------
 
-    def _build_cfg(self, batch: int) -> RecsysConfig:
-        tables = self._emb.to_tables()
-        if isinstance(self._dense, Interaction):
-            bottom = tuple(self._dense.bottom_mlp)
-            if bottom[-1] != self._emb.dim:
-                bottom = bottom + (self._emb.dim,)
-            return RecsysConfig(
-                name=self.name, model="dlrm", tables=tables,
-                num_dense_features=self._dense.num_dense_features,
-                bottom_mlp=bottom, top_mlp=tuple(self._dense.top_mlp),
-                embedding_dim=self._emb.dim)
-        # plain Dense tower = DCN with zero cross layers (no wide branch,
-        # so the deployed server needs exactly one HPS)
-        units = tuple(self._dense.units)
-        if units[-1] == 1:
-            units = units[:-1] or (16,)
-        return RecsysConfig(
-            name=self.name, model="dcn", tables=tables,
-            num_dense_features=self._dense.num_dense_features,
-            bottom_mlp=(), top_mlp=units, embedding_dim=self._emb.dim,
-            num_cross_layers=0)
+    def add(self, layer) -> "Model":
+        if isinstance(layer, Input):
+            if self._input is not None:
+                raise GraphError("the graph already has an Input layer")
+            self._input = layer
+        elif isinstance(layer, SparseEmbedding):
+            self._embeddings.append(layer)
+        elif isinstance(layer, DenseLayer):
+            self._dense_layers.append(layer)
+        else:
+            raise GraphError(
+                f"model.add() takes Input, SparseEmbedding or "
+                f"DenseLayer, got {type(layer).__name__}")
+        return self
 
-    def compile(self, *, optimizer: str = "adamw", lr: float = 1e-3,
-                sparse_optimizer: str = "rowwise_adagrad",
-                batch_size: int = 256, mode: str = "gspmd"):
+    def to_recsys_config(self) -> RecsysConfig:
+        """The lowering pass (pure — no devices touched)."""
+        return lower_graph(self.name, self._input, self._embeddings,
+                           self._dense_layers)
+
+    # -- compile ---------------------------------------------------------------
+
+    def compile(self, *, mesh=None) -> "Model":
         from repro.models.recsys.model import RecsysModel
-        self._tcfg = TrainConfig(learning_rate=lr,
-                                 dense_optimizer=optimizer,
-                                 sparse_optimizer=sparse_optimizer)
-        self.cfg = self._build_cfg(batch_size)
-        self.batch_size = batch_size
-        self._mode = mode
+        self.cfg = self.to_recsys_config()
+        if self.reader is not None and \
+                self.reader.num_dense_features != self._input.dense_dim:
+            raise GraphError(
+                f"reader num_dense_features="
+                f"{self.reader.num_dense_features} != Input dense_dim="
+                f"{self._input.dense_dim}")
+        self._tcfg = self.solver.to_train_config()
+        self.batch_size = self.solver.batch_size
+        self.mesh = mesh or self._mesh_override \
+            or _auto_mesh(self.solver.mesh_shape)
         with self.mesh:
             self._model = RecsysModel(self.cfg, self.mesh,
-                                      global_batch=batch_size)
+                                      global_batch=self.batch_size)
+        self._apply_jit = None        # one jitted forward, built lazily
         return self
+
+    @property
+    def model(self):
+        """The lowered RecsysModel (compile() first)."""
+        return self._model
+
+    @property
+    def params(self):
+        return self._params
+
+    def _require_compiled(self):
+        if self._model is None:
+            self.compile()
 
     # -- train ------------------------------------------------------------------
 
-    def fit(self, data_fn: Callable[[int], Dict], steps: int, *,
-            ckpt_dir: Optional[str] = None, log_every: int = 0,
-            seed: int = 0) -> List[Dict]:
-        """``data_fn(step) -> {"dense", "cat", "label"}`` host batches."""
-        if self._model is None:
-            raise RuntimeError("call compile() first")
+    def _reader_data_fn(self) -> Callable[[int], Dict]:
+        r = self.reader or DataReaderParams(
+            num_dense_features=self.cfg.num_dense_features)
+        if r.source == "synthetic":
+            from repro.data.synthetic import SyntheticCTR
+            return SyntheticCTR(self.cfg, self.batch_size, seed=r.seed,
+                                zipf_a=r.zipf_a).batch
+        from repro.data import criteo
+        if r.path is None:
+            raise GraphError("DataReaderParams(source='criteo') needs "
+                             "a path")
+        it = criteo.reader(r.path, self.cfg, self.batch_size)
+        return lambda step: next(it)
+
+    def fit(self, data_fn: Optional[Callable[[int], Dict]] = None,
+            steps: int = 100, *, ckpt_dir: Optional[str] = None,
+            log_every: int = 0, seed: Optional[int] = None,
+            failure_injector: Optional[Callable[[int], None]] = None
+            ) -> List[Dict]:
+        """Train; ``data_fn(step) -> {"dense", "cat", "label"}`` host
+        batches (defaults to the reader's source). Resumes from a newer
+        checkpoint in ``ckpt_dir`` if present, else from weights already
+        held (e.g. after :meth:`load`)."""
+        self._require_compiled()
+        if data_fn is None:
+            data_fn = self._reader_data_fn()
         from repro.train.trainer import Trainer
         with self.mesh:
-            self._trainer = Trainer(self._model, self._tcfg, self.mesh,
-                                    data_fn, ckpt_dir=ckpt_dir,
-                                    mode=self._mode)
-            out = self._trainer.train(steps, seed=seed,
-                                      log_every=log_every)
+            self._trainer = Trainer(
+                self._model, self._tcfg, self.mesh, data_fn,
+                ckpt_dir=ckpt_dir,
+                ckpt_interval=self.solver.ckpt_interval,
+                mode=self.solver.mode)
+            if failure_injector is not None:
+                self._trainer.failure_injector = failure_injector
+            init = (self._params, self._opt_state) \
+                if self._params is not None else None
+            out = self._trainer.train(
+                steps, seed=self.solver.seed if seed is None else seed,
+                log_every=log_every, initial_state=init)
         self._params = out["params"]
         self._opt_state = out["opt_state"]
+        self.stragglers = out["stragglers"]
         return out["history"]
 
     # -- inference ----------------------------------------------------------------
 
     def predict(self, batch: Dict) -> np.ndarray:
         if self._params is None:
-            raise RuntimeError("fit() (or load) before predict()")
+            raise RuntimeError("fit() or load() before predict()")
+        if self._apply_jit is None:
+            self._apply_jit = jax.jit(self._model.apply)
         with self.mesh:
-            logits = jax.jit(self._model.apply)(
+            logits = self._apply_jit(
                 self._params,
                 {k: jnp.asarray(v) for k, v in batch.items()
                  if k in ("dense", "cat")})
         return np.asarray(jax.nn.sigmoid(logits))
 
-    def deploy(self, pdb_root: str, *, cache_capacity: int = 4096):
-        """Export to the HPS and return a ready InferenceServer."""
-        from repro.core.hps.hps import HPS
-        from repro.core.hps.persistent_db import PersistentDB
-        from repro.serve.server import InferenceServer, deploy_from_training
-        pdb = PersistentDB(pdb_root)
-        deploy_from_training(self._model, self._params, pdb, self.name)
-        hps = HPS(self.name, self.cfg.tables, pdb,
-                  cache_capacity=cache_capacity)
-        dense = {k: v for k, v in self._params.items()
-                 if k not in ("embedding",)}
-        wide_hps = None
-        return InferenceServer(self._model, dense, hps, wide_hps=wide_hps)
+    # -- introspection ------------------------------------------------------------
+
+    def summary(self) -> str:
+        cfg = self.to_recsys_config()
+        lines = [f'Model "{self.name}" -> {cfg.model} '
+                 f'({cfg.num_tables} tables, '
+                 f'{cfg.total_embedding_params / 1e6:.2f}M embedding '
+                 f'params)']
+        i = self._input
+        lines.append(f"  Input              {i.dense_name}[{i.dense_dim}]"
+                     f" {i.sparse_name} {i.label_name}")
+        for e in self._embeddings:
+            hot = e.hotness if isinstance(e.hotness, int) \
+                else f"{min(e.hotness)}..{max(e.hotness)}"
+            lines.append(
+                f"  SparseEmbedding    {e.bottom_name} -> {e.top_name}"
+                f"  T={len(e.vocab_sizes)} D={e.dim} hot={hot} "
+                f"combiner={e.combiner} strategy={e.strategy}")
+        for l in self._dense_layers:
+            extra = ""
+            if l.type == "mlp":
+                extra = f"  units={l.units}"
+            elif l.type == "cross":
+                extra = f"  num_layers={l.num_layers}"
+            lines.append(
+                f"  DenseLayer {l.type:<15} "
+                f"{list(l.bottom_names)} -> {l.top}{extra}")
+        out = "\n".join(lines)
+        print(out)
+        return out
+
+    # -- JSON round-trip ------------------------------------------------------------
+
+    def graph_dict(self) -> Dict:
+        layers: List[Dict] = []
+        if self._input is not None:
+            layers.append({"kind": "input",
+                           **dataclasses.asdict(self._input)})
+        for e in self._embeddings:
+            layers.append({"kind": "sparse_embedding",
+                           **dataclasses.asdict(e)})
+        for l in self._dense_layers:
+            layers.append({"kind": "dense", **dataclasses.asdict(l)})
+        return {
+            "format": GRAPH_FORMAT,
+            "name": self.name,
+            "solver": dataclasses.asdict(self.solver),
+            "reader": dataclasses.asdict(self.reader)
+            if self.reader is not None else None,
+            "layers": layers,
+            "config_hash": recsys_config_hash(self.to_recsys_config()),
+        }
+
+    def graph_to_json(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.graph_dict(), f, indent=1)
+        return path
+
+    @classmethod
+    def from_json(cls, path: str, *, mesh=None) -> "Model":
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("format") != GRAPH_FORMAT:
+            raise GraphError(
+                f"{path}: unknown graph format {d.get('format')!r}")
+        m = cls(Solver(**d["solver"]),
+                DataReaderParams(**d["reader"])
+                if d.get("reader") else None,
+                name=d["name"], mesh=mesh)
+        kinds = {"input": Input, "sparse_embedding": SparseEmbedding,
+                 "dense": DenseLayer}
+        for ld in d["layers"]:
+            ld = dict(ld)
+            kind = ld.pop("kind")
+            if kind not in kinds:
+                raise GraphError(f"{path}: unknown layer kind {kind!r}")
+            m.add(kinds[kind](**ld))
+        got = recsys_config_hash(m.to_recsys_config())
+        if d.get("config_hash") and got != d["config_hash"]:
+            raise GraphError(
+                f"{path}: graph lowers to config hash {got} but the "
+                f"file claims {d['config_hash']} — the file was edited "
+                "or written by an incompatible version")
+        return m
 
     # -- persistence -----------------------------------------------------------------
 
-    def save(self, directory: str, step: int = 0):
-        from repro.train import checkpoint as ck
-        tree = {"params": self._trainer._export(self._params)
-                if self._trainer else self._params}
-        ck.save(directory, step, tree)
+    def _export_params(self, params):
+        from repro.models.recsys.model import export_logical_params
+        return export_logical_params(self._model, params)
 
-    @property
-    def params(self):
-        return self._params
+    def _import_params(self, params):
+        from repro.models.recsys.model import import_logical_params
+        return import_logical_params(self._model, params)
+
+    def save(self, directory: str, step: int = 0) -> str:
+        """Write the graph (graph.json) + a logical-layout checkpoint —
+        everything :meth:`load` needs to reconstruct the model."""
+        if self._params is None:
+            raise RuntimeError("nothing to save: fit() or load() first")
+        from repro.train import checkpoint as ck
+        os.makedirs(directory, exist_ok=True)
+        self.graph_to_json(os.path.join(directory, "graph.json"))
+        with self.mesh:
+            tree = {"params": self._export_params(self._params)}
+        ck.save(directory, step, tree)
+        return directory
+
+    @classmethod
+    def load(cls, directory: str, *, mesh=None) -> "Model":
+        """Rebuild a model from :meth:`save` output alone: graph JSON +
+        newest checkpoint. ``predict()`` works immediately; ``fit()``
+        continues from the loaded weights."""
+        from repro.train import checkpoint as ck
+        m = cls.from_json(os.path.join(directory, "graph.json"),
+                          mesh=mesh)
+        m.compile()
+        step = ck.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no checkpoint under {directory}")
+        flat, _ = ck.load(directory, step)
+        with m.mesh:
+            dummy = jax.eval_shape(
+                lambda: m._model.init(jax.random.PRNGKey(0)))
+            template = {"params": jax.eval_shape(m._export_params,
+                                                 dummy)}
+            tree = ck.unflatten_like(template, flat)
+            m._params = m._import_params(tree["params"])
+        return m
+
+    # -- deployment -------------------------------------------------------------------
+
+    def dense_params(self) -> Dict:
+        return {k: v for k, v in self._params.items()
+                if k not in ("embedding", "wide_embedding")}
+
+    def deploy(self, directory: str, *, cache_capacity: int = 4096,
+               cache_shards: int = 1, refresh_budget: int = 512,
+               max_batch: int = 1024, vdb=None, bus=None):
+        """Write the serving bundle and return a ready InferenceServer.
+
+        The bundle — ``pdb/`` (every table, wide twins included),
+        ``graph.json``, ``dense.npz``, ``ps.json`` — is all
+        ``launch/serve.py`` needs: the same server can be reconstructed
+        later with no Python object from this process.
+        """
+        if self._params is None:
+            raise RuntimeError("fit() or load() before deploy()")
+        from repro.core.hps.hps import HPS
+        from repro.core.hps.persistent_db import PersistentDB
+        from repro.models.recsys.model import wide_tables
+        from repro.serve.server import (
+            InferenceServer, deploy_from_training,
+        )
+        from repro.train import checkpoint as ck
+        os.makedirs(directory, exist_ok=True)
+        pdb_root = os.path.join(directory, "pdb")
+        pdb = PersistentDB(pdb_root)
+        with self.mesh:
+            deploy_from_training(self._model, self._params, pdb,
+                                 self.name)
+        self.graph_to_json(os.path.join(directory, "graph.json"))
+        dense = self.dense_params()
+        np.savez(os.path.join(directory, "dense.npz"),
+                 **ck.flatten_tree(dense))
+        has_wide = self._model.wide is not None
+        hcfg = HPSConfig(
+            model=self.name, pdb_root="pdb", graph_path="graph.json",
+            dense_weights_path="dense.npz", tables=self.cfg.tables,
+            wide=has_wide, cache_capacity=cache_capacity,
+            cache_shards=cache_shards, refresh_budget=refresh_budget,
+            max_batch=max_batch,
+            config_hash=recsys_config_hash(self.cfg))
+        with open(os.path.join(directory, "ps.json"), "w") as f:
+            json.dump(hps_config_to_dict(hcfg), f, indent=1)
+
+        hps = HPS(self.name, self.cfg.tables, pdb, vdb=vdb, bus=bus,
+                  cache_capacity=cache_capacity,
+                  cache_shards=cache_shards)
+        wide_hps = None
+        if has_wide:
+            # the wide branch shares the bus (its *_wide topics mark its
+            # own L1 dirty), the VDB namespace and the striping config —
+            # otherwise online updates never reach the wide L1
+            wide_hps = HPS(self.name, wide_tables(self.cfg), pdb,
+                           vdb=vdb, bus=bus,
+                           cache_capacity=cache_capacity,
+                           cache_shards=cache_shards)
+        return InferenceServer(self._model, dense, hps,
+                               wide_hps=wide_hps, max_batch=max_batch,
+                               refresh_budget=refresh_budget)

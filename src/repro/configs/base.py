@@ -7,7 +7,9 @@ hash/compare cleanly and can be embedded in dry-run artifact names.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+import hashlib
+import json
+from typing import Dict, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Embedding tables (the paper's core object)
@@ -63,6 +65,67 @@ class RecsysConfig:
     @property
     def total_embedding_params(self) -> int:
         return sum(t.param_count for t in self.tables)
+
+
+def recsys_config_to_dict(cfg: RecsysConfig) -> Dict:
+    """Plain-JSON form of a RecsysConfig (tuples become lists)."""
+    return dataclasses.asdict(cfg)
+
+
+def recsys_config_from_dict(d: Dict) -> RecsysConfig:
+    tables = tuple(EmbeddingTableConfig(**t) for t in d["tables"])
+    rest = {k: v for k, v in d.items() if k != "tables"}
+    for k in ("bottom_mlp", "top_mlp"):
+        rest[k] = tuple(rest[k])
+    return RecsysConfig(tables=tables, **rest)
+
+
+def recsys_config_hash(cfg: RecsysConfig) -> str:
+    """Stable content hash, embedded in serialized graphs so a reloaded
+    graph can prove it lowers to the exact same model."""
+    blob = json.dumps(recsys_config_to_dict(cfg), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# HPS deployment config (the ps.json analogue: everything the serving
+# launcher needs to stand up an InferenceServer with no training objects)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HPSConfig:
+    """One deployed model's parameter-server spec.
+
+    Paths are relative to the directory holding the ps.json file, so the
+    whole deployment bundle (ps.json + graph.json + dense weights + PDB
+    files) is relocatable.
+    """
+    model: str
+    pdb_root: str
+    graph_path: str
+    dense_weights_path: str
+    tables: Tuple[EmbeddingTableConfig, ...]
+    #: wide models (wdl/deepfm) serve a second, dim-1 HPS
+    wide: bool = False
+    cache_capacity: int = 4096
+    cache_shards: int = 1
+    refresh_budget: int = 512
+    max_batch: int = 1024
+    config_hash: str = ""
+
+
+def hps_config_to_dict(cfg: HPSConfig) -> Dict:
+    d = dataclasses.asdict(cfg)
+    d["format"] = "repro-ps-v1"
+    return d
+
+
+def hps_config_from_dict(d: Dict) -> HPSConfig:
+    if d.get("format", "repro-ps-v1") != "repro-ps-v1":
+        raise ValueError(f"unknown ps config format {d.get('format')!r}")
+    tables = tuple(EmbeddingTableConfig(**t) for t in d["tables"])
+    rest = {k: v for k, v in d.items() if k not in ("tables", "format")}
+    return HPSConfig(tables=tables, **rest)
 
 
 # ---------------------------------------------------------------------------

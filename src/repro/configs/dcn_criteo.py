@@ -1,5 +1,42 @@
-"""Config module for ``--arch dcn-criteo`` (see registry for the source)."""
-from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+"""DCN-on-Criteo expressed as a graph-API recipe (paper §2).
+
+Cross network + deep tower over the shared feature concat, combined by
+a 1-unit head — declared with ``model.add(...)`` and lowered onto the
+registry config (parity-tested).
+"""
+from repro.api import (
+    DataReaderParams, DenseLayer, Input, Model, SparseEmbedding, Solver,
+)
+from repro.configs.registry import CRITEO_VOCAB_SIZES, RECSYS_ARCHS
 
 ARCH_ID = "dcn-criteo"
-CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]
+
+
+def build_model(*, smoke: bool = False, solver: Solver = None,
+                reader: DataReaderParams = None, mesh=None) -> Model:
+    if smoke:
+        sizes = [min(v, 1000) for v in CRITEO_VOCAB_SIZES[:6]]
+        top = (32, 16)
+    else:
+        sizes = list(CRITEO_VOCAB_SIZES)
+        top = (1024, 1024)
+    name = ARCH_ID + ("-smoke" if smoke else "")
+    m = Model(solver or Solver(),
+              reader or DataReaderParams(num_dense_features=13),
+              name=name, mesh=mesh)
+    m.add(Input(dense_dim=13))
+    m.add(SparseEmbedding(
+        vocab_sizes=sizes, dim=16, top_name="emb",
+        table_names=[f"C{i + 1}" for i in range(len(sizes))]))
+    m.add(DenseLayer("concat", ["dense", "emb"], ["flat"]))
+    m.add(DenseLayer("cross", ["flat"], ["crossed"], num_layers=6))
+    m.add(DenseLayer("mlp", ["flat"], ["deep"], units=top))
+    m.add(DenseLayer("concat", ["crossed", "deep"], ["both"]))
+    m.add(DenseLayer("mlp", ["both"], ["logit"], units=(1,)))
+    m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
+    return m
+
+
+CONFIG = RECSYS_ARCHS[ARCH_ID]
+#: the graph lowers to the same config (parity-tested)
+GRAPH_CONFIG = build_model().to_recsys_config()

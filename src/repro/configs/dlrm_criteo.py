@@ -1,5 +1,43 @@
-"""Config module for ``--arch dlrm-criteo`` (see registry for the source)."""
-from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+"""DLRM-on-Criteo expressed as a graph-API recipe (paper §2).
+
+``build_model`` declares the network with ``model.add(...)``; lowering
+it yields the exact registry config (asserted in tests), so the graph is
+the single source of model structure for training AND serving.
+"""
+from repro.api import (
+    DataReaderParams, DenseLayer, Input, Model, SparseEmbedding, Solver,
+)
+from repro.configs.registry import CRITEO_VOCAB_SIZES, RECSYS_ARCHS
 
 ARCH_ID = "dlrm-criteo"
-CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]
+
+
+def build_model(*, smoke: bool = False, solver: Solver = None,
+                reader: DataReaderParams = None, mesh=None) -> Model:
+    if smoke:
+        sizes = [min(v, 1000) for v in CRITEO_VOCAB_SIZES[:6]]
+        dim, bottom, top = 16, (32, 16), (32, 16, 1)
+    else:
+        sizes = list(CRITEO_VOCAB_SIZES)
+        dim = 128
+        bottom, top = (512, 256, 128), (1024, 1024, 512, 256, 1)
+    name = ARCH_ID + ("-smoke" if smoke else "")
+    m = Model(solver or Solver(),
+              reader or DataReaderParams(num_dense_features=13),
+              name=name, mesh=mesh)
+    m.add(Input(dense_dim=13))
+    m.add(SparseEmbedding(
+        vocab_sizes=sizes, dim=dim, top_name="emb",
+        table_names=[f"C{i + 1}" for i in range(len(sizes))]))
+    m.add(DenseLayer("mlp", ["dense"], ["bot"], units=bottom,
+                     final_activation=True))
+    m.add(DenseLayer("dot_interaction", ["bot", "emb"], ["interaction"]))
+    m.add(DenseLayer("concat", ["bot", "interaction"], ["top_in"]))
+    m.add(DenseLayer("mlp", ["top_in"], ["logit"], units=top))
+    m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
+    return m
+
+
+CONFIG = RECSYS_ARCHS[ARCH_ID]
+#: the graph lowers to the same config (parity-tested)
+GRAPH_CONFIG = build_model().to_recsys_config()

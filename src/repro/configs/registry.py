@@ -129,15 +129,20 @@ def reduce_for_smoke(cfg: LMConfig) -> LMConfig:
 # Recsys configs (the paper's own models)
 # ---------------------------------------------------------------------------
 
+#: Criteo-Kaggle-like vocab profile (26 tables, heavy-tailed sizes) —
+#: shared by the registry configs below and the graph-API recipe modules
+#: (configs/dlrm_criteo.py etc.), which must lower to the same tables.
+CRITEO_VOCAB_SIZES = (
+    1460, 584, 10131227, 2202608, 306, 24, 12518, 634, 4, 93146,
+    5684, 8351593, 3195, 28, 14993, 5461306, 11, 5653, 2173, 4,
+    7046547, 18, 16, 286181, 105, 142572)
+
+
 def _criteo_tables(dim: int, scale: float = 1.0):
-    # Criteo-Kaggle-like vocab profile (26 tables, heavy-tailed sizes)
-    sizes = [1460, 584, 10131227, 2202608, 306, 24, 12518, 634, 4, 93146,
-             5684, 8351593, 3195, 28, 14993, 5461306, 11, 5653, 2173, 4,
-             7046547, 18, 16, 286181, 105, 142572]
     return tuple(
         EmbeddingTableConfig(f"C{i+1}", max(4, int(v * scale)), dim,
                              hotness=1, strategy="auto")
-        for i, v in enumerate(sizes))
+        for i, v in enumerate(CRITEO_VOCAB_SIZES))
 
 
 dlrm_criteo = RecsysConfig(

@@ -1,5 +1,44 @@
-"""Config module for ``--arch wdl-criteo`` (see registry for the source)."""
-from repro.configs.registry import LM_ARCHS, RECSYS_ARCHS
+"""Wide&Deep-on-Criteo expressed as a graph-API recipe (paper §2).
+
+The recipe the two-slot facade could never express: TWO embedding
+branches (deep dim-16 tables + dim-1 wide twins), a deep tower with its
+own logit head, a wide linear head over [dense, wide], and a sigmoid
+terminal summing both logits.
+"""
+from repro.api import (
+    DataReaderParams, DenseLayer, Input, Model, SparseEmbedding, Solver,
+)
+from repro.configs.registry import CRITEO_VOCAB_SIZES, RECSYS_ARCHS
 
 ARCH_ID = "wdl-criteo"
-CONFIG = LM_ARCHS.get(ARCH_ID) or RECSYS_ARCHS[ARCH_ID]
+
+
+def build_model(*, smoke: bool = False, solver: Solver = None,
+                reader: DataReaderParams = None, mesh=None) -> Model:
+    if smoke:
+        sizes = [min(v, 1000) for v in CRITEO_VOCAB_SIZES[:6]]
+        top = (32, 16)
+    else:
+        sizes = list(CRITEO_VOCAB_SIZES)
+        top = (1024, 1024)
+    name = ARCH_ID + ("-smoke" if smoke else "")
+    names = [f"C{i + 1}" for i in range(len(sizes))]
+    m = Model(solver or Solver(),
+              reader or DataReaderParams(num_dense_features=13),
+              name=name, mesh=mesh)
+    m.add(Input(dense_dim=13))
+    m.add(SparseEmbedding(vocab_sizes=sizes, dim=16, top_name="emb",
+                          table_names=names))
+    m.add(SparseEmbedding(vocab_sizes=sizes, dim=1, top_name="wide"))
+    m.add(DenseLayer("concat", ["dense", "emb"], ["flat"]))
+    m.add(DenseLayer("mlp", ["flat"], ["deep_out"],
+                     units=tuple(top) + (1,)))
+    m.add(DenseLayer("mlp", ["dense", "wide"], ["wide_out"],
+                     units=(1,)))
+    m.add(DenseLayer("sigmoid", ["wide_out", "deep_out"], ["prob"]))
+    return m
+
+
+CONFIG = RECSYS_ARCHS[ARCH_ID]
+#: the graph lowers to the same config (parity-tested)
+GRAPH_CONFIG = build_model().to_recsys_config()

@@ -8,6 +8,9 @@ through to the persistent DB.
 Vectorized to match the batched L1 path: each shard keeps its rows in a
 dense ``[cap, D]`` array with a sorted id index, so a whole query resolves
 with one ``np.searchsorted`` per shard and inserts are one slice-assign.
+The sorted index is maintained by an *incremental merge* on insert
+(victim pairs dropped, the new sorted id block spliced in) — a full
+re-sort only happens on the rare explicit ``evict_ids`` compaction.
 Rows are **copied** on insert and on query — the store never aliases
 caller arrays (the seed kept views into the caller's row buffers, so
 later in-place writes by the caller silently mutated the DB).
@@ -69,6 +72,7 @@ class _Shard:
             return
         free = min(k, self.capacity - self.n)
         dest = np.arange(self.n, self.n + free, dtype=np.int64)
+        victims = np.empty(0, np.int64)
         if k > free:  # LRU eviction, all victims in one argpartition
             take = min(k - free, self.n)
             if take > 0:
@@ -76,11 +80,26 @@ class _Shard:
                                           take - 1)[:take].astype(np.int64)
                 dest = np.concatenate([dest, victims])
         sel = np.arange(len(dest))
+        # incremental sorted merge, NOT a per-batch re-sort: drop the
+        # victims' (id, slot) pairs, then splice the new id block in at
+        # its searchsorted positions — O(n + b log n) per batch instead
+        # of O(n log n), the dominant host cost of the L2 promote path
+        # at high miss rates. new_ids is np.unique output, so the
+        # spliced block is already sorted.
+        base_ids, base_slots = self.sorted_ids, self.sorted_slots
+        if len(victims):
+            vpos = np.searchsorted(base_ids, self.id_of[victims])
+            keep = np.ones(len(base_ids), bool)
+            keep[vpos] = False
+            base_ids, base_slots = base_ids[keep], base_slots[keep]
+        add_ids = new_ids[sel]
+        ins = np.searchsorted(base_ids, add_ids)
+        self.sorted_ids = np.insert(base_ids, ins, add_ids)
+        self.sorted_slots = np.insert(base_slots, ins, dest)
         self.n += free
-        self.id_of[dest] = new_ids[sel]
+        self.id_of[dest] = add_ids
         self.rows[dest] = new_rows[sel]
         self.tick[dest] = now
-        self._rebuild()
 
     def evict_ids(self, ids: np.ndarray) -> None:
         slots = self.find(np.unique(ids))

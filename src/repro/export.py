@@ -21,41 +21,39 @@ from typing import Dict, List
 import numpy as np
 
 OPSET = {"gather_sum", "concat", "relu", "linear", "dot_interaction",
-         "cross", "sigmoid", "fm_second_order", "add"}
+         "cross", "sigmoid", "fm_second_order", "add", "reduce_sum"}
 
 
 def export_recsys(model, params: Dict, directory: str,
                   model_name: str = "model") -> str:
     """Serialize a RecsysModel + trained params to the portable format."""
+    from repro.models.recsys.model import logical_tables
+
     os.makedirs(directory, exist_ok=True)
     cfg = model.cfg
     weights: Dict[str, np.ndarray] = {}
     nodes: List[Dict] = []
 
     # -- embeddings: logical (unpadded, de-striped) per-table arrays -------
-    logical = model.embedding.export_logical(params["embedding"])
-    mega = {k: np.asarray(v) for k, v in logical.items()}
-    for gname, group in model.embedding.groups.items():
-        if gname == "cold":
-            continue           # handled with "hot" below
-        for i, (t, off) in enumerate(zip(group.tables, group.offsets)):
-            end = group.offsets[i + 1] if i + 1 < group.num_tables \
-                else group.total_rows
-            if gname == "hot":
-                cg = model.embedding.groups["cold"]
-                coff = cg.offsets[i]
-                cend = cg.offsets[i + 1] if i + 1 < cg.num_tables \
-                    else cg.total_rows
-                full = np.concatenate(
-                    [mega["hot"][off:end], mega["cold"][coff:cend]], 0)
-            elif gname == "loc":
-                full = mega["loc"][i][:t.vocab_size]
-            else:
-                full = mega[gname][off:end]
-            weights[f"table/{t.name}"] = full
+    for name, full in logical_tables(model.embedding,
+                                     params["embedding"]).items():
+        weights[f"table/{name}"] = full
     nodes.append({"op": "gather_sum", "inputs": ["cat"],
                   "output": "emb",
-                  "attrs": {"tables": [t.name for t in cfg.tables]}})
+                  "attrs": {"tables": [t.name for t in cfg.tables],
+                            "combiners": [t.combiner
+                                          for t in cfg.tables]}})
+    wide_table_names: List[str] = []
+    if model.wide is not None:
+        for name, full in logical_tables(
+                model.wide, params["wide_embedding"]).items():
+            weights[f"table/{name}"] = full
+            wide_table_names.append(name)
+        nodes.append({"op": "gather_sum", "inputs": ["cat"],
+                      "output": "wide",
+                      "attrs": {"tables": wide_table_names,
+                                "combiners": ["sum"] * len(
+                                    wide_table_names)}})
 
     # -- dense graph per model type ----------------------------------------
     def mlp(prefix, pdict, inp, out, final_relu=False):
@@ -93,21 +91,45 @@ def export_recsys(model, params: Dict, directory: str,
         nodes.append({"op": "concat", "inputs": ["crossed", "deep_out"],
                       "output": "both", "attrs": {}})
         mlp("combine", params["combine"], "both", "logit")
+    elif cfg.model in ("deepfm", "wdl"):
+        # shared first-order term: sum(wide rows) + dense @ w + bias
+        weights["dense_w"] = np.asarray(params["dense_w"])[:, None]
+        weights["bias"] = np.asarray(params["bias"])[None]
+        nodes.append({"op": "reduce_sum", "inputs": ["wide"],
+                      "output": "wide_sum", "attrs": {}})
+        nodes.append({"op": "linear", "inputs": ["dense"],
+                      "output": "dense_lin",
+                      "attrs": {"w": "dense_w", "b": "bias",
+                                "relu": False}})
+        nodes.append({"op": "concat", "inputs": ["dense", "emb_flat"],
+                      "output": "flat", "attrs": {}})
+        mlp("deep", params["deep"], "flat", "deep_out")
+        logit_terms = ["wide_sum", "dense_lin", "deep_out"]
+        if cfg.model == "deepfm":
+            nodes.append({"op": "fm_second_order", "inputs": ["emb"],
+                          "output": "fm2", "attrs": {}})
+            logit_terms.insert(2, "fm2")
+        nodes.append({"op": "add", "inputs": logit_terms,
+                      "output": "logit", "attrs": {}})
     else:
-        raise NotImplementedError(
-            f"export for {cfg.model} (wide models need two table sets)")
+        raise NotImplementedError(f"export for {cfg.model}")
     nodes.append({"op": "sigmoid", "inputs": ["logit"],
                   "output": "prob", "attrs": {}})
 
+    from repro.configs.base import recsys_config_hash
+    from repro.models.recsys.model import wide_tables
+    all_tables = cfg.tables + (wide_tables(cfg)
+                               if model.wide is not None else ())
     graph = {
         "format": "repro-portable-v1",
         "model": model_name,
         "kind": cfg.model,
+        "config_hash": recsys_config_hash(cfg),
         "num_dense_features": cfg.num_dense_features,
         "embedding_dim": cfg.embedding_dim,
         "tables": [{"name": t.name, "vocab": t.vocab_size,
                     "dim": t.dim, "hotness": t.hotness,
-                    "combiner": t.combiner} for t in cfg.tables],
+                    "combiner": t.combiner} for t in all_tables],
         "nodes": nodes,
     }
     with open(os.path.join(directory, "graph.json"), "w") as f:
@@ -131,10 +153,17 @@ def run_exported(graph: Dict, weights: Dict[str, np.ndarray],
         "dense": np.asarray(batch["dense"], np.float32)}
     cat = np.asarray(batch["cat"])
 
+    def _col(x: np.ndarray) -> np.ndarray:
+        """Any logit-shaped tensor -> [B] (flattens a trailing 1-dim)."""
+        return x.reshape(len(cat), -1).sum(axis=1)
+
     for node in graph["nodes"]:
         op, out = node["op"], node["output"]
         a = node["attrs"]
         if op == "gather_sum":
+            combiners = a.get("combiners") or [
+                graph["tables"][ti]["combiner"]
+                for ti in range(len(a["tables"]))]
             outs = []
             for ti, tname in enumerate(a["tables"]):
                 tab = weights[f"table/{tname}"]
@@ -143,13 +172,12 @@ def run_exported(graph: Dict, weights: Dict[str, np.ndarray],
                 rows = tab[np.clip(ids, 0, None)]
                 rows = rows * valid[..., None]
                 pooled = rows.sum(axis=1)
-                meta = graph["tables"][ti]
-                if meta["combiner"] == "mean":
+                if combiners[ti] == "mean":
                     pooled = pooled / np.maximum(
                         valid.sum(1, keepdims=True), 1)
                 outs.append(pooled)
-            env["emb"] = np.stack(outs, axis=1)
-            env["emb_flat"] = env["emb"].reshape(len(cat), -1)
+            env[out] = np.stack(outs, axis=1)
+            env[f"{out}_flat"] = env[out].reshape(len(cat), -1)
         elif op == "linear":
             x = env[node["inputs"][0]]
             h = x @ weights[a["w"]] + weights[a["b"]]
@@ -170,6 +198,16 @@ def run_exported(graph: Dict, weights: Dict[str, np.ndarray],
                 xw = x @ weights[f"cross/w{i}"]
                 x = x0 * xw[:, None] + weights[f"cross/b{i}"] + x
             env[out] = x
+        elif op == "reduce_sum":
+            env[out] = _col(env[node["inputs"][0]])
+        elif op == "fm_second_order":
+            e = env[node["inputs"][0]]       # [B, T, D]
+            s = e.sum(axis=1)
+            sq = (e * e).sum(axis=1)
+            env[out] = (0.5 * (s * s - sq)).sum(axis=1)
+        elif op == "add":
+            env[out] = np.sum([_col(env[i]) for i in node["inputs"]],
+                              axis=0)
         elif op == "sigmoid":
             env[out] = 1.0 / (1.0 + np.exp(-env[node["inputs"][0]]))
         else:

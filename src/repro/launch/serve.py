@@ -1,72 +1,147 @@
-"""Production serving launcher: train-or-load a recsys model, deploy it
-into the Hierarchical Parameter Server, and serve a synthetic request
-stream through the batched inference server (paper Figure 2).
+"""Config-driven serving launcher (paper Figure 2, the ps.json path).
 
+A deployment bundle written by ``api.Model.deploy`` — ``ps.json`` +
+``graph.json`` + ``dense.npz`` + the ``pdb/`` table files — is all this
+launcher needs: no Python object from training is required.
+``build_server_from_config`` reconstructs the model graph from JSON,
+re-lowers it (config hash verified), reloads the dense weights, reopens
+the PDB tables (wide twins included) and stands up the
+``HPS`` + ``InferenceServer``.
+
+  # serve an existing bundle
+  PYTHONPATH=src python -m repro.launch.serve --config /path/ps.json \
+      --requests 50 --batch 64
+
+  # demo: train a recipe for a few steps, deploy, then serve THROUGH
+  # the written bundle (wdl exercises the two-HPS wide path)
   PYTHONPATH=src python -m repro.launch.serve --arch dlrm-criteo \
       --requests 50 --batch 64
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import json
+import os
 import tempfile
 import time
 
-import jax
 import numpy as np
 
-from repro.configs.base import TrainConfig
-from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
-from repro.core.hps.hps import HPS
-from repro.core.hps.persistent_db import PersistentDB
-from repro.core.hps.volatile_db import VolatileDB
-from repro.data.synthetic import SyntheticCTR
-from repro.launch.mesh import make_test_mesh
-from repro.models.recsys.model import RecsysModel
-from repro.serve.server import InferenceServer, deploy_from_training
-from repro.train.train_step import build_train_step, init_opt_state
+from repro.configs.base import (
+    HPSConfig, hps_config_from_dict, recsys_config_hash,
+)
+
+
+def load_ps_config(path: str) -> HPSConfig:
+    with open(path) as f:
+        return hps_config_from_dict(json.load(f))
+
+
+def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
+                             bus=None):
+    """ps.json -> ready InferenceServer (the Triton-ensemble analogue).
+
+    Returns ``(server, model)`` — the api.Model is handed back so the
+    caller can cross-check predictions or introspect the graph.
+    """
+    from repro.api import Model
+    from repro.core.hps.hps import HPS
+    from repro.core.hps.persistent_db import PersistentDB
+    from repro.models.recsys.model import wide_tables
+    from repro.serve.server import InferenceServer
+    from repro.train import checkpoint as ck
+
+    import jax
+
+    base = os.path.dirname(os.path.abspath(ps_path))
+    hcfg = load_ps_config(ps_path)
+
+    m = Model.from_json(os.path.join(base, hcfg.graph_path), mesh=mesh)
+    m.compile()
+    if hcfg.config_hash and \
+            recsys_config_hash(m.cfg) != hcfg.config_hash:
+        raise ValueError(f"{ps_path}: graph does not lower to the "
+                         "deployed config (hash mismatch)")
+
+    # dense weights: flat key-paths -> the model's param tree (minus
+    # embeddings, which live in the parameter server)
+    data = np.load(os.path.join(base, hcfg.dense_weights_path))
+    flat = {k: data[k] for k in data.files}
+    with m.mesh:
+        dummy = jax.eval_shape(
+            lambda: m.model.init(jax.random.PRNGKey(0)))
+    template = {k: v for k, v in dummy.items()
+                if k not in ("embedding", "wide_embedding")}
+    dense = ck.unflatten_like(template, flat)
+
+    pdb = PersistentDB(os.path.join(base, hcfg.pdb_root))
+    for t in hcfg.tables:
+        pdb.open_table(hcfg.model, t.name)
+    hps = HPS(hcfg.model, hcfg.tables, pdb, vdb=vdb, bus=bus,
+              cache_capacity=hcfg.cache_capacity,
+              cache_shards=hcfg.cache_shards)
+    wide_hps = None
+    if hcfg.wide:
+        wtabs = wide_tables(m.cfg)
+        for t in wtabs:
+            pdb.open_table(hcfg.model, t.name)
+        # shares bus/VDB/striping with the deep HPS so online updates
+        # reach the wide L1 too
+        wide_hps = HPS(hcfg.model, wtabs, pdb, vdb=vdb, bus=bus,
+                       cache_capacity=hcfg.cache_capacity,
+                       cache_shards=hcfg.cache_shards)
+    server = InferenceServer(m.model, dense, hps, wide_hps=wide_hps,
+                             max_batch=hcfg.max_batch,
+                             refresh_budget=hcfg.refresh_budget)
+    return server, m
+
+
+def _train_and_deploy(arch: str, train_steps: int, batch: int,
+                      deploy_dir: str, cache_capacity: int) -> str:
+    """Demo path: train a recipe briefly via the graph API, write the
+    deployment bundle, return the ps.json path."""
+    from repro.api import Solver
+    mod = importlib.import_module(
+        "repro.configs." + arch.replace("-", "_"))
+    m = mod.build_model(smoke=True,
+                        solver=Solver(batch_size=batch, lr=1e-2))
+    m.compile()
+    hist = m.fit(steps=train_steps)
+    print(f"trained {train_steps} steps, "
+          f"loss={hist[-1]['loss']:.4f}")
+    m.deploy(deploy_dir, cache_capacity=cache_capacity)
+    return os.path.join(deploy_dir, "ps.json")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    # wdl/deepfm need a second (wide) HPS — served via the synchronous
-    # path in tests; the CLI covers the no-wide models
+    ap.add_argument("--config", default=None,
+                    help="ps.json of an existing deployment bundle")
     ap.add_argument("--arch", default="dlrm-criteo",
-                    choices=["dlrm-criteo", "dcn-criteo"])
+                    choices=["dlrm-criteo", "dcn-criteo",
+                             "deepfm-criteo", "wdl-criteo"],
+                    help="demo mode: train+deploy this recipe first")
     ap.add_argument("--train-steps", type=int, default=20)
     ap.add_argument("--requests", type=int, default=50)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--cache-capacity", type=int, default=2048)
-    ap.add_argument("--pdb-root", default=None)
+    ap.add_argument("--deploy-dir", default=None)
     args = ap.parse_args()
 
-    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS[args.arch])
-    mesh = make_test_mesh((1, 1))
+    ps_path = args.config
+    if ps_path is None:
+        deploy_dir = args.deploy_dir or tempfile.mkdtemp(prefix="hps_")
+        ps_path = _train_and_deploy(args.arch, args.train_steps,
+                                    args.batch, deploy_dir,
+                                    args.cache_capacity)
+        print(f"deployment bundle: {deploy_dir}")
 
-    with mesh:
-        model = RecsysModel(cfg, mesh, global_batch=args.batch)
-        params = model.init(jax.random.PRNGKey(0))
-        data = SyntheticCTR(cfg, args.batch)
-        tcfg = TrainConfig(learning_rate=1e-2)
-        step = jax.jit(build_train_step(model, tcfg))
-        opt = init_opt_state(params, tcfg)
-        for i in range(args.train_steps):
-            import jax.numpy as jnp
-            batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
-            params, opt, aux = step(params, opt, batch)
-        print(f"trained {args.train_steps} steps, "
-              f"loss={float(aux['loss']):.4f}")
+    from repro.data.synthetic import SyntheticCTR
+    server, m = build_server_from_config(ps_path)
+    data = SyntheticCTR(m.cfg, args.batch)
 
-        root = args.pdb_root or tempfile.mkdtemp(prefix="hps_")
-        pdb = PersistentDB(root)
-        deploy_from_training(model, params, pdb, args.arch)
-        hps = HPS(args.arch, cfg.tables, pdb,
-                  vdb=VolatileDB(shards=2),
-                  cache_capacity=args.cache_capacity)
-        dense = {k: v for k, v in params.items()
-                 if k not in ("embedding", "wide_embedding")}
-        server = InferenceServer(model, dense, hps)
-
-        # warm + serve
+    with m.mesh:
         warm = data.batch(10_000)
         server.predict(warm["dense"], warm["cat"])
         server.latencies_ms.clear()
@@ -80,16 +155,15 @@ def main():
         dt = time.time() - t0
         server.stop()
 
-        n = sum(len(o) for o in outs)
-        pct = server.latency_percentiles()
-        stats = hps.stats()
-        print(f"served {n} predictions in {dt:.2f}s "
-              f"({n / dt:.0f} qps)")
-        print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
-              f"p99={pct['p99']:.1f}")
-        print(f"L1 hit rate: "
-              f"{np.mean(list(stats['l1_hit_rate'].values())):.3f}; "
-              f"L2 hits={stats['l2_hits']} misses={stats['l2_misses']}")
+    n = sum(len(o) for o in outs)
+    pct = server.latency_percentiles()
+    stats = server.hps.stats()
+    print(f"served {n} predictions in {dt:.2f}s ({n / dt:.0f} qps)")
+    print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+          f"p99={pct['p99']:.1f}")
+    print(f"L1 hit rate: "
+          f"{np.mean(list(stats['l1_hit_rate'].values())):.3f}; "
+          f"L2 hits={stats['l2_hits']} misses={stats['l2_misses']}")
 
 
 if __name__ == "__main__":

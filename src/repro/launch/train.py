@@ -18,9 +18,8 @@ import argparse
 import jax
 import numpy as np
 
-from repro.configs.base import TrainConfig
 from repro.configs.registry import (
-    LM_ARCHS, RECSYS_ARCHS, reduce_for_smoke, reduce_recsys_for_smoke,
+    LM_ARCHS, RECSYS_ARCHS, reduce_for_smoke,
 )
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 
@@ -57,28 +56,29 @@ def main():
         mesh = make_test_mesh((r, c))
     print(f"mesh: {dict(mesh.shape)} over {n_dev} devices")
 
-    tcfg = TrainConfig(learning_rate=args.lr,
-                       grad_allreduce_dtype=args.grad_ar_dtype)
-
     if args.arch in RECSYS_ARCHS:
-        from repro.data.synthetic import SyntheticCTR
-        from repro.models.recsys.model import RecsysModel
-        from repro.train.trainer import Trainer
+        # recsys models go through the graph API front door: the recipe
+        # module declares the layer graph, compile() lowers it onto the
+        # same RecsysModel/Trainer machinery
+        import importlib
 
-        cfg = RECSYS_ARCHS[args.arch]
-        if args.smoke or n_dev == 1:
-            cfg = reduce_recsys_for_smoke(cfg)
-        with mesh:
-            model = RecsysModel(cfg, mesh, global_batch=args.batch)
-            data = SyntheticCTR(cfg, args.batch)
-            trainer = Trainer(model, tcfg, mesh, data.batch,
-                              ckpt_dir=args.ckpt_dir,
-                              ckpt_interval=args.ckpt_interval,
-                              mode=args.mode)
-            out = trainer.train(args.steps, log_every=args.log_every)
-        losses = [h["loss"] for h in out["history"]]
+        from repro.api import Solver
+
+        recipe = importlib.import_module(
+            "repro.configs." + args.arch.replace("-", "_"))
+        solver = Solver(batch_size=args.batch, lr=args.lr,
+                        grad_allreduce_dtype=args.grad_ar_dtype,
+                        mode=args.mode,
+                        ckpt_interval=args.ckpt_interval)
+        model = recipe.build_model(smoke=args.smoke or n_dev == 1,
+                                   solver=solver, mesh=mesh)
+        model.compile()
+        model.summary()
+        hist = model.fit(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         log_every=args.log_every)
+        losses = [h["loss"] for h in hist]
         print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}, "
-              f"{out['stragglers']} stragglers flagged")
+              f"{model.stragglers} stragglers flagged")
         return
 
     # LM path

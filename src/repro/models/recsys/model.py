@@ -27,11 +27,71 @@ from repro.models.recsys import layers
 from repro.kernels import ops as kops
 
 
-def _wide_tables(cfg: RecsysConfig):
+def wide_tables(cfg: RecsysConfig):
+    """The dim-1 first-order ("wide") twin of every table — WDL/DeepFM
+    derive their wide branch from the deep tables, so the serving side
+    (object- or config-driven deploy) can reconstruct it from the
+    RecsysConfig alone."""
     return tuple(
         dataclasses.replace(t, name=f"{t.name}_wide", dim=1,
                             strategy="data_parallel")
         for t in cfg.tables)
+
+
+_wide_tables = wide_tables  # legacy alias
+
+
+def export_logical_params(model, params: Dict) -> Dict:
+    """Param tree with embedding groups in LOGICAL (mesh-independent)
+    layout — the checkpoint format shared by Trainer and api.Model."""
+    out = dict(params)
+    if "embedding" in out:
+        out["embedding"] = model.embedding.export_logical(
+            out["embedding"])
+    if "wide_embedding" in out:
+        out["wide_embedding"] = model.wide.export_logical(
+            out["wide_embedding"])
+    return out
+
+
+def import_logical_params(model, params: Dict) -> Dict:
+    """Inverse of :func:`export_logical_params` for ``model``'s mesh."""
+    out = dict(params)
+    if "embedding" in out:
+        out["embedding"] = model.embedding.import_logical(
+            out["embedding"])
+    if "wide_embedding" in out:
+        out["wide_embedding"] = model.wide.import_logical(
+            out["wide_embedding"])
+    return out
+
+
+def logical_tables(collection, emb_params) -> Dict[str, np.ndarray]:
+    """Per-table LOGICAL weights (unpadded, de-striped, hot+cold merged)
+    keyed by table name — the export shape the PDB and the portable
+    converter both consume."""
+    logical = collection.export_logical(emb_params)
+    out: Dict[str, np.ndarray] = {}
+    for gname, group in collection.groups.items():
+        if gname == "cold":
+            continue               # merged into "hot" below
+        for i, (t, off) in enumerate(zip(group.tables, group.offsets)):
+            end = group.offsets[i + 1] if i + 1 < group.num_tables \
+                else group.total_rows
+            if gname == "hot":
+                cg = collection.groups["cold"]
+                coff = cg.offsets[i]
+                cend = cg.offsets[i + 1] if i + 1 < cg.num_tables \
+                    else cg.total_rows
+                full = np.concatenate(
+                    [np.asarray(logical["hot"])[off:end],
+                     np.asarray(logical["cold"])[coff:cend]], axis=0)
+            elif gname == "loc":
+                full = np.asarray(logical["loc"][i])[:t.vocab_size]
+            else:
+                full = np.asarray(logical[gname])[off:end]
+            out[t.name] = full
+    return out
 
 
 class RecsysModel:
@@ -59,7 +119,7 @@ class RecsysModel:
         self.use_kernels = use_kernels
         self.wide: Optional[EmbeddingCollection] = None
         if cfg.model in ("wdl", "deepfm"):
-            self.wide = EmbeddingCollection(_wide_tables(cfg), mesh,
+            self.wide = EmbeddingCollection(wide_tables(cfg), mesh,
                                             comm=comm, compute_dtype=cd)
 
     # -- init ----------------------------------------------------------------

@@ -43,28 +43,23 @@ from repro.core.hps.volatile_db import VolatileDB
 
 def deploy_from_training(model, params: Dict, pdb: PersistentDB,
                          model_name: str) -> None:
-    """Export trained embedding tables into the PDB (ground truth copy)."""
-    logical = model.embedding.export_logical(params["embedding"])
-    mega = {}
-    for gname, group in model.embedding.groups.items():
-        if gname == "cold":
-            continue
-        arrs = logical[gname] if gname != "hot" else None
-        for i, (t, off) in enumerate(zip(group.tables, group.offsets)):
-            end = group.offsets[i + 1] if i + 1 < group.num_tables \
-                else group.total_rows
-            if gname == "hot":
-                hot = np.asarray(logical["hot"][off:end])
-                cg = model.embedding.groups["cold"]
-                coff = cg.offsets[i]
-                cend = cg.offsets[i + 1] if i + 1 < cg.num_tables \
-                    else cg.total_rows
-                cold = np.asarray(logical["cold"][coff:cend])
-                full = np.concatenate([hot, cold], axis=0)
-            else:
-                full = np.asarray(arrs[off:end])
-            pdb.create_table(model_name, t.name, t.vocab_size, t.dim,
-                             initial=full)
+    """Export trained embedding tables into the PDB (ground truth copy).
+
+    Wide models (wdl/deepfm) export BOTH table sets: the deep tables and
+    their dim-1 ``*_wide`` twins, so the serving side can stand up the
+    second HPS the wide branch needs.
+    """
+    from repro.models.recsys.model import logical_tables
+    for name, full in logical_tables(model.embedding,
+                                     params["embedding"]).items():
+        pdb.create_table(model_name, name, full.shape[0], full.shape[1],
+                         initial=full)
+    if getattr(model, "wide", None) is not None:
+        for name, full in logical_tables(model.wide,
+                                         params["wide_embedding"]).items():
+            pdb.create_table(model_name, name, full.shape[0],
+                             full.shape[1], initial=full)
+    pdb.flush()
 
 
 class InferenceServer:

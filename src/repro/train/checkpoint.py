@@ -43,6 +43,11 @@ def _path_str(p) -> str:
     return str(p)
 
 
+#: public name — the flat key-path form is also the dense-weights format
+#: of the serving deployment bundle (api.Model.deploy / launch.serve)
+flatten_tree = _flatten
+
+
 def _treedef_template(tree):
     return jax.tree.map(lambda _: 0, tree)
 

@@ -59,24 +59,12 @@ class Trainer:
         return params, opt_state
 
     def _export(self, params):
-        out = dict(params)
-        if "embedding" in out:
-            out["embedding"] = self.model.embedding.export_logical(
-                out["embedding"])
-        if "wide_embedding" in out:
-            out["wide_embedding"] = self.model.wide.export_logical(
-                out["wide_embedding"])
-        return out
+        from repro.models.recsys.model import export_logical_params
+        return export_logical_params(self.model, params)
 
     def _import(self, params):
-        out = dict(params)
-        if "embedding" in out:
-            out["embedding"] = self.model.embedding.import_logical(
-                out["embedding"])
-        if "wide_embedding" in out:
-            out["wide_embedding"] = self.model.wide.import_logical(
-                out["wide_embedding"])
-        return out
+        from repro.models.recsys.model import import_logical_params
+        return import_logical_params(self.model, params)
 
     def save(self, step: int, params, opt_state):
         if self.saver is None:
@@ -107,8 +95,17 @@ class Trainer:
     # -- loop -----------------------------------------------------------------
 
     def train(self, num_steps: int, *, seed: int = 0,
-              log_every: int = 0) -> Dict:
-        params, opt_state = self.init_state(seed)
+              log_every: int = 0, initial_state=None) -> Dict:
+        """``initial_state=(params, opt_state)`` seeds the loop with
+        already-loaded weights (``opt_state=None`` re-inits the
+        optimizer) — the ``Model.load`` resume path. A newer checkpoint
+        in ``ckpt_dir`` still takes precedence."""
+        if initial_state is not None:
+            params, opt_state = initial_state
+            if opt_state is None:
+                opt_state = init_opt_state(params, self.tcfg)
+        else:
+            params, opt_state = self.init_state(seed)
         start = 0
         restored = self.restore(params, opt_state)
         if restored is not None:

@@ -1,27 +1,30 @@
-"""Keras-like API (paper §2) + portable export (ONNX-converter analogue)."""
+"""Graph API front door (paper §2) + portable export (ONNX analogue)."""
 import numpy as np
 import pytest
 
 import jax
 import jax.numpy as jnp
 
-from repro.api import Dense, Interaction, Model, SparseEmbedding
+from repro.api import (
+    DataReaderParams, DenseLayer, Input, Model, SparseEmbedding, Solver,
+)
 from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
 from repro.data.synthetic import SyntheticCTR
 
 
-def _data_fn(cfg_like, batch):
-    ds = SyntheticCTR(cfg_like, batch)
-    return ds.batch
-
-
-def test_keras_like_dlrm_end_to_end(tmp_path):
-    m = Model([
-        SparseEmbedding(vocab_sizes=[500, 300, 100], dim=16, hotness=2),
-        Interaction(bottom_mlp=(32,), top_mlp=(32, 1),
-                    num_dense_features=4),
-    ], name="api-dlrm")
-    m.compile(optimizer="adamw", lr=1e-2, batch_size=64)
+def test_graph_api_dlrm_end_to_end(tmp_path):
+    m = Model(Solver(batch_size=64, lr=1e-2),
+              DataReaderParams(num_dense_features=4), name="api-dlrm")
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[500, 300, 100], dim=16,
+                          hotness=2, top_name="emb"))
+    m.add(DenseLayer("mlp", ["dense"], ["bot"], units=(32, 16),
+                     final_activation=True))
+    m.add(DenseLayer("dot_interaction", ["bot", "emb"], ["inter"]))
+    m.add(DenseLayer("concat", ["bot", "inter"], ["top_in"]))
+    m.add(DenseLayer("mlp", ["top_in"], ["logit"], units=(32, 1)))
+    m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
+    m.compile()
     data = SyntheticCTR(m.cfg, 64)
     hist = m.fit(data.batch, steps=15)
     assert len(hist) == 15
@@ -34,17 +37,24 @@ def test_keras_like_dlrm_end_to_end(tmp_path):
     assert ((preds > 0) & (preds < 1)).all()
 
     # deploy -> HPS server serves the same predictions
-    server = m.deploy(str(tmp_path / "pdb"))
+    server = m.deploy(str(tmp_path / "dep"))
     got = server.predict(batch["dense"], batch["cat"])
     np.testing.assert_allclose(got, preds, rtol=2e-2, atol=2e-2)
 
 
-def test_keras_like_dense_tower(tmp_path):
-    m = Model([
-        SparseEmbedding(vocab_sizes=[200, 100], dim=8),
-        Dense([32, 16], num_dense_features=4),
-    ])
-    m.compile(lr=1e-2, batch_size=32)
+def test_graph_api_plain_tower(tmp_path):
+    """A cross-less tower lowers to DCN with zero cross layers."""
+    m = Model(Solver(batch_size=32, lr=1e-2),
+              DataReaderParams(num_dense_features=4))
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[200, 100], dim=8, top_name="emb"))
+    m.add(DenseLayer("concat", ["dense", "emb"], ["flat"]))
+    m.add(DenseLayer("mlp", ["flat"], ["deep"], units=(32, 16)))
+    m.add(DenseLayer("concat", ["flat", "deep"], ["both"]))
+    m.add(DenseLayer("mlp", ["both"], ["logit"], units=(1,)))
+    cfg = m.to_recsys_config()
+    assert cfg.model == "dcn" and cfg.num_cross_layers == 0
+    m.compile()
     data = SyntheticCTR(m.cfg, 32)
     m.fit(data.batch, steps=5)
     preds = m.predict(data.batch(50))
@@ -53,11 +63,15 @@ def test_keras_like_dense_tower(tmp_path):
 
 
 def test_api_checkpointing(tmp_path):
-    m = Model([
-        SparseEmbedding(vocab_sizes=[100], dim=8),
-        Dense([16], num_dense_features=4),
-    ])
-    m.compile(batch_size=16)
+    m = Model(Solver(batch_size=16),
+              DataReaderParams(num_dense_features=4))
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[100], dim=8, top_name="emb"))
+    m.add(DenseLayer("concat", ["dense", "emb"], ["flat"]))
+    m.add(DenseLayer("mlp", ["flat"], ["deep"], units=(16,)))
+    m.add(DenseLayer("concat", ["flat", "deep"], ["both"]))
+    m.add(DenseLayer("mlp", ["both"], ["logit"], units=(1,)))
+    m.compile()
     data = SyntheticCTR(m.cfg, 16)
     m.fit(data.batch, steps=4, ckpt_dir=str(tmp_path / "ck"))
     from repro.train import checkpoint as ck
@@ -68,9 +82,11 @@ def test_api_checkpointing(tmp_path):
 # Portable export
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("arch", ["dlrm-criteo", "dcn-criteo"])
+@pytest.mark.parametrize("arch", ["dlrm-criteo", "dcn-criteo",
+                                  "deepfm-criteo", "wdl-criteo"])
 def test_export_numpy_parity(arch, tmp_path):
-    """The exported graph run by PURE NUMPY matches the JAX forward."""
+    """The exported graph run by PURE NUMPY matches the JAX forward —
+    including the wide models' two-table-set graphs."""
     from repro.export import export_recsys, load_exported, run_exported
     from repro.launch.mesh import make_test_mesh
     from repro.models.recsys.model import RecsysModel
@@ -91,12 +107,13 @@ def test_export_numpy_parity(arch, tmp_path):
     np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
 
 
-def test_export_artifact_is_self_describing(tmp_path):
+@pytest.mark.parametrize("arch", ["dlrm-criteo", "wdl-criteo"])
+def test_export_artifact_is_self_describing(arch, tmp_path):
     from repro.export import export_recsys, load_exported
     from repro.launch.mesh import make_test_mesh
     from repro.models.recsys.model import RecsysModel
 
-    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS["dlrm-criteo"])
+    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS[arch])
     mesh = make_test_mesh((1, 1))
     with mesh:
         model = RecsysModel(cfg, mesh, global_batch=8)
@@ -104,9 +121,12 @@ def test_export_artifact_is_self_describing(tmp_path):
         d = export_recsys(model, params, str(tmp_path / "exp"))
     graph, weights = load_exported(d)
     # every table advertised in metadata has its weights, full vocab
+    # (wide models advertise the *_wide twins too)
     for t in graph["tables"]:
         w = weights[f"table/{t['name']}"]
         assert w.shape == (t["vocab"], t["dim"])
+    if cfg.model == "wdl":
+        assert any(t["name"].endswith("_wide") for t in graph["tables"])
     # every node's op is in the documented opset
     from repro.export import OPSET
     assert all(n["op"] in OPSET for n in graph["nodes"])

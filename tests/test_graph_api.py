@@ -1,0 +1,243 @@
+"""Graph API (paper §2): lowering, JSON round-trip, and the
+config-driven deployment path.
+
+The acceptance bar: all four recipes build through ``model.add(...)``,
+``graph_to_json`` + checkpoint alone reconstruct a serving
+InferenceServer via ``launch.serve`` whose predictions match the
+in-process ``deploy()`` bit-exactly.
+"""
+import importlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    DataReaderParams, DenseLayer, GraphError, Input, Model,
+    SparseEmbedding, Solver,
+)
+from repro.configs.base import recsys_config_hash
+from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
+from repro.data.synthetic import SyntheticCTR
+
+ARCHS = ["dlrm-criteo", "dcn-criteo", "deepfm-criteo", "wdl-criteo"]
+
+
+def _recipe(arch):
+    return importlib.import_module(
+        "repro.configs." + arch.replace("-", "_"))
+
+
+def _small_dlrm(name="g-dlrm", batch=16):
+    m = Model(Solver(batch_size=batch, lr=1e-2),
+              DataReaderParams(num_dense_features=4), name=name)
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[300, 100], dim=8, hotness=2,
+                          top_name="emb"))
+    m.add(DenseLayer("mlp", ["dense"], ["bot"], units=(16, 8),
+                     final_activation=True))
+    m.add(DenseLayer("dot_interaction", ["bot", "emb"], ["inter"]))
+    m.add(DenseLayer("concat", ["bot", "inter"], ["top_in"]))
+    m.add(DenseLayer("mlp", ["top_in"], ["logit"], units=(16, 1)))
+    m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_recipes_lower_to_registry_configs(arch):
+    """The graph IS the config: full + smoke recipes lower bit-exactly
+    onto the registry entries the rest of the stack executes."""
+    mod = _recipe(arch)
+    assert mod.build_model().to_recsys_config() == RECSYS_ARCHS[arch]
+    assert mod.build_model(smoke=True).to_recsys_config() == \
+        reduce_recsys_for_smoke(RECSYS_ARCHS[arch])
+    assert mod.GRAPH_CONFIG == mod.CONFIG
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_recipes_train_one_step(arch):
+    m = _recipe(arch).build_model(
+        smoke=True, solver=Solver(batch_size=16, lr=1e-2))
+    m.compile()
+    data = SyntheticCTR(m.cfg, 16)
+    hist = m.fit(data.batch, steps=1)
+    assert len(hist) == 1 and np.isfinite(hist[0]["loss"])
+    preds = m.predict(data.batch(99))
+    assert preds.shape == (16,)
+    assert ((preds > 0) & (preds < 1)).all()
+
+
+def test_wdl_graph_declares_two_embedding_branches():
+    m = _recipe("wdl-criteo").build_model(smoke=True)
+    dims = sorted(e.dim for e in m._embeddings)
+    assert dims == [1, 16]           # wide + deep
+    m.compile()
+    assert m.model.wide is not None  # lowered model grew the wide branch
+
+
+def test_summary_mentions_every_layer():
+    m = _small_dlrm()
+    s = m.summary()
+    for token in ("dot_interaction", "SparseEmbedding", "emb", "logit",
+                  "dlrm"):
+        assert token in s
+
+
+# ---------------------------------------------------------------------------
+# Lowering errors
+# ---------------------------------------------------------------------------
+
+def test_unknown_tensor_is_rejected():
+    m = Model(name="bad")
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[10], dim=4))
+    m.add(DenseLayer("mlp", ["nope"], ["x"], units=(4,)))
+    with pytest.raises(GraphError, match="unknown tensor 'nope'"):
+        m.to_recsys_config()
+
+
+def test_two_deep_embeddings_rejected():
+    m = Model(name="bad")
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[10], dim=4, top_name="a"))
+    m.add(SparseEmbedding(vocab_sizes=[10], dim=8, top_name="b"))
+    with pytest.raises(GraphError, match="dim-1 wide"):
+        m.to_recsys_config()
+
+
+def test_dlrm_bottom_dim_mismatch_rejected():
+    m = Model(name="bad")
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[10], dim=8, top_name="emb"))
+    m.add(DenseLayer("mlp", ["dense"], ["bot"], units=(16, 4)))
+    m.add(DenseLayer("dot_interaction", ["bot", "emb"], ["inter"]))
+    m.add(DenseLayer("mlp", ["bot", "inter"], ["logit"], units=(1,)))
+    with pytest.raises(GraphError, match="embedding dim"):
+        m.to_recsys_config()
+
+
+def test_layer_that_fits_no_recipe_rejected():
+    m = _small_dlrm()
+    m.add(DenseLayer("cross", ["prob"], ["extra"], num_layers=2))
+    with pytest.raises(GraphError, match="does not fit"):
+        m.to_recsys_config()
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_graph_json_round_trip_stable(tmp_path):
+    m = _recipe("wdl-criteo").build_model(smoke=True)
+    p1 = str(tmp_path / "g1.json")
+    p2 = str(tmp_path / "g2.json")
+    m.graph_to_json(p1)
+    m2 = Model.from_json(p1)
+    m2.graph_to_json(p2)
+    with open(p1) as f1, open(p2) as f2:
+        assert json.load(f1) == json.load(f2)
+    assert m2.to_recsys_config() == m.to_recsys_config()
+
+
+def test_graph_json_hash_tamper_detected(tmp_path):
+    m = _small_dlrm()
+    p = str(tmp_path / "g.json")
+    m.graph_to_json(p)
+    with open(p) as f:
+        d = json.load(f)
+    # tamper with the model but keep the stale hash
+    for layer in d["layers"]:
+        if layer["kind"] == "sparse_embedding":
+            layer["dim"] = 4
+        if layer["kind"] == "dense" and layer["type"] == "mlp" \
+                and layer["bottom_names"] == ["dense"]:
+            layer["units"] = [16, 4]
+    with open(p, "w") as f:
+        json.dump(d, f)
+    with pytest.raises(GraphError, match="hash"):
+        Model.from_json(p)
+
+
+def test_save_load_predict_bit_identical(tmp_path):
+    m = _small_dlrm()
+    m.compile()
+    data = SyntheticCTR(m.cfg, 16)
+    m.fit(data.batch, steps=3)
+    batch = data.batch(77)
+    want = m.predict(batch)
+    m.save(str(tmp_path / "sv"))
+    m2 = Model.load(str(tmp_path / "sv"))
+    np.testing.assert_array_equal(m2.predict(batch), want)
+
+
+def test_load_then_fit_resumes(tmp_path):
+    m = _small_dlrm()
+    m.compile()
+    data = SyntheticCTR(m.cfg, 16)
+    m.fit(data.batch, steps=3)
+    saved = m.predict(data.batch(5))
+    m.save(str(tmp_path / "sv"))
+
+    m2 = Model.load(str(tmp_path / "sv"))
+    # bare-loaded model trains onward from the saved weights
+    before = m2.predict(data.batch(5))
+    np.testing.assert_array_equal(before, saved)
+    hist = m2.fit(data.batch, steps=2)
+    assert len(hist) == 2
+    after = m2.predict(data.batch(5))
+    assert not np.array_equal(before, after)
+
+
+# ---------------------------------------------------------------------------
+# Deployment: object-driven == config-driven
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["dlrm-criteo", "wdl-criteo"])
+def test_config_deploy_matches_object_deploy(arch, tmp_path):
+    """A trained graph deploys from its JSON alone: the ps.json bundle
+    reconstructs a server whose predictions are bit-exact with the
+    in-process deploy() (wdl covers the two-HPS wide branch)."""
+    from repro.launch.serve import build_server_from_config
+    m = _recipe(arch).build_model(
+        smoke=True, solver=Solver(batch_size=16, lr=1e-2))
+    m.compile()
+    data = SyntheticCTR(m.cfg, 16)
+    m.fit(data.batch, steps=2)
+    batch = data.batch(42)
+
+    dep = str(tmp_path / "dep")
+    server = m.deploy(dep, cache_capacity=128)
+    want = server.predict(batch["dense"], batch["cat"])
+
+    server2, loaded = build_server_from_config(
+        os.path.join(dep, "ps.json"))
+    got = server2.predict(batch["dense"], batch["cat"])
+    np.testing.assert_array_equal(got, want)
+    # and both track the training-graph forward pass
+    np.testing.assert_allclose(got, m.predict(batch),
+                               rtol=2e-2, atol=2e-2)
+    assert loaded.cfg == m.cfg
+
+
+def test_ps_json_contents(tmp_path):
+    m = _small_dlrm()
+    m.compile()
+    data = SyntheticCTR(m.cfg, 16)
+    m.fit(data.batch, steps=1)
+    dep = str(tmp_path / "dep")
+    m.deploy(dep, cache_capacity=99, refresh_budget=7, cache_shards=1)
+    with open(os.path.join(dep, "ps.json")) as f:
+        d = json.load(f)
+    assert d["format"] == "repro-ps-v1"
+    assert d["cache_capacity"] == 99
+    assert d["refresh_budget"] == 7
+    assert d["config_hash"] == recsys_config_hash(m.cfg)
+    assert [t["name"] for t in d["tables"]] == \
+        [t.name for t in m.cfg.tables]
+    for rel in (d["graph_path"], d["dense_weights_path"]):
+        assert os.path.exists(os.path.join(dep, rel))

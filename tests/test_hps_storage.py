@@ -135,3 +135,63 @@ def test_pdb_namespaces_are_isolated(tmp_path):
     np.testing.assert_allclose(pdb.fetch("m2", "t", np.asarray([0]))[0], 2.0)
     files = os.listdir(str(tmp_path / "pdb"))
     assert "m1__t.f32" in files and "m2__t.f32" in files
+
+
+# ---------------------------------------------------------------------------
+# VolatileDB incremental sorted index
+# ---------------------------------------------------------------------------
+
+def _assert_index_matches_rebuild(shard):
+    """The incremental merge must leave exactly the index a full
+    rebuild would produce."""
+    occ = shard.id_of[:shard.n]
+    order = np.argsort(occ, kind="stable").astype(np.int64)
+    np.testing.assert_array_equal(shard.sorted_ids, occ[order])
+    np.testing.assert_array_equal(shard.sorted_slots, order)
+    assert len(np.unique(occ)) == shard.n  # ids stay unique per shard
+
+
+def test_vdb_incremental_index_matches_rebuild_under_churn():
+    from repro.core.hps.volatile_db import VolatileDB
+
+    rng = np.random.default_rng(7)
+    db = VolatileDB(shards=3, capacity_per_shard=48)
+    reference = {}
+    for step in range(200):
+        n = int(rng.integers(1, 32))
+        ids = rng.integers(0, 400, n)
+        rows = rng.normal(size=(n, 4)).astype(np.float32)
+        db.insert("t", ids, rows)
+        for i, r in zip(ids, rows):       # last write wins
+            reference[int(i)] = r.copy()
+        if step % 9 == 0:
+            db.evict("t", rng.integers(0, 400, 4))
+        for shard in db._store["t"]:
+            _assert_index_matches_rebuild(shard)
+        # probe results agree with a ground-truth dict for every hit
+        q = rng.integers(0, 400, 20)
+        mask, out = db.query("t", q)
+        for j, qid in enumerate(q):
+            if mask[j]:
+                np.testing.assert_array_equal(out[j],
+                                              reference[int(qid)])
+
+
+def test_vdb_insert_more_than_capacity_keeps_index_consistent():
+    from repro.core.hps.volatile_db import VolatileDB
+
+    rng = np.random.default_rng(1)
+    db = VolatileDB(shards=1, capacity_per_shard=16)
+    # one batch far larger than the shard: fills + evicts in one call
+    ids = np.arange(64, dtype=np.int64)
+    rows = rng.normal(size=(64, 4)).astype(np.float32)
+    db.insert("t", ids, rows)
+    shard = db._store["t"][0]
+    assert shard.n == 16
+    _assert_index_matches_rebuild(shard)
+    # a second overflowing batch exercises the victim-removal path
+    ids2 = np.arange(100, 140, dtype=np.int64)
+    rows2 = rng.normal(size=(40, 4)).astype(np.float32)
+    db.insert("t", ids2, rows2)
+    assert shard.n == 16
+    _assert_index_matches_rebuild(shard)
