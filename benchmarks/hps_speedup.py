@@ -31,9 +31,17 @@ over many short interleaved passes (the arms alternate, so machine-load
 epochs hit both equally and the min samples each arm's quiet-window
 floor).
 
-``run`` also dumps the L1 rows to ``artifacts/hps_lookup.json`` so the
-roofline report re-surfaces them — an L1 regression shows up in
-``artifacts/bench_results.csv`` even when only the roofline bench runs.
+``serve_throughput`` measures the same regime END-TO-END through
+``InferenceServer.submit``: the stream-fed serve engine (embeddings feed
+the dense net straight off ``lookup_stream``; predictions materialize
+one group behind) against the stage-synchronous submit path and the old
+blocking drain loop — the pipelining claim at the prediction, not the
+embedding.
+
+``run`` also dumps the serving rows to ``artifacts/hps_lookup.json`` so
+the roofline report re-surfaces them — a serving-path regression shows
+up in ``artifacts/bench_results.csv`` even when only the roofline bench
+runs.
 """
 from __future__ import annotations
 
@@ -211,21 +219,8 @@ def pipeline_throughput(report: Report, tmp_root: str):
         return [((r.zipf(zipf_a, (batch, T, H)) - 1) % vocab)
                 .astype(np.int32) for _ in range(n)]
 
-    def lookup_stage_sync(hps, q):
-        blocks = hps._split_query(np.asarray(q), None)
-        b = q.shape[0]
-        bp = 1 << (b - 1).bit_length()
-        slot_blocks, payloads, overflow = [], [], []
-        for ti in range(T):
-            plan = hps._probe(ti, blocks)                  # host stage
-            payload = hps._collect_plan(ti, plan, b, bp, blocks,
-                                        slot_blocks, payloads, overflow)
-            jax.block_until_ready(payload)                 # no overlap
-        return np.asarray(hps._finalize(payloads, slot_blocks, blocks,
-                                        overflow, b))
-
     engines = {
-        "stage_sync": lambda hps, qs: [lookup_stage_sync(hps, q)
+        "stage_sync": lambda hps, qs: [np.asarray(hps.lookup_stage_sync(q))
                                        for q in qs],
         "sequential": lambda hps, qs: [np.asarray(
             hps.lookup(q, pipelined=False)) for q in qs],
@@ -263,12 +258,107 @@ def pipeline_throughput(report: Report, tmp_root: str):
                f"x={vs_async:.2f}")
 
 
+def serve_throughput(report: Report, tmp_root: str):
+    """END-TO-END serving engines: submit() -> embeddings -> dense net
+    -> delivered predictions, remote-L2 RTT regime, batch 1024 x 4
+    tables.
+
+    Three InferenceServer engines over identical pre-queued request
+    streams (fresh HPS each so cache state evolves identically; every
+    coalesced miss fetch pays the same Redis-style ``RTT_S``):
+
+      stage_sync — drain a group, BLOCK on every device stage before
+                   the next host stage, materialize, repeat: the
+                   no-overlap reference submit path;
+      sync       — drain -> one blocking predict() per group (the old
+                   serve loop): XLA async dispatch overlaps device work
+                   behind the host, but each group's remote fetches
+                   serialize behind the previous group's materialize;
+      stream     — the stream-fed pipeline: group i+1's probes + remote
+                   fetches run on the HPS workers while group i's dense
+                   net computes and group i-1's prediction materializes.
+
+    The headline ``speedup`` row is stream vs stage_sync (the paper's
+    pipelining claim measured at the PREDICTION, not the embedding);
+    ``speedup_vs_sync`` is the win over the old shipping loop. Arms
+    alternate per pass, MIN per arm across passes.
+    """
+    vocab, dim, T, batch, H = 30000, 32, 4, 1024, 4
+    # n_q deep enough that the stream pipeline's fill/drain (one group
+    # at each end) amortizes, as it does in a real request stream
+    capacity, zipf_a, n_q, passes = 8192, 1.6, 12, 6
+    RTT_S = 3e-3          # remote-L2 round trip per coalesced miss fetch
+    rng = np.random.default_rng(0)
+    pdb = PersistentDB(tmp_root)
+    tabs = []
+    for i in range(T):
+        rows = rng.normal(size=(vocab, dim)).astype(np.float32)
+        pdb.create_table("serve", f"t{i}", vocab, dim, initial=rows)
+        tabs.append(EmbeddingTableConfig(f"t{i}", vocab, dim, hotness=H,
+                                         strategy="data_parallel"))
+    cfg = dataclasses.replace(
+        RECSYS_ARCHS["dlrm-criteo"], tables=tuple(tabs),
+        embedding_dim=dim, bottom_mlp=(64, dim), top_mlp=(128, 64, 1))
+
+    def make_queries(seed, n):
+        r = np.random.default_rng(seed)
+        return [((r.zipf(zipf_a, (batch, T, H)) - 1) % vocab)
+                .astype(np.int32) for _ in range(n)]
+
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        model = RecsysModel(cfg, mesh, global_batch=batch)
+        params = model.init(jax.random.PRNGKey(0))
+        dense_params = {k: v for k, v in params.items()
+                        if k != "embedding"}
+        servers = {}
+        for eng in ("stage_sync", "sync", "stream"):
+            hps = HPS("serve", tabs, pdb, cache_capacity=capacity)
+            for c in hps.caches.values():  # same simulated remote L2
+                c.fetch_fn = (lambda orig: lambda ids:
+                              (time.sleep(RTT_S), orig(ids))[1])(c.fetch_fn)
+            servers[eng] = InferenceServer(model, dense_params, hps,
+                                           max_batch=batch, engine=eng)
+        dense_in = rng.normal(size=(batch, cfg.num_dense_features)) \
+            .astype(np.float32)
+        for q in make_queries(50, 2):                  # warm jit + cache
+            for s in servers.values():
+                s.predict(dense_in, q)
+        for s in servers.values():
+            s.latencies_ms.clear()
+            s.start()
+        t_arm: Dict[str, List[float]] = {e: [] for e in servers}
+        for p in range(passes):
+            qs = make_queries(100 + p, n_q)
+            for eng, s in servers.items():             # interleaved
+                t0 = time.perf_counter()
+                handles = [s.submit(dense_in, q) for q in qs]
+                for h in handles:
+                    out = h.get(timeout=600)
+                    if isinstance(out, Exception):  # never time a
+                        raise out                   # failed arm
+                t_arm[eng].append(time.perf_counter() - t0)
+        for s in servers.values():
+            s.stop()
+            s.hps.close()
+    mins = {e: min(ts) for e, ts in t_arm.items()}
+    for eng, t in mins.items():
+        report.add(f"hps_serve.b{batch}.{eng}", t / n_q,
+                   f"qps={n_q * batch / t:.0f}")
+    speedup = mins["stage_sync"] / mins["stream"]
+    report.add(f"hps_serve.b{batch}.speedup", speedup, f"x={speedup:.2f}")
+    vs_sync = mins["sync"] / mins["stream"]
+    report.add(f"hps_serve.b{batch}.speedup_vs_sync", vs_sync,
+               f"x={vs_sync:.2f}")
+
+
 def dump_l1_artifact(report: Report) -> None:
     """Persist the L1 rows for the roofline report's regression table."""
     rows = []
     for row in report.rows:
         name, us, derived = row.split(",", 2)
-        if name.startswith(("hps_lookup.", "hps_pipeline.")):
+        if name.startswith(("hps_lookup.", "hps_pipeline.",
+                            "hps_serve.")):
             rows.append({"name": name, "us_per_call": float(us),
                          "derived": derived})
     if rows:
@@ -329,6 +419,7 @@ class CpuBaseline:
 def run(report: Report, tmp_root: str = "artifacts/bench_hps"):
     lookup_throughput(report)
     pipeline_throughput(report, tmp_root + "_pipe")
+    serve_throughput(report, tmp_root + "_serve")
     dump_l1_artifact(report)
     cfg0 = RECSYS_ARCHS["dlrm-criteo"]
     tables = tuple(dataclasses.replace(

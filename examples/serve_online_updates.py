@@ -1,11 +1,15 @@
 """Online-training serving demo (paper Figure 2, blue + red paths).
 
-A trainer keeps learning while an inference node serves:
+A trainer keeps learning while an inference node serves TWO models from
+one parameter-server process (the ensemble deployment unit: shared
+PDB/VDB/bus, per-model L1 caches):
 
   trainer --(Producer / Kafka-style bus)--> VDB + PDB --(refresh)--> L1
 
-The script shows predictions drifting as online updates land, without the
-server ever reloading the model.
+The "online" model receives the update stream and its predictions drift;
+the "static" model shares every storage level with it and must not move
+at all — one model's updates never touch another's tables. Per-model
+serving stats print at the end.
 
 Run:  PYTHONPATH=src python examples/serve_online_updates.py
 """
@@ -21,10 +25,13 @@ from repro.configs.registry import RECSYS_ARCHS, reduce_recsys_for_smoke
 from repro.core.hps.hps import HPS
 from repro.core.hps.message_bus import MessageBus, Producer
 from repro.core.hps.persistent_db import PersistentDB
+from repro.core.hps.volatile_db import VolatileDB
 from repro.data.synthetic import SyntheticCTR
 from repro.launch.mesh import make_test_mesh
 from repro.models.recsys.model import RecsysModel
-from repro.serve.server import InferenceServer, deploy_from_training
+from repro.serve.server import (
+    InferenceServer, MultiModelServer, deploy_from_training,
+)
 from repro.train.train_step import build_train_step, init_opt_state
 
 
@@ -35,7 +42,7 @@ def main():
     bus = MessageBus()
 
     with mesh, tempfile.TemporaryDirectory() as root:
-        # -- offline phase: initial train + deploy --------------------------
+        # -- offline phase: initial train + 2-model deploy ------------------
         model = RecsysModel(cfg, mesh, global_batch=batch_size)
         params = model.init(jax.random.PRNGKey(0))
         tcfg = TrainConfig(learning_rate=1e-2)
@@ -46,19 +53,31 @@ def main():
             batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
             params, opt_state, aux = step(params, opt_state, batch)
 
+        # ONE storage backend, TWO deployed models: "online" gets the
+        # update stream below, "static" is the same weights frozen —
+        # it shares the PDB file store, the VolatileDB and the bus, yet
+        # must never see the other model's updates
         pdb = PersistentDB(root)
-        deploy_from_training(model, params, pdb, "online")
-        hps = HPS("online", cfg.tables, pdb, cache_capacity=512, bus=bus)
+        vdb = VolatileDB()
         dense = {k: v for k, v in params.items() if k != "embedding"}
-        # refresh is drained manually below (the serve loop isn't started,
-        # so the server's own refresh_budget would not come into play)
-        server = InferenceServer(model, dense, hps)
+        servers = {}
+        for name in ("online", "static"):
+            deploy_from_training(model, params, pdb, name)
+            hps = HPS(name, cfg.tables, pdb, vdb=vdb, bus=bus,
+                      cache_capacity=512)
+            # refresh is drained manually below (the serve loops aren't
+            # started, so the refresh_budget never comes into play)
+            servers[name] = InferenceServer(model, dense, hps)
+        server = MultiModelServer(servers, vdb=vdb, pdb=pdb, bus=bus)
 
         probe = data.batch(777)
-        p0 = server.predict(probe["dense"], probe["cat"])
-        print(f"initial predictions: mean={p0.mean():.4f}")
+        p0 = {name: server.predict(name, probe["dense"], probe["cat"])
+              for name in server.models}
+        print(f"initial predictions: "
+              + " ".join(f"{n}.mean={p.mean():.4f}"
+                         for n, p in p0.items()))
 
-        # -- online phase: keep training, stream updates --------------------
+        # -- online phase: keep training, stream updates to ONE model -------
         producer = Producer(bus, "online")
         for i in range(10, 40):
             batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
@@ -77,36 +96,50 @@ def main():
                     ids = ids[ids >= 0]
                     producer.send(t.name, ids, mega[off + ids])
                 producer.flush()
-                # inference node polls the bus (updates land in L2/L3 and
-                # mark the touched L1 rows dirty), then drains the
-                # hotness-ordered refresh backlog in bounded chunks — the
-                # same path the serve loop drives between batches
-                applied = hps.apply_updates()
+                # BOTH inference nodes poll the bus; only "online" has
+                # matching topics, so only its L2/L3 rows change and
+                # only its L1 rows go dirty — then drain the
+                # hotness-ordered refresh backlog in bounded chunks,
+                # the same path the serve loop drives between batches
+                applied = {n: server[n].hps.apply_updates()
+                           for n in server.models}
                 refreshed = 0
-                while hps.refresh_backlog():
-                    refreshed += hps.refresh_step(budget=128)
-                p = server.predict(probe["dense"], probe["cat"])
-                drift = float(np.abs(p - p0).mean())
-                print(f"window @step {i}: applied {applied} messages, "
-                      f"refreshed {refreshed} L1 rows, "
-                      f"prediction drift {drift:.5f}")
-        assert drift > 0, "online updates must reach the server"
-        print("online updates propagated trainer -> bus -> VDB/PDB -> L1 ✓")
+                while server["online"].hps.refresh_backlog():
+                    refreshed += server["online"].hps.refresh_step(
+                        budget=128)
+                p = {n: server.predict(n, probe["dense"], probe["cat"])
+                     for n in server.models}
+                drift = {n: float(np.abs(p[n] - p0[n]).mean())
+                         for n in server.models}
+                print(f"window @step {i}: applied {applied['online']} "
+                      f"messages ({applied['static']} to static), "
+                      f"refreshed {refreshed} L1 rows, drift "
+                      + " ".join(f"{n}={d:.5f}"
+                                 for n, d in drift.items()))
+        assert drift["online"] > 0, "online updates must reach the server"
+        assert drift["static"] == 0, \
+            "the static model shares storage but must never drift"
+        print("online updates propagated trainer -> bus -> VDB/PDB -> L1,"
+              " static co-tenant untouched ✓")
 
-        # -- the full L1/L2/L3 serving picture ------------------------------
-        stats = hps.stats()
-        hit = np.mean(list(stats["l1_hit_rate"].values()))
-        l2 = stats["l2"]
-        l3_rows = sum(stats["l3_fetches"]["rows"].values())
-        print(f"L1: hit_rate={hit:.3f} over {len(hps.caches)} cached "
-              f"tables; refresh: {stats['refresh']['rows_refreshed']} rows "
-              f"in {stats['refresh']['chunks']} chunks, backlog "
-              f"{stats['refresh']['backlog']}")
-        print(f"L2: {stats['l2_hits']} hits / {stats['l2_misses']} misses; "
-              f"{sum(t['rows'] for t in l2['tables'].values())} rows over "
-              f"{len(l2['tables'])} tables x {l2['shards']} shard(s)")
-        print(f"L3: {sum(stats['l3_fetches']['calls'].values())} fetches "
-              f"({l3_rows} rows) fell through to the PDB")
+        # -- the full L1/L2/L3 serving picture, PER MODEL -------------------
+        for name, st in server.stats().items():
+            s = st["hps"]
+            hit = np.mean(list(s["l1_hit_rate"].values()))
+            l2 = s["l2"]
+            l3_rows = sum(s["l3_fetches"]["rows"].values())
+            own = {t: v for t, v in l2["tables"].items()
+                   if t.startswith(name + "/")}
+            print(f"[{name}] L1: hit_rate={hit:.3f} over "
+                  f"{len(server[name].hps.caches)} cached tables; "
+                  f"refresh: {s['refresh']['rows_refreshed']} rows in "
+                  f"{s['refresh']['chunks']} chunks, backlog "
+                  f"{s['refresh']['backlog']}")
+            print(f"[{name}] L2 (shared store, own namespace): "
+                  f"{sum(t['rows'] for t in own.values())} rows over "
+                  f"{len(own)} tables x {l2['shards']} shard(s); "
+                  f"L3: {sum(s['l3_fetches']['calls'].values())} fetches "
+                  f"({l3_rows} rows) fell through to the PDB")
 
 
 if __name__ == "__main__":

@@ -58,8 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (
-    EmbeddingTableConfig, HPSConfig, RecsysConfig, TrainConfig,
-    hps_config_to_dict, recsys_config_hash,
+    EmbeddingTableConfig, EnsembleConfig, HPSConfig, RecsysConfig,
+    TrainConfig, ensemble_config_to_dict, hps_config_to_dict,
+    recsys_config_hash,
 )
 
 GRAPH_FORMAT = "repro-graph-v1"
@@ -616,8 +617,10 @@ class Model:
         if r.path is None:
             raise GraphError("DataReaderParams(source='criteo') needs "
                              "a path")
-        it = criteo.reader(r.path, self.cfg, self.batch_size)
-        return lambda step: next(it)
+        # seekable batch(step): criteo runs get the same deterministic
+        # failure-replay contract as the synthetic reader — the trainer
+        # can restore mid-epoch and replay the exact batches
+        return criteo.CriteoReader(r.path, self.cfg, self.batch_size).batch
 
     def fit(self, data_fn: Optional[Callable[[int], Dict]] = None,
             steps: int = 100, *, ckpt_dir: Optional[str] = None,
@@ -801,6 +804,61 @@ class Model:
         return {k: v for k, v in self._params.items()
                 if k not in ("embedding", "wide_embedding")}
 
+    def _write_bundle_member(self, pdb, bundle_dir: str, sub: str, *,
+                             cache_capacity: int, cache_shards: int,
+                             refresh_budget: int,
+                             max_batch: int) -> HPSConfig:
+        """Export THIS model into a deployment bundle: tables into the
+        (possibly shared) PDB, graph.json + dense.npz under
+        ``bundle_dir/sub``, returning the relocatable HPSConfig whose
+        paths are relative to ``bundle_dir``."""
+        from repro.serve.server import deploy_from_training
+        from repro.train import checkpoint as ck
+        out_dir = os.path.join(bundle_dir, sub) if sub else bundle_dir
+        os.makedirs(out_dir, exist_ok=True)
+        with self.mesh:
+            deploy_from_training(self._model, self._params, pdb,
+                                 self.name)
+        self.graph_to_json(os.path.join(out_dir, "graph.json"))
+        np.savez(os.path.join(out_dir, "dense.npz"),
+                 **ck.flatten_tree(self.dense_params()))
+        rel = (lambda p: f"{sub}/{p}" if sub else p)
+        return HPSConfig(
+            model=self.name, pdb_root="pdb", graph_path=rel("graph.json"),
+            dense_weights_path=rel("dense.npz"), tables=self.cfg.tables,
+            wide=self._model.wide is not None,
+            cache_capacity=cache_capacity, cache_shards=cache_shards,
+            refresh_budget=refresh_budget, max_batch=max_batch,
+            config_hash=recsys_config_hash(self.cfg))
+
+    def _build_server(self, pdb, hcfg: HPSConfig, dense: Dict, *,
+                      vdb=None, bus=None):
+        """Stand up the HPS(+wide) + InferenceServer for this model over
+        already-populated storage — the ONE place the serving stack is
+        wired, shared by in-process ``deploy()``/``deploy_ensemble()``
+        and the config-driven ``launch.serve`` rebuild (``dense`` is the
+        dense param tree: live for the former, reloaded from the
+        bundle's npz for the latter)."""
+        from repro.core.hps.hps import HPS
+        from repro.models.recsys.model import wide_tables
+        from repro.serve.server import InferenceServer
+        hps = HPS(self.name, self.cfg.tables, pdb, vdb=vdb, bus=bus,
+                  cache_capacity=hcfg.cache_capacity,
+                  cache_shards=hcfg.cache_shards)
+        wide_hps = None
+        if hcfg.wide:
+            # the wide branch shares the bus (its *_wide topics mark its
+            # own L1 dirty), the VDB namespace and the striping config —
+            # otherwise online updates never reach the wide L1
+            wide_hps = HPS(self.name, wide_tables(self.cfg), pdb,
+                           vdb=vdb, bus=bus,
+                           cache_capacity=hcfg.cache_capacity,
+                           cache_shards=hcfg.cache_shards)
+        return InferenceServer(self._model, dense, hps,
+                               wide_hps=wide_hps,
+                               max_batch=hcfg.max_batch,
+                               refresh_budget=hcfg.refresh_budget)
+
     def deploy(self, directory: str, *, cache_capacity: int = 4096,
                cache_shards: int = 1, refresh_budget: int = 512,
                max_batch: int = 1024, vdb=None, bus=None):
@@ -809,50 +867,75 @@ class Model:
         The bundle — ``pdb/`` (every table, wide twins included),
         ``graph.json``, ``dense.npz``, ``ps.json`` — is all
         ``launch/serve.py`` needs: the same server can be reconstructed
-        later with no Python object from this process.
+        later with no Python object from this process. To serve SEVERAL
+        models from one bundle/storage backend, see
+        :func:`deploy_ensemble`.
         """
         if self._params is None:
             raise RuntimeError("fit() or load() before deploy()")
-        from repro.core.hps.hps import HPS
         from repro.core.hps.persistent_db import PersistentDB
-        from repro.models.recsys.model import wide_tables
-        from repro.serve.server import (
-            InferenceServer, deploy_from_training,
-        )
-        from repro.train import checkpoint as ck
         os.makedirs(directory, exist_ok=True)
-        pdb_root = os.path.join(directory, "pdb")
-        pdb = PersistentDB(pdb_root)
-        with self.mesh:
-            deploy_from_training(self._model, self._params, pdb,
-                                 self.name)
-        self.graph_to_json(os.path.join(directory, "graph.json"))
-        dense = self.dense_params()
-        np.savez(os.path.join(directory, "dense.npz"),
-                 **ck.flatten_tree(dense))
-        has_wide = self._model.wide is not None
-        hcfg = HPSConfig(
-            model=self.name, pdb_root="pdb", graph_path="graph.json",
-            dense_weights_path="dense.npz", tables=self.cfg.tables,
-            wide=has_wide, cache_capacity=cache_capacity,
+        pdb = PersistentDB(os.path.join(directory, "pdb"))
+        hcfg = self._write_bundle_member(
+            pdb, directory, "", cache_capacity=cache_capacity,
             cache_shards=cache_shards, refresh_budget=refresh_budget,
-            max_batch=max_batch,
-            config_hash=recsys_config_hash(self.cfg))
+            max_batch=max_batch)
         with open(os.path.join(directory, "ps.json"), "w") as f:
             json.dump(hps_config_to_dict(hcfg), f, indent=1)
+        return self._build_server(pdb, hcfg, self.dense_params(),
+                                  vdb=vdb, bus=bus)
 
-        hps = HPS(self.name, self.cfg.tables, pdb, vdb=vdb, bus=bus,
-                  cache_capacity=cache_capacity,
-                  cache_shards=cache_shards)
-        wide_hps = None
-        if has_wide:
-            # the wide branch shares the bus (its *_wide topics mark its
-            # own L1 dirty), the VDB namespace and the striping config —
-            # otherwise online updates never reach the wide L1
-            wide_hps = HPS(self.name, wide_tables(self.cfg), pdb,
-                           vdb=vdb, bus=bus,
-                           cache_capacity=cache_capacity,
-                           cache_shards=cache_shards)
-        return InferenceServer(self._model, dense, hps,
-                               wide_hps=wide_hps, max_batch=max_batch,
-                               refresh_budget=refresh_budget)
+
+# ---------------------------------------------------------------------------
+# Ensemble deployment: several models, one storage backend
+# ---------------------------------------------------------------------------
+
+def deploy_ensemble(models: Sequence[Model], directory: str, *,
+                    cache_capacity: int = 4096, cache_shards: int = 1,
+                    refresh_budget: int = 512, max_batch: int = 1024,
+                    vdb=None, bus=None):
+    """Write ONE multi-model serving bundle and return a ready
+    :class:`~repro.serve.server.MultiModelServer`.
+
+    All member models' tables land in a single shared ``pdb/`` (the PDB
+    namespaces tables per model on disk) and the in-process server
+    shares one VolatileDB and one message bus across models — the
+    ensemble deployment unit of the GPU-specialized inference parameter
+    server (arXiv 2210.08804): one parameter-server process, several
+    models, per-model L1 caches. The bundle's ``ps.json`` holds one
+    :class:`EnsembleConfig` (several HPSConfigs, shared ``pdb_root``)
+    and ``launch/serve.py::build_server_from_config`` reconstructs the
+    whole multi-model server from it, bit-exact with per-model
+    in-process servers.
+    """
+    from repro.core.hps.message_bus import MessageBus
+    from repro.core.hps.persistent_db import PersistentDB
+    from repro.core.hps.volatile_db import VolatileDB
+    from repro.serve.server import MultiModelServer
+    if not models:
+        raise GraphError("deploy_ensemble needs at least one model")
+    names = [m.name for m in models]
+    if len(set(names)) != len(names):
+        raise GraphError(f"ensemble model names must be unique: {names}")
+    for m in models:
+        if m._params is None:
+            raise RuntimeError(
+                f"model {m.name!r}: fit() or load() before deploy")
+    os.makedirs(directory, exist_ok=True)
+    pdb = PersistentDB(os.path.join(directory, "pdb"))   # shared L3
+    vdb = vdb if vdb is not None else VolatileDB()       # shared L2
+    bus = bus if bus is not None else MessageBus()       # shared bus
+    hcfgs = []
+    servers = {}
+    for m in models:
+        hcfg = m._write_bundle_member(
+            pdb, directory, m.name, cache_capacity=cache_capacity,
+            cache_shards=cache_shards, refresh_budget=refresh_budget,
+            max_batch=max_batch)
+        hcfgs.append(hcfg)
+        servers[m.name] = m._build_server(pdb, hcfg, m.dense_params(),
+                                          vdb=vdb, bus=bus)
+    ens = EnsembleConfig(models=tuple(hcfgs))
+    with open(os.path.join(directory, "ps.json"), "w") as f:
+        json.dump(ensemble_config_to_dict(ens), f, indent=1)
+    return MultiModelServer(servers, vdb=vdb, pdb=pdb, bus=bus)

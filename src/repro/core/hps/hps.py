@@ -16,7 +16,10 @@ two stages are double-buffered on a dedicated host worker so table
 *t+1*'s index probe overlaps table *t*'s device scatter;
 ``lookup_stream`` extends the same pipeline across consecutive queries
 (query *i+1*'s probes run while the host blocks materializing query *i*'s
-result — the serving-loop shape). Pooling honors each table's combiner
+result — the serving-loop shape; ``materialize=False`` hands the caller
+un-synced device arrays so the serve loop can chain the dense net before
+any host sync). ``lookup_stage_sync`` is the no-overlap reference engine
+the benchmarks compare against. Pooling honors each table's combiner
 (sum or mean); the ``hotness`` argument selects the valid id columns per
 table (and is validated against the query shape instead of being silently
 ignored).
@@ -104,11 +107,18 @@ class HPS:
 
     # -- L2/L3 fall-through ------------------------------------------------------
 
+    def _vdb_key(self, table: str) -> str:
+        """L2 key namespace: one VolatileDB process can back SEVERAL
+        deployed models (the ensemble bundle), so table keys are scoped
+        by model — two models' same-named tables never collide, and one
+        model's online updates can never touch another's L2 rows."""
+        return f"{self.model_name}/{table}"
+
     def _make_fetch(self, table: str):
         dim = self._table_cfg[table].dim
 
         def fetch(ids: np.ndarray) -> np.ndarray:
-            mask, rows = self.vdb.query(table, ids)
+            mask, rows = self.vdb.query(self._vdb_key(table), ids)
             if rows is None:
                 rows = np.zeros((len(ids), dim), np.float32)
             if not mask.all():
@@ -118,7 +128,8 @@ class HPS:
                     self._l3_fetch_calls[table] += 1
                     self._l3_fetch_rows[table] += len(missing)
                 rows[~mask] = fetched
-                self.vdb.insert(table, missing, fetched)  # promote
+                self.vdb.insert(self._vdb_key(table), missing,
+                                fetched)  # promote
             return rows
         return fetch
 
@@ -312,11 +323,39 @@ class HPS:
 
         return self._finalize(payloads, slot_blocks, blocks, overflow, b)
 
+    def lookup_stage_sync(self, cat: np.ndarray,
+                          hotness: Optional[List[int]] = None) -> jax.Array:
+        """Fully stage-synchronous lookup: BLOCK on each table's device
+        scatter before the next host probe, and block on the pooled
+        stack before returning — zero overlap of any kind, not even
+        XLA's async dispatch. The no-overlap reference engine the
+        pipelining benchmarks (and the ``stage_sync`` server engine)
+        compare against; bit-identical outputs to :meth:`lookup`."""
+        cat = np.asarray(cat)
+        blocks = self._split_query(cat, hotness)
+        self._check_dims()
+        b = cat.shape[0]
+        if b == 0:
+            return jnp.zeros((0, len(self.tables), self.tables[0].dim),
+                             jnp.float32)
+        bp = 1 << (b - 1).bit_length()
+        slot_blocks: List[jax.Array] = []
+        payloads: List[jax.Array] = []
+        overflow: List[Tuple[int, np.ndarray, np.ndarray, int]] = []
+        for ti in range(len(self.tables)):
+            payload = self._collect_plan(ti, self._probe(ti, blocks), b,
+                                         bp, blocks, slot_blocks,
+                                         payloads, overflow)
+            jax.block_until_ready(payload)             # no overlap
+        return jax.block_until_ready(
+            self._finalize(payloads, slot_blocks, blocks, overflow, b))
+
     def lookup_stream(self, cats: Iterable[np.ndarray],
                       hotness: Optional[List[int]] = None, *,
-                      depth: int = 2) -> Iterator[np.ndarray]:
+                      depth: int = 2,
+                      materialize: bool = True) -> Iterator:
         """Serve a stream of queries through the two-stage pipeline,
-        yielding MATERIALIZED ``[B, T, D]`` numpy outputs in order.
+        yielding ``[B, T, D]`` pooled outputs in order.
 
         Double-buffered on BOTH ends: the host workers run query
         *i+1*'s probes (and their L2/L3 miss fetches) while the calling
@@ -326,6 +365,13 @@ class HPS:
         host probes another, the serving loop of the paper's HPS.
         ``depth`` bounds the lookahead (queries whose fetched rows may be
         held in flight).
+
+        ``materialize=False`` yields the un-synced DEVICE arrays instead
+        of numpy, immediately after each query's device dispatch — the
+        stream-fed server feeds these straight into the jitted dense net
+        and owns the delay point itself, so the prediction (not the
+        embedding) is what finally synchronizes the pipeline and NOTHING
+        bounces through host memory between lookup and dense compute.
         """
         self._check_dims()
         pool = self._host_worker()
@@ -357,9 +403,13 @@ class HPS:
                 for ti, plan in enumerate(plans):
                     self._collect_plan(ti, plan, b, bp, blocks,
                                        slot_blocks, payloads, overflow)
-                in_flight.append(self._finalize(payloads, slot_blocks,
-                                                blocks, overflow, b))
+                out = self._finalize(payloads, slot_blocks, blocks,
+                                     overflow, b)
                 admit()                     # next query probes first ...
+                if not materialize:         # ... caller owns the delay
+                    yield out
+                    continue
+                in_flight.append(out)
                 if len(in_flight) > 1:      # ... then sync, one behind:
                     # the device computes query i while the host is
                     # already probing/dispatching query i+1
@@ -381,7 +431,7 @@ class HPS:
 
         def apply(table, ids, rows):
             self.pdb.upsert(self.model_name, table, ids, rows)
-            self.vdb.insert(table, ids, rows)
+            self.vdb.insert(self._vdb_key(table), ids, rows)
             cache = self.caches.get(table)
             if cache is not None:
                 cache.mark_dirty(ids)

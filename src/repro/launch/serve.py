@@ -8,7 +8,13 @@ re-lowers it (config hash verified), reloads the dense weights, reopens
 the PDB tables (wide twins included) and stands up the
 ``HPS`` + ``InferenceServer``.
 
-  # serve an existing bundle
+An ENSEMBLE bundle written by ``api.deploy_ensemble`` holds several
+models behind one ps.json (format ``repro-ps-ensemble-v1``); the same
+entry point then stands up a ``MultiModelServer`` — per-model L1 caches
+and serve loops over ONE shared PersistentDB, ONE shared VolatileDB and
+ONE shared message bus — bit-exact with per-model in-process servers.
+
+  # serve an existing bundle (single-model or ensemble)
   PYTHONPATH=src python -m repro.launch.serve --config /path/ps.json \
       --requests 50 --batch 64
 
@@ -16,6 +22,10 @@ the PDB tables (wide twins included) and stands up the
   # the written bundle (wdl exercises the two-HPS wide path)
   PYTHONPATH=src python -m repro.launch.serve --arch dlrm-criteo \
       --requests 50 --batch 64
+
+  # demo: 2-model ensemble bundle, one storage backend, per-model stats
+  PYTHONPATH=src python -m repro.launch.serve \
+      --arch dlrm-criteo,dcn-criteo --requests 10 --batch 32
 """
 from __future__ import annotations
 
@@ -29,40 +39,36 @@ import time
 import numpy as np
 
 from repro.configs.base import (
-    HPSConfig, hps_config_from_dict, recsys_config_hash,
+    EnsembleConfig, HPSConfig, ps_config_from_dict, recsys_config_hash,
 )
 
 
-def load_ps_config(path: str) -> HPSConfig:
+def load_ps_config(path: str):
+    """ps.json -> :class:`HPSConfig` or :class:`EnsembleConfig`."""
     with open(path) as f:
-        return hps_config_from_dict(json.load(f))
+        return ps_config_from_dict(json.load(f))
 
 
-def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
-                             bus=None):
-    """ps.json -> ready InferenceServer (the Triton-ensemble analogue).
-
-    Returns ``(server, model)`` — the api.Model is handed back so the
-    caller can cross-check predictions or introspect the graph.
-    """
+def _build_model_server(base: str, hcfg: HPSConfig, pdb, *, mesh=None,
+                        vdb=None, bus=None):
+    """One model's HPS(+wide)+InferenceServer over an open PDB: reload
+    the graph + dense weights from the bundle, then hand off to the same
+    ``Model._build_server`` wiring the in-process deploy path uses."""
     from repro.api import Model
-    from repro.core.hps.hps import HPS
-    from repro.core.hps.persistent_db import PersistentDB
     from repro.models.recsys.model import wide_tables
-    from repro.serve.server import InferenceServer
     from repro.train import checkpoint as ck
 
     import jax
-
-    base = os.path.dirname(os.path.abspath(ps_path))
-    hcfg = load_ps_config(ps_path)
 
     m = Model.from_json(os.path.join(base, hcfg.graph_path), mesh=mesh)
     m.compile()
     if hcfg.config_hash and \
             recsys_config_hash(m.cfg) != hcfg.config_hash:
-        raise ValueError(f"{ps_path}: graph does not lower to the "
-                         "deployed config (hash mismatch)")
+        raise ValueError(f"model {hcfg.model!r}: graph does not lower "
+                         "to the deployed config (hash mismatch)")
+    if m.name != hcfg.model:    # storage is namespaced by this name
+        raise ValueError(f"{hcfg.graph_path}: graph name {m.name!r} != "
+                         f"deployed model name {hcfg.model!r}")
 
     # dense weights: flat key-paths -> the model's param tree (minus
     # embeddings, which live in the parameter server)
@@ -75,32 +81,50 @@ def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
                 if k not in ("embedding", "wide_embedding")}
     dense = ck.unflatten_like(template, flat)
 
-    pdb = PersistentDB(os.path.join(base, hcfg.pdb_root))
     for t in hcfg.tables:
         pdb.open_table(hcfg.model, t.name)
-    hps = HPS(hcfg.model, hcfg.tables, pdb, vdb=vdb, bus=bus,
-              cache_capacity=hcfg.cache_capacity,
-              cache_shards=hcfg.cache_shards)
-    wide_hps = None
     if hcfg.wide:
-        wtabs = wide_tables(m.cfg)
-        for t in wtabs:
+        for t in wide_tables(m.cfg):
             pdb.open_table(hcfg.model, t.name)
-        # shares bus/VDB/striping with the deep HPS so online updates
-        # reach the wide L1 too
-        wide_hps = HPS(hcfg.model, wtabs, pdb, vdb=vdb, bus=bus,
-                       cache_capacity=hcfg.cache_capacity,
-                       cache_shards=hcfg.cache_shards)
-    server = InferenceServer(m.model, dense, hps, wide_hps=wide_hps,
-                             max_batch=hcfg.max_batch,
-                             refresh_budget=hcfg.refresh_budget)
-    return server, m
+    return m._build_server(pdb, hcfg, dense, vdb=vdb, bus=bus), m
 
 
-def _train_and_deploy(arch: str, train_steps: int, batch: int,
-                      deploy_dir: str, cache_capacity: int) -> str:
-    """Demo path: train a recipe briefly via the graph API, write the
-    deployment bundle, return the ps.json path."""
+def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
+                             bus=None):
+    """ps.json -> ready server (the Triton-ensemble analogue).
+
+    Single-model bundles return ``(InferenceServer, api.Model)``;
+    ensemble bundles return ``(MultiModelServer, {name: api.Model})`` —
+    every member model served from ONE PersistentDB process, one shared
+    VolatileDB and one shared message bus. The models are handed back so
+    the caller can cross-check predictions or introspect the graphs.
+    """
+    from repro.core.hps.persistent_db import PersistentDB
+    from repro.core.hps.volatile_db import VolatileDB
+    from repro.serve.server import MultiModelServer
+
+    base = os.path.dirname(os.path.abspath(ps_path))
+    cfg = load_ps_config(ps_path)
+
+    if isinstance(cfg, HPSConfig):
+        pdb = PersistentDB(os.path.join(base, cfg.pdb_root))
+        return _build_model_server(base, cfg, pdb, mesh=mesh, vdb=vdb,
+                                   bus=bus)
+
+    assert isinstance(cfg, EnsembleConfig)
+    pdb = PersistentDB(os.path.join(base, cfg.models[0].pdb_root))
+    vdb = vdb if vdb is not None else VolatileDB()    # shared L2
+    from repro.core.hps.message_bus import MessageBus
+    bus = bus if bus is not None else MessageBus()    # shared bus
+    servers, models = {}, {}
+    for hcfg in cfg.models:
+        servers[hcfg.model], models[hcfg.model] = _build_model_server(
+            base, hcfg, pdb, mesh=mesh, vdb=vdb, bus=bus)
+    return MultiModelServer(servers, vdb=vdb, pdb=pdb, bus=bus), models
+
+
+def _train_model(arch: str, train_steps: int, batch: int):
+    """Train one recipe briefly via the graph API."""
     from repro.api import Solver
     mod = importlib.import_module(
         "repro.configs." + arch.replace("-", "_"))
@@ -108,10 +132,81 @@ def _train_and_deploy(arch: str, train_steps: int, batch: int,
                         solver=Solver(batch_size=batch, lr=1e-2))
     m.compile()
     hist = m.fit(steps=train_steps)
-    print(f"trained {train_steps} steps, "
+    print(f"[{m.name}] trained {train_steps} steps, "
           f"loss={hist[-1]['loss']:.4f}")
-    m.deploy(deploy_dir, cache_capacity=cache_capacity)
+    return m
+
+
+def _train_and_deploy(archs, train_steps: int, batch: int,
+                      deploy_dir: str, cache_capacity: int) -> str:
+    """Demo path: train the recipes briefly, write ONE deployment
+    bundle (single-model or ensemble), return the ps.json path."""
+    models = [_train_model(a, train_steps, batch) for a in archs]
+    if len(models) == 1:
+        models[0].deploy(deploy_dir, cache_capacity=cache_capacity)
+    else:
+        from repro.api import deploy_ensemble
+        deploy_ensemble(models, deploy_dir,
+                        cache_capacity=cache_capacity)
     return os.path.join(deploy_dir, "ps.json")
+
+
+def _serve_bundle(ps_path: str, requests: int, batch: int) -> None:
+    """Stand the bundle back up, push requests through ``submit`` and
+    print the serving picture (per model for ensembles)."""
+    from repro.data.synthetic import SyntheticCTR
+    from repro.serve.server import MultiModelServer
+
+    built, loaded = build_server_from_config(ps_path)
+    if isinstance(built, MultiModelServer):
+        servers = {name: built[name] for name in built.models}
+        models = loaded
+    else:
+        servers, models = {loaded.name: built}, {loaded.name: loaded}
+
+    data = {n: SyntheticCTR(m.cfg, batch) for n, m in models.items()}
+    outs = {n: [] for n in servers}
+    with next(iter(models.values())).mesh:
+        for n, s in servers.items():          # warm jit off the clock
+            warm = data[n].batch(10_000)
+            s.predict(warm["dense"], warm["cat"])
+            s.latencies_ms.clear()
+            s.start()
+        t0 = time.time()
+        handles = []
+        for r in range(requests):
+            for n, s in servers.items():
+                req = data[n].batch(20_000 + r)
+                handles.append((n, s.submit(req["dense"], req["cat"])))
+        for n, h in handles:
+            out = h.get(timeout=300)
+            if isinstance(out, Exception):  # a failed group delivers its
+                raise out                   # exception — surface it
+            outs[n].append(out)
+        dt = time.time() - t0
+        for s in servers.values():
+            s.stop()
+
+    total = sum(len(o) for os_ in outs.values() for o in os_)
+    print(f"served {total} predictions over {len(servers)} model(s) "
+          f"in {dt:.2f}s ({total / dt:.0f} qps)")
+    for n, s in servers.items():
+        # one full prediction batch per model from the rebuilt server,
+        # or the bundle round-trip is broken — the CI serve-smoke job's
+        # pass/fail signal, so an explicit raise (asserts vanish
+        # under python -O)
+        if not outs[n] or any(len(o) != batch for o in outs[n]):
+            raise SystemExit(
+                f"model {n!r}: expected {requests} responses of "
+                f"{batch} rows, got {[len(o) for o in outs[n]]}")
+        pct = s.latency_percentiles()
+        stats = s.hps.stats()
+        hit = np.mean(list(stats["l1_hit_rate"].values()))
+        print(f"[{n}] {len(outs[n])} responses; latency ms: "
+              f"p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+              f"p99={pct['p99']:.1f}; L1 hit rate {hit:.3f}; "
+              f"L2 hits={stats['l2_hits']} misses={stats['l2_misses']}; "
+              f"L3 fetches={sum(stats['l3_fetches']['calls'].values())}")
 
 
 def main():
@@ -119,9 +214,11 @@ def main():
     ap.add_argument("--config", default=None,
                     help="ps.json of an existing deployment bundle")
     ap.add_argument("--arch", default="dlrm-criteo",
-                    choices=["dlrm-criteo", "dcn-criteo",
-                             "deepfm-criteo", "wdl-criteo"],
-                    help="demo mode: train+deploy this recipe first")
+                    help="demo mode: train+deploy these recipes first "
+                         "(comma-separated list of "
+                         "dlrm-criteo|dcn-criteo|deepfm-criteo|"
+                         "wdl-criteo; 2+ archs deploy an ensemble "
+                         "bundle)")
     ap.add_argument("--train-steps", type=int, default=20)
     ap.add_argument("--requests", type=int, default=50)
     ap.add_argument("--batch", type=int, default=64)
@@ -131,39 +228,18 @@ def main():
 
     ps_path = args.config
     if ps_path is None:
+        archs = [a.strip() for a in args.arch.split(",") if a.strip()]
+        known = ("dlrm-criteo", "dcn-criteo", "deepfm-criteo",
+                 "wdl-criteo")
+        bad = [a for a in archs if a not in known]
+        if bad:
+            ap.error(f"unknown arch(es) {bad}; choose from {known}")
         deploy_dir = args.deploy_dir or tempfile.mkdtemp(prefix="hps_")
-        ps_path = _train_and_deploy(args.arch, args.train_steps,
-                                    args.batch, deploy_dir,
-                                    args.cache_capacity)
+        ps_path = _train_and_deploy(archs, args.train_steps, args.batch,
+                                    deploy_dir, args.cache_capacity)
         print(f"deployment bundle: {deploy_dir}")
 
-    from repro.data.synthetic import SyntheticCTR
-    server, m = build_server_from_config(ps_path)
-    data = SyntheticCTR(m.cfg, args.batch)
-
-    with m.mesh:
-        warm = data.batch(10_000)
-        server.predict(warm["dense"], warm["cat"])
-        server.latencies_ms.clear()
-        server.start()
-        t0 = time.time()
-        handles = []
-        for r in range(args.requests):
-            req = data.batch(20_000 + r)
-            handles.append(server.submit(req["dense"], req["cat"]))
-        outs = [h.get(timeout=300) for h in handles]
-        dt = time.time() - t0
-        server.stop()
-
-    n = sum(len(o) for o in outs)
-    pct = server.latency_percentiles()
-    stats = server.hps.stats()
-    print(f"served {n} predictions in {dt:.2f}s ({n / dt:.0f} qps)")
-    print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
-          f"p99={pct['p99']:.1f}")
-    print(f"L1 hit rate: "
-          f"{np.mean(list(stats['l1_hit_rate'].values())):.3f}; "
-          f"L2 hits={stats['l2_hits']} misses={stats['l2_misses']}")
+    _serve_bundle(ps_path, args.requests, args.batch)
 
 
 if __name__ == "__main__":

@@ -6,29 +6,45 @@ cache -> L2 VDB -> L3 PDB), and the jitted dense net computes predictions.
 ``deploy_from_training`` exports a trained model into the PDB — the
 offline-training deployment path; online updates arrive via the bus.
 
-The embedding path is fully batched end-to-end: the coalesced request
-batch goes through ``HPS.lookup`` as ONE vectorized resolve (per-table
-misses coalesce into one fetch + one payload scatter; the stacked pooled
-``[B, T, D]`` comes back in a single jitted device call) and feeds the
-jitted dense net without bouncing through host memory — so batching
-requests amortizes both the host index work and the device dispatches,
-which is what produces the paper's batch-dependent speedup curve. With
-two or more tables the lookup runs pipelined: the HPS host worker probes
-table *t+1* while table *t*'s scatter is in flight.
+The serve loop is a STREAM-FED pipeline (``engine="stream"``, the
+default): drained request groups feed the dense network directly from
+``HPS.lookup_stream`` with no caller-thread materialization in between —
+while query *i-1*'s prediction materializes, query *i*'s pooled
+embeddings and dense net are computing on device and query *i+1*'s index
+probes (and their remote L2/L3 miss fetches) run on the HPS host
+workers. The only host sync point per query is the prediction itself.
+Predictions are bit-identical to the unpipelined path: the per-plan
+payload snapshots make the lookup machinery order-independent, and the
+dense net is the same jitted function either way. Two reference engines
+remain selectable: ``"sync"`` (drain -> one blocking ``predict`` per
+group — the old loop, where XLA async dispatch still overlaps device
+work behind the host) and ``"stage_sync"`` (every device stage blocked
+before the next host stage — the no-overlap baseline the benchmarks
+measure against).
 
 The serve loop also drives update propagation (no bare timer threads):
-between drained batches it polls the message bus into L2/L3, marks the
+between pipeline stages it polls the message bus into L2/L3, marks the
 touched L1 rows dirty, and drains one bounded hotness-ordered refresh
 chunk per tick — so refresh IO interleaves with serving instead of
 stopping the world, and a periodic ``refresh_poll_s`` full-mark sweeps
 rows whose updates arrived out of band.
+
+``MultiModelServer`` fronts SEVERAL models from one storage backend —
+per-model serve loops and L1 caches over a shared VolatileDB
+(model-namespaced keys), a shared PersistentDB (model-namespaced tables)
+and a shared message bus (model-scoped topics): the ensemble deployment
+unit of the GPU-specialized inference parameter server (arXiv
+2210.08804), reconstructed by ``launch.serve.build_server_from_config``
+from one ps.json bundle.
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +55,8 @@ from repro.core.hps.hps import HPS
 from repro.core.hps.message_bus import MessageBus
 from repro.core.hps.persistent_db import PersistentDB
 from repro.core.hps.volatile_db import VolatileDB
+
+ENGINES = ("stream", "sync", "stage_sync")
 
 
 def deploy_from_training(model, params: Dict, pdb: PersistentDB,
@@ -69,7 +87,11 @@ class InferenceServer:
                  wide_hps: Optional[HPS] = None,
                  hotness: Optional[Sequence[int]] = None,
                  refresh_budget: int = 512,
-                 refresh_poll_s: Optional[float] = None):
+                 refresh_poll_s: Optional[float] = None,
+                 engine: str = "stream"):
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {engine!r}")
         self.model = model
         self.hps = hps
         self.wide_hps = wide_hps
@@ -78,6 +100,7 @@ class InferenceServer:
         self.hotness = list(hotness) if hotness is not None else None
         self.dense_params = dense_params
         self.max_batch = max_batch
+        self.engine = engine
         #: rows re-pulled per refresh chunk between drained batches
         self.refresh_budget = refresh_budget
         #: period of the full-mark sweep (None = only bus-marked rows)
@@ -96,20 +119,48 @@ class InferenceServer:
 
     # -- synchronous path ---------------------------------------------------------
 
-    def predict(self, dense: np.ndarray, cat: np.ndarray) -> np.ndarray:
-        t0 = time.perf_counter()
-        pipelined = len(self.hps.tables) > 1
-        emb = self.hps.lookup(cat, self.hotness, pipelined=pipelined)
-        if self.wide_hps is not None:
-            wide = self.wide_hps.lookup(
-                cat, self.hotness,
-                pipelined=len(self.wide_hps.tables) > 1)
+    def _dense_forward(self, dense: np.ndarray, emb: jax.Array,
+                       wide: Optional[jax.Array]) -> jax.Array:
+        """The one jitted dense-net dispatch + host-side sigmoid — shared
+        by every engine so outputs are bit-identical across them."""
+        if wide is not None:
             out = self._predict(self.dense_params, jnp.asarray(dense),
                                 emb, wide)
         else:
             out = self._predict_nowide(self.dense_params,
                                        jnp.asarray(dense), emb)
-        out = np.asarray(jax.nn.sigmoid(out))
+        return jax.nn.sigmoid(out)
+
+    def predict(self, dense: np.ndarray, cat: np.ndarray) -> np.ndarray:
+        t0 = time.perf_counter()
+        pipelined = len(self.hps.tables) > 1
+        emb = self.hps.lookup(cat, self.hotness, pipelined=pipelined)
+        wide = None
+        if self.wide_hps is not None:
+            wide = self.wide_hps.lookup(
+                cat, self.hotness,
+                pipelined=len(self.wide_hps.tables) > 1)
+        out = np.asarray(self._dense_forward(dense, emb, wide))
+        self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return out
+
+    def _predict_stage_sync(self, dense: np.ndarray,
+                            cat: np.ndarray) -> np.ndarray:
+        """The no-overlap reference: every embedding device stage blocks
+        before the next host stage, the dense net blocks before the
+        sigmoid — nothing is left to XLA's async dispatch."""
+        t0 = time.perf_counter()
+        emb = self.hps.lookup_stage_sync(cat, self.hotness)
+        wide = None
+        if self.wide_hps is not None:
+            wide = self.wide_hps.lookup_stage_sync(cat, self.hotness)
+        if wide is not None:
+            out = self._predict(self.dense_params, jnp.asarray(dense),
+                                emb, wide)
+        else:
+            out = self._predict_nowide(self.dense_params,
+                                       jnp.asarray(dense), emb)
+        out = np.asarray(jax.nn.sigmoid(jax.block_until_ready(out)))
         self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
         return out
 
@@ -119,7 +170,12 @@ class InferenceServer:
         """One serving-loop tick of update propagation: bus -> L2/L3 (+
         dirty marks), a periodic full-mark sweep, and ONE bounded
         hotness-ordered refresh chunk — never a stop-the-world re-pull.
-        Covers every HPS this server reads from (deep AND wide)."""
+        Covers every HPS this server reads from (deep AND wide).
+
+        Safe to interleave anywhere between pipeline stages: in-flight
+        lookup plans carry their own lock-consistent payload snapshots,
+        so a refresh scatter landing between a query's probe and its
+        device stage can never tear that query's view."""
         sweep = False
         if self.refresh_poll_s is not None:
             now = time.monotonic()
@@ -139,9 +195,135 @@ class InferenceServer:
     # -- queued/batched path --------------------------------------------------------
 
     def submit(self, dense: np.ndarray, cat: np.ndarray) -> "queue.Queue":
+        """Queue a request; the returned handle's ``get()`` yields the
+        prediction rows (or the exception that failed its batch)."""
         done: queue.Queue = queue.Queue(maxsize=1)
         self._q.put((dense, cat, done))
         return done
+
+    def _coalesce(self, first
+                  ) -> Optional[Tuple[list, np.ndarray, np.ndarray]]:
+        """Drain the queue behind ``first`` into one coalesced request
+        group of up to ``max_batch`` rows (the batcher of the paper's
+        Figure 2 — one group is one device batch). Requests that cannot
+        be concatenated (mismatched widths) get the error delivered to
+        their handles here and ``None`` comes back — the serve loop must
+        keep running."""
+        reqs = [first]
+        rows = first[0].shape[0]
+        while rows < self.max_batch:
+            try:
+                nxt = self._q.get_nowait()
+            except queue.Empty:
+                break
+            reqs.append(nxt)
+            rows += nxt[0].shape[0]
+        try:
+            dense = np.concatenate([r[0] for r in reqs])
+            cat = np.concatenate([r[1] for r in reqs])
+        except Exception as exc:
+            self._deliver_error(reqs, exc)
+            return None
+        return reqs, dense, cat
+
+    @staticmethod
+    def _deliver(reqs: list, preds: np.ndarray) -> None:
+        off = 0
+        for r in reqs:
+            n = r[0].shape[0]
+            r[2].put(preds[off:off + n])
+            off += n
+
+    @staticmethod
+    def _deliver_error(reqs: list, exc: BaseException) -> None:
+        for r in reqs:
+            try:
+                r[2].put_nowait(exc)
+            except queue.Full:
+                pass
+
+    # -- the stream-fed pipeline (engine="stream") ----------------------------------
+
+    def _serve_burst_stream(self, first) -> None:
+        """Pipeline one burst of requests end-to-end: request groups are
+        admitted into ``HPS.lookup_stream`` (host probes + remote
+        fetches run ahead on the HPS workers), each yielded DEVICE
+        embedding block feeds the jitted dense net immediately, and
+        predictions materialize ONE GROUP BEHIND the dense dispatch —
+        group *i+1* probes the host index while group *i*'s payload
+        scatters + dense net run and group *i-1*'s prediction leaves for
+        its callers. ``_refresh_tick`` interleaves between stages. The
+        burst ends when the request queue goes empty; the pipeline then
+        drains in order.
+        """
+        fifo: deque = deque()   # (reqs, dense, t0) in admission order
+        head = [first]
+
+        def cats():
+            while True:
+                if head:        # ALWAYS serve the already-dequeued
+                    nxt = head.pop()    # request, even under stop()
+                elif self._stop.is_set():
+                    return      # stop only gates NEW admissions
+                else:
+                    try:
+                        nxt = self._q.get_nowait()
+                    except queue.Empty:
+                        return
+                group = self._coalesce(nxt)
+                if group is None:           # un-concatenatable: errors
+                    continue                # already delivered
+                reqs, dense, cat = group
+                if dense.shape[0] == 0:     # degenerate empty group
+                    self._deliver(reqs, np.zeros((0,), np.float32))
+                    continue
+                fifo.append((reqs, dense, time.perf_counter()))
+                yield cat
+
+        if self.wide_hps is not None:
+            deep_src, wide_src = itertools.tee(cats())
+            pairs = zip(
+                self.hps.lookup_stream(deep_src, self.hotness,
+                                       materialize=False),
+                self.wide_hps.lookup_stream(wide_src, self.hotness,
+                                            materialize=False))
+        else:
+            pairs = ((emb, None) for emb in
+                     self.hps.lookup_stream(cats(), self.hotness,
+                                            materialize=False))
+
+        in_flight: deque = deque()          # (reqs, t0, device preds)
+        current = None                      # group between fifo/in_flight
+        try:
+            for emb, wide in pairs:
+                current = fifo.popleft()    # (reqs, dense, t0)
+                out = self._dense_forward(current[1], emb, wide)
+                in_flight.append((current[0], current[2], out))
+                current = None
+                self._refresh_tick()        # between pipeline stages
+                if len(in_flight) > 1:      # materialize one behind
+                    self._materialize(in_flight.popleft())
+            while in_flight:
+                self._materialize(in_flight.popleft())
+        except Exception as exc:            # a poisoned group kills the
+            if current is not None:         # burst: surface the error to
+                self._deliver_error(current[0], exc)  # EVERY undelivered
+            for reqs, _, _ in in_flight:    # handle (the failing group's
+                self._deliver_error(reqs, exc)   # own included) instead
+            for reqs, _, _ in fifo:         # of hanging callers
+                self._deliver_error(reqs, exc)
+
+    def _materialize(self, item) -> None:
+        reqs, t0, pred = item
+        try:
+            preds = np.asarray(pred)        # the one sync point per group
+        except Exception as exc:            # deferred device error: this
+            self._deliver_error(reqs, exc)  # group's handles first, the
+            raise                           # burst handler does the rest
+        self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        self._deliver(reqs, preds)
+
+    # -- serve loop -----------------------------------------------------------------
 
     def _serve_loop(self):
         while not self._stop.is_set():
@@ -150,23 +332,23 @@ class InferenceServer:
             except queue.Empty:
                 self._refresh_tick()     # idle: drain the refresh backlog
                 continue
-            reqs = [first]
-            rows = first[0].shape[0]
-            while rows < self.max_batch:
-                try:
-                    nxt = self._q.get_nowait()
-                except queue.Empty:
-                    break
-                reqs.append(nxt)
-                rows += nxt[0].shape[0]
-            dense = np.concatenate([r[0] for r in reqs])
-            cat = np.concatenate([r[1] for r in reqs])
-            preds = self.predict(dense, cat)
-            off = 0
-            for r in reqs:
-                n = r[0].shape[0]
-                r[2].put(preds[off:off + n])
-                off += n
+            if self.engine == "stream":
+                self._serve_burst_stream(first)
+                continue
+            group = self._coalesce(first)
+            if group is None:               # errors already delivered
+                self._refresh_tick()
+                continue
+            reqs, dense, cat = group
+            try:
+                if self.engine == "stage_sync":
+                    preds = self._predict_stage_sync(dense, cat)
+                else:
+                    preds = self.predict(dense, cat)
+            except Exception as exc:
+                self._deliver_error(reqs, exc)
+            else:
+                self._deliver(reqs, preds)
             self._refresh_tick()         # interleave refresh with serving
 
     def start(self):
@@ -188,3 +370,68 @@ class InferenceServer:
                 "p95": float(np.percentile(arr, 95)),
                 "p99": float(np.percentile(arr, 99)),
                 "mean": float(arr.mean())}
+
+
+class MultiModelServer:
+    """Several models served from ONE parameter-server process.
+
+    Each member keeps its own serve loop, dense net and L1 device caches
+    (embedding working sets must not thrash each other); the storage
+    levels below are SHARED — one VolatileDB (keys namespaced
+    ``model/table`` by the HPS), one PersistentDB (tables namespaced per
+    model on disk) and one message bus (topics scoped
+    ``hps.<model>.<table>``) — so adding a model to a deployment adds
+    L1 state only, and one model's online updates can never touch
+    another's tables at any level. Predictions are bit-exact with
+    per-model in-process servers: sharing storage shares bytes, not
+    values.
+    """
+
+    def __init__(self, servers: Mapping[str, InferenceServer], *,
+                 vdb: Optional[VolatileDB] = None,
+                 pdb: Optional[PersistentDB] = None,
+                 bus: Optional[MessageBus] = None):
+        if not servers:
+            raise ValueError("MultiModelServer needs at least one model")
+        self.servers: Dict[str, InferenceServer] = dict(servers)
+        self.vdb = vdb
+        self.pdb = pdb
+        self.bus = bus
+
+    @property
+    def models(self) -> List[str]:
+        return list(self.servers)
+
+    def __getitem__(self, model: str) -> InferenceServer:
+        return self._server(model)
+
+    def _server(self, model: str) -> InferenceServer:
+        try:
+            return self.servers[model]
+        except KeyError:
+            raise KeyError(f"unknown model {model!r}; serving "
+                           f"{self.models}") from None
+
+    def predict(self, model: str, dense: np.ndarray,
+                cat: np.ndarray) -> np.ndarray:
+        return self._server(model).predict(dense, cat)
+
+    def submit(self, model: str, dense: np.ndarray,
+               cat: np.ndarray) -> "queue.Queue":
+        return self._server(model).submit(dense, cat)
+
+    def start(self):
+        for s in self.servers.values():
+            s.start()
+
+    def stop(self):
+        for s in self.servers.values():
+            s.stop()
+
+    def stats(self) -> Dict[str, Dict]:
+        """Per-model serving picture: L1/L2/L3 + refresh + latency."""
+        return {name: {"hps": s.hps.stats(),
+                       "latency_ms": s.latency_percentiles(),
+                       "updates_applied": s.updates_applied,
+                       "rows_refreshed": s.rows_refreshed}
+                for name, s in self.servers.items()}

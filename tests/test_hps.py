@@ -78,8 +78,9 @@ def test_hps_fallthrough_and_promotion(tmp_path):
     out = np.asarray(hps.lookup(cat))
     np.testing.assert_allclose(out[0, 0], rows[3])
     np.testing.assert_allclose(out[1, 0], rows[7] + rows[3])
-    # missed ids were promoted into the VDB
-    assert vdb.size("t0") == 2
+    # missed ids were promoted into the VDB, under the model-scoped key
+    # (one shared L2 can back several deployed models)
+    assert vdb.size("m/t0") == 2
     # second lookup hits L1 entirely
     h0 = hps.caches["t0"].hits
     hps.lookup(cat)
@@ -90,7 +91,7 @@ def test_hps_fallthrough_and_promotion(tmp_path):
 def test_hps_vdb_hit_avoids_pdb(tmp_path):
     pdb, rows = _pdb_with_table(tmp_path)
     vdb = VolatileDB()
-    vdb.insert("t0", np.asarray([5]), np.ones((1, 4), np.float32) * 123)
+    vdb.insert("m/t0", np.asarray([5]), np.ones((1, 4), np.float32) * 123)
     tabs = [EmbeddingTableConfig("t0", 100, 4)]
     hps = HPS("m", tabs, pdb, vdb=vdb, cache_capacity=4)
     out = np.asarray(hps.lookup(np.asarray([[[5]]], np.int32)))

@@ -374,3 +374,82 @@ def test_server_loop_drives_refresh(tmp_path):
     assert server.rows_refreshed >= 1         # dirty row drained by loop
     after = server.predict(np.zeros((1, 1), np.float32), cat)
     assert not np.allclose(before, after)     # update reached serving
+
+
+# ---------------------------------------------------------------------------
+# refresh / stream / update concurrency stress
+# ---------------------------------------------------------------------------
+
+def test_refresh_concurrent_with_stream_under_update_hammer(tmp_path):
+    """``refresh_chunk`` driven concurrently with ``lookup_stream``
+    while a third thread hammers ``apply_updates``: no deadlock, and
+    every materialized row binds a CONSISTENT id->slot view — each
+    returned row is exactly one published version of exactly the id
+    that was queried (value = id + version*VSTEP, constant across the
+    row), never a torn row and never another id's slot."""
+    import threading
+    from repro.core.hps.message_bus import MessageBus, Producer
+
+    vocab, dim, T, VSTEP = 64, 8, 2, 100000.0
+    bus = MessageBus()
+    pdb = PersistentDB(str(tmp_path / "pdb_stress"))
+    tabs = []
+    for t in range(T):
+        init = np.repeat(np.arange(vocab, dtype=np.float32)[:, None],
+                         dim, axis=1)           # version 0: value == id
+        pdb.create_table("m", f"t{t}", vocab, dim, initial=init)
+        tabs.append(EmbeddingTableConfig(f"t{t}", vocab, dim, hotness=1))
+    hps = HPS("m", tabs, pdb, cache_capacity=32, bus=bus)
+    stop = threading.Event()
+    failures = []
+
+    def updater():
+        try:
+            prod = Producer(bus, "m")
+            rng = np.random.default_rng(5)
+            v = 0
+            while not stop.is_set():
+                v = (v % 99) + 1                # keep values f32-exact
+                ids = np.unique(rng.integers(0, vocab, size=8))
+                rows = np.broadcast_to(
+                    ids.astype(np.float32)[:, None] + v * VSTEP,
+                    (len(ids), dim)).copy()
+                for t in range(T):
+                    prod.send(f"t{t}", ids, rows)
+                prod.flush()
+                hps.apply_updates()             # L2/L3 writes + marks
+        except Exception as e:                  # pragma: no cover
+            failures.append(e)
+
+    def refresher():
+        try:
+            while not stop.is_set():
+                hps.refresh_step(budget=8)
+                hps.schedule_refresh()          # keep the backlog alive
+        except Exception as e:                  # pragma: no cover
+            failures.append(e)
+
+    threads = [threading.Thread(target=updater, daemon=True),
+               threading.Thread(target=refresher, daemon=True)]
+    for t in threads:
+        t.start()
+    rng = np.random.default_rng(7)
+    queries = [rng.integers(0, vocab, size=(6, T, 1)).astype(np.int32)
+               for _ in range(50)]
+    try:
+        for q, out in zip(queries, hps.lookup_stream(iter(queries))):
+            out = np.asarray(out)
+            for b in range(q.shape[0]):
+                for t in range(T):
+                    row = out[b, t]
+                    assert np.all(row == row[0]), f"torn row: {row}"
+                    assert row[0] % VSTEP == q[b, t, 0], \
+                        f"wrong id's slot: {row[0]} for id {q[b, t, 0]}"
+                    assert 0 <= row[0] // VSTEP <= 99
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads), "deadlocked threads"
+    assert not failures, failures
+    hps.close()

@@ -103,3 +103,137 @@ def test_online_update_reaches_server(deployed):
     after = np.asarray(hps2.lookup(cat))[0, 0]
     np.testing.assert_allclose(after, 1234.5)
     assert not np.allclose(before, after)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble bundles: several models served from ONE storage backend
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ensemble(tmp_path_factory):
+    """dlrm + wdl trained briefly, deployed as ONE ensemble bundle with
+    a shared VDB/PDB/bus. Both smoke recipes name their tables C1..C6,
+    so any missing model-scoping at any storage level shows up as
+    cross-model corruption immediately."""
+    from repro.api import Solver, deploy_ensemble
+    from repro.configs import dlrm_criteo, wdl_criteo
+    models = []
+    for mod in (dlrm_criteo, wdl_criteo):
+        m = mod.build_model(smoke=True,
+                            solver=Solver(batch_size=16, lr=1e-2))
+        m.compile()
+        m.fit(steps=2)
+        models.append(m)
+    d = str(tmp_path_factory.mktemp("ens"))
+    bus = MessageBus()
+    server = deploy_ensemble(models, d, cache_capacity=128, bus=bus)
+    return models, d, bus, server
+
+
+def _probe_batches(models):
+    return {m.name: SyntheticCTR(m.cfg, 8, seed=3).batch(7)
+            for m in models}
+
+
+def test_ensemble_bundle_roundtrip(ensemble):
+    """deploy_ensemble -> ps.json -> build_server_from_config: the
+    rebuilt multi-model server matches the in-process one bit-exactly
+    for every member model."""
+    import os
+    from repro.launch.serve import build_server_from_config
+    models, d, bus, server = ensemble
+    batches = _probe_batches(models)
+    rebuilt, loaded = build_server_from_config(os.path.join(d, "ps.json"))
+    assert sorted(rebuilt.models) == sorted(m.name for m in models)
+    for m in models:
+        b = batches[m.name]
+        want = server.predict(m.name, b["dense"], b["cat"])
+        got = rebuilt.predict(m.name, b["dense"], b["cat"])
+        np.testing.assert_array_equal(got, want)
+        assert loaded[m.name].cfg == m.cfg
+
+
+def test_ensemble_matches_independent_servers(ensemble, tmp_path):
+    """Sharing one VDB/PDB process across models shares bytes, not
+    values: the ensemble server is bit-exact with two fully independent
+    per-model in-process deployments."""
+    models, d, bus, server = ensemble
+    batches = _probe_batches(models)
+    for m in models:
+        solo = m.deploy(str(tmp_path / ("solo_" + m.name)),
+                        cache_capacity=128)
+        b = batches[m.name]
+        np.testing.assert_array_equal(
+            server.predict(m.name, b["dense"], b["cat"]),
+            solo.predict(b["dense"], b["cat"]))
+
+
+def test_ensemble_ps_json_contents(ensemble):
+    import json
+    import os
+    models, d, bus, server = ensemble
+    with open(os.path.join(d, "ps.json")) as f:
+        doc = json.load(f)
+    assert doc["format"] == "repro-ps-ensemble-v1"
+    assert [e["model"] for e in doc["models"]] == \
+        [m.name for m in models]
+    # one shared storage root; per-model graph/dense artifacts
+    assert {e["pdb_root"] for e in doc["models"]} == {"pdb"}
+    for m, e in zip(models, doc["models"]):
+        assert os.path.exists(os.path.join(d, e["graph_path"]))
+        assert os.path.exists(os.path.join(d, e["dense_weights_path"]))
+
+
+def test_ensemble_shared_vdb_is_model_scoped(ensemble):
+    """Both models promote misses into the ONE VolatileDB — under
+    model-scoped keys, so identical table names never collide."""
+    models, d, bus, server = ensemble
+    batches = _probe_batches(models)
+    for m in models:
+        b = batches[m.name]
+        server.predict(m.name, b["dense"], b["cat"])
+    vdb = server.vdb
+    for m in models:
+        assert vdb.size(f"{m.name}/C1") > 0
+    assert vdb.size("C1") == 0                  # no unscoped leakage
+
+
+def test_ensemble_online_update_isolation(ensemble):
+    """An online update on ONE model's bus topics must reach that
+    model's serving path and must leave every other model's tables —
+    L1, L2 and L3 — bit-identical."""
+    models, d, bus, server = ensemble
+    a, b_model = models
+    batches = _probe_batches(models)
+    ba, bb = batches[a.name], batches[b_model.name]
+    # ids actually probed by each batch's first table, so the update is
+    # visible in the prediction once it propagates
+    ids = np.unique(ba["cat"][:, 0, 0])
+    ids = ids[ids >= 0][:4]
+    before_a = server.predict(a.name, ba["dense"], ba["cat"])
+    before_b = server.predict(b_model.name, bb["dense"], bb["cat"])
+    l3_b_before = server.pdb.fetch(b_model.name, "C1", ids)
+
+    prod = Producer(bus, a.name)
+    dim = a.cfg.tables[0].dim
+    prod.send("C1", ids, np.full((len(ids), dim), 77.5, np.float32))
+    prod.flush()
+    sa, sb = server[a.name], server[b_model.name]
+    assert sa.hps.apply_updates() == 1
+    assert sb.hps.apply_updates() == 0          # not its topic
+    while sa.hps.refresh_backlog():
+        sa.hps.refresh_step(budget=64)
+
+    after_a = server.predict(a.name, ba["dense"], ba["cat"])
+    after_b = server.predict(b_model.name, bb["dense"], bb["cat"])
+    assert not np.array_equal(before_a, after_a)    # update landed on A
+    np.testing.assert_array_equal(before_b, after_b)  # B untouched (L1/L2)
+    np.testing.assert_array_equal(                    # B untouched (L3)
+        server.pdb.fetch(b_model.name, "C1", ids), l3_b_before)
+
+
+def test_ensemble_rejects_duplicate_names(ensemble, tmp_path):
+    from repro.api import GraphError, deploy_ensemble
+    models, d, bus, server = ensemble
+    with pytest.raises(GraphError, match="unique"):
+        deploy_ensemble([models[0], models[0]], str(tmp_path / "dup"))
