@@ -13,10 +13,20 @@ on one CPU. What CAN be measured here, honestly:
 
 ``dlrm_train.engine_overhead`` < ~1.15x is the target: the sharding
 machinery (shard_map, mega-table indirection, mean-mask handling) must
-be nearly free when degenerate."""
+be nearly free when degenerate.
+
+The GENERIC-EXECUTOR arm: since the graph-API redesign every model's
+dense net executes as a compiled ``DenseGraphProgram`` (one traced node
+loop) instead of the hand-written fixed pipeline. Both lower to the
+same jitted XLA computation, so ``dlrm_train.graph_overhead`` ~ 1.0x is
+the regression bar; the pair of step times is persisted to
+``artifacts/train_graph.json`` so a compile-path regression is visible
+run over run."""
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -117,3 +127,29 @@ def run(report: Report):
                    f"framework_vs_plain_x={t_opt / t_naive:.2f} "
                    "(1-device degenerate case; see embedding_strategies "
                    "for the multi-device win)")
+
+        # generic executor vs the pre-refactor fixed pipeline: same
+        # model, same params/opt state/batch — only the dense forward
+        # differs (compiled DenseGraphProgram vs apply_dense_reference)
+        rmodel = RecsysModel(dataclasses.replace(cfg, dtype="f32"), mesh,
+                             global_batch=batch_size,
+                             dense_executor="reference")
+        rstep = jax.jit(build_train_step(rmodel, tcfg))
+
+        def ref_step():
+            return rstep(params, opt_state, batch)
+
+        t_ref = time_fn(ref_step, iters=4)["min_s"]
+        ratio = t_opt / t_ref
+        report.add("dlrm_train.compiled_graph", t_opt,
+                   f"samples_per_s={batch_size / t_opt:.0f}")
+        report.add("dlrm_train.fixed_pipeline", t_ref,
+                   f"samples_per_s={batch_size / t_ref:.0f}")
+        report.add("dlrm_train.graph_overhead", ratio,
+                   f"compiled_vs_fixed_x={ratio:.2f}")
+        os.makedirs("artifacts", exist_ok=True)
+        with open("artifacts/train_graph.json", "w") as f:
+            json.dump({"batch": batch_size,
+                       "compiled_graph_s": t_opt,
+                       "fixed_pipeline_s": t_ref,
+                       "graph_overhead_x": ratio}, f, indent=1)

@@ -1,0 +1,83 @@
+"""Novel architectures through the generic dense-graph compiler.
+
+The graph API no longer pattern-matches a menu of recipes: any valid
+layer DAG compiles into a ``DenseGraphProgram`` and runs through the
+same training, deployment and serving stack as the paper models. This
+example drives TWO architectures that exist nowhere in the codebase as
+model-specific code:
+
+  * a two-tower residual model (``configs/twotower_criteo.py``) —
+    multiply / reduce_sum dot-product logit + residual MLP head,
+  * a DCN-v2-style parallel cross+deep hybrid
+    (``configs/crossdeep_criteo.py``) — per-branch logit heads plus a
+    sliced low-order linear branch,
+
+each: declared -> compiled -> trained -> JSON round-tripped -> deployed
+to a relocatable bundle -> served from the REBUILT server (bit-exact
+with the in-process deploy) -> exported and replayed in pure numpy.
+
+Run:  PYTHONPATH=src python examples/novel_archs.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.api import Model, Solver
+from repro.configs import crossdeep_criteo, twotower_criteo
+from repro.data.synthetic import SyntheticCTR
+from repro.export import export_recsys, load_exported, run_exported
+from repro.launch.serve import build_server_from_config
+
+
+def drive(build_model, steps: int = 15, batch: int = 64) -> None:
+    m = build_model(smoke=True, solver=Solver(batch_size=batch, lr=1e-2))
+    cfg = m.to_recsys_config()
+    print(f"\n=== {m.name}: lowers to model={cfg.model!r} "
+          f"({len(cfg.dense_graph) - 1} compiled layers) ===")
+    m.compile()
+    m.summary()
+    data = SyntheticCTR(m.cfg, batch)
+    hist = m.fit(data.batch, steps=steps)
+    print(f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    req = data.batch(990)
+    want = m.predict(req)
+
+    with tempfile.TemporaryDirectory() as root:
+        # JSON round-trip reproduces the exact same lowered config
+        gpath = os.path.join(root, "graph.json")
+        m.graph_to_json(gpath)
+        assert Model.from_json(gpath).to_recsys_config() == cfg
+
+        # deploy -> rebuild from the bundle alone -> bit-exact serving
+        dep = os.path.join(root, "dep")
+        server = m.deploy(dep, cache_capacity=512)
+        got = server.predict(req["dense"], req["cat"])
+        rebuilt, _ = build_server_from_config(
+            os.path.join(dep, "ps.json"))
+        got2 = rebuilt.predict(req["dense"], req["cat"])
+        np.testing.assert_array_equal(got2, got)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+        print(f"served {len(got2)} predictions from the rebuilt bundle "
+              "(bit-exact with in-process deploy)")
+
+        # portable export replays under pure numpy
+        with m.mesh:
+            exp = export_recsys(m.model, dict(m.params),
+                                os.path.join(root, "exp"), m.name)
+        graph, weights = load_exported(exp)
+        np_preds = run_exported(graph, weights, req)
+        np.testing.assert_allclose(np_preds, want, rtol=2e-2, atol=2e-2)
+        print(f"numpy executor parity over {len(graph['nodes'])} "
+              "portable nodes")
+
+
+def main():
+    drive(twotower_criteo.build_model)
+    drive(crossdeep_criteo.build_model)
+    print("\nboth novel graphs trained, round-tripped, deployed, "
+          "served and exported with zero per-arch lowering code")
+
+
+if __name__ == "__main__":
+    main()

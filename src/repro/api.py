@@ -28,23 +28,63 @@ verbatim by the inference side. Same shape here:
     m.save("ckpt_dir")                     # graph + weights; Model.load
     server = m.deploy("deploy_dir")        # writes ps.json bundle, too
 
-``DenseLayer`` types: ``mlp | cross | dot_interaction | fm | concat |
-sigmoid``.  All four paper recipes are expressible (see
-``configs/{dlrm,dcn,deepfm,wdl}_criteo.py``); WDL/DeepFM declare TWO
-``SparseEmbedding`` groups — the deep one plus a dim-1 wide branch.
+**Generic compilation.** ``compile()`` does NOT pattern-match a menu of
+recipes: the lowering pass validates the ``DenseLayer`` DAG (unknown
+tensors, duplicate names, cycles, arity, shape agreement, a single
+terminal, no unused layers), topologically sorts it (layers may be
+added in any order), infers every tensor's shape, and emits a
+``DenseGraphProgram`` (``models/recsys/dense_graph.py``) — per-layer
+parameter init plus one jitted apply that the training and serving
+stacks execute for ANY valid graph. A graph that happens to be one of
+the four paper recipes lowers to that recipe's canonical
+``RecsysConfig`` (``model="dlrm"|"dcn"|"deepfm"|"wdl"``, bit-exact with
+the registry configs, paper semantics preserved — e.g. the WDL wide
+head pools the wide branch with fixed weight 1); every other graph
+lowers to ``model="graph"`` with the DAG embedded in the config, and
+trains / round-trips / deploys / exports with zero per-architecture
+code.
 
-The graph does not execute itself: ``compile()`` *lowers* it onto the
-existing ``RecsysConfig``/``RecsysModel``/``Trainer`` machinery by
-structurally matching one of the four canonical recipes (helpful errors
-otherwise), so every kernel, placement and fault-tolerance behaviour of
-the training stack is reused unchanged. ``graph_to_json`` embeds a hash
-of the lowered config; ``Model.from_json`` re-lowers and verifies it.
+**Layer vocabulary and shape rules.** Shapes are written per sample
+(the batch axis is implicit): ``[n]`` is a 2-D feature block,
+``[T, D]`` a 3-D pooled-embedding block, ``[]`` a logit column.
+Inputs: the ``Input``'s dense tensor is ``[dense_dim]``; each
+``SparseEmbedding`` group's top is ``[T, D]`` (the dim-1 wide group is
+``[T, 1]``). 3-D blocks flatten to ``[T*D]`` wherever a 2-D view is
+needed.
 
-``deploy(directory)`` writes a relocatable serving bundle — ``pdb/``
-(all tables, wide twins included), ``graph.json``, ``dense.npz`` and a
-ps.json-style ``HPSConfig`` — and ``launch/serve.py`` reconstructs the
-``HPS`` + ``InferenceServer`` from that bundle alone, no Python object
-from training in hand.
+====================  =====================================================
+``mlp``               1+ bottoms, flattened + concatenated -> ``[units[-1]]``;
+                      ``units`` per layer, ``final_activation`` keeps the
+                      last ReLU.
+``cross``             1 bottom ``[n]`` -> ``[n]``; DCN cross net,
+                      ``num_layers`` deep.
+``dot_interaction``   ``[D]`` + ``[T, D]`` -> ``[(T+1)T/2]``; DLRM pairwise
+                      dots (the 2-D bottom must end at the embedding dim).
+``fm``                ``[n]`` + ``[T, 1]`` + ``[T, D]`` (any order) ->
+                      ``[]``; factorization-machine first+second order.
+``concat``            1+ bottoms, flattened -> ``[sum of dims]``.
+``add``               2+ bottoms of identical shape -> same (elementwise).
+``multiply``          2+ bottoms of identical shape -> same (elementwise).
+``relu``              1 bottom -> same shape.
+``slice``             1 bottom ``[n]`` -> ``[stop-start]`` (feature axis).
+``reduce_sum``        1 bottom -> ``[]`` (sums all non-batch axes).
+``sigmoid``           terminal only: sums its logit-shaped (``[]`` or
+                      ``[1]``) bottoms and emits the probability.
+====================  =====================================================
+
+The graph must end in exactly ONE terminal tensor (produced, never
+consumed): a ``sigmoid`` layer, or a logit-shaped tensor. WDL/DeepFM —
+and any novel graph wanting a first-order branch — declare TWO
+``SparseEmbedding`` groups: the deep one plus a dim-1 wide twin
+(same vocab sizes, ``combiner="sum"``).
+
+``graph_to_json`` embeds a hash of the lowered config;
+``Model.from_json`` re-lowers and verifies it. ``deploy(directory)``
+writes a relocatable serving bundle — ``pdb/`` (all tables, wide twins
+included), ``graph.json``, ``dense.npz`` and a ps.json-style
+``HPSConfig`` — and ``launch/serve.py`` reconstructs the
+``HPS`` + ``InferenceServer`` from that bundle alone, novel graphs
+included, no Python object from training in hand.
 """
 from __future__ import annotations
 
@@ -63,12 +103,12 @@ from repro.configs.base import (
     recsys_config_hash,
 )
 
+from repro.models.recsys.dense_graph import (
+    GraphError, compile_layers, graph_spec, spec_from_layer,
+)
+
 GRAPH_FORMAT = "repro-graph-v1"
 PS_FORMAT = "repro-ps-v1"
-
-
-class GraphError(ValueError):
-    """A model graph that cannot be lowered onto the training stack."""
 
 
 # ---------------------------------------------------------------------------
@@ -180,12 +220,16 @@ class SparseEmbedding:
 
 
 DENSE_LAYER_TYPES = ("mlp", "cross", "dot_interaction", "fm", "concat",
-                     "sigmoid")
+                     "sigmoid", "add", "multiply", "relu", "slice",
+                     "reduce_sum")
 
 
 @dataclasses.dataclass
 class DenseLayer:
     """One named dense layer, wired by tensor names.
+
+    The full vocabulary and its shape rules are documented in the module
+    docstring. Highlights:
 
     ``mlp``              — MLP over the (implicitly concatenated)
                            bottoms; ``units`` per layer,
@@ -195,8 +239,12 @@ class DenseLayer:
                            ``[bottom_mlp_out, emb]``.
     ``fm``               — factorization-machine first+second order term
                            over ``[dense, wide, emb]``.
-    ``concat``           — feature concatenation (3-D embeddings
-                           flatten).
+    ``concat``           — multi-input feature concatenation (3-D
+                           embeddings flatten).
+    ``add`` / ``multiply`` — elementwise over same-shaped bottoms.
+    ``relu``             — elementwise activation.
+    ``slice``            — ``[start:stop]`` on the feature axis.
+    ``reduce_sum``       — sums all non-batch axes to a logit column.
     ``sigmoid``          — terminal: sums its bottom logits, emits the
                            probability.
     """
@@ -206,6 +254,8 @@ class DenseLayer:
     units: Sequence[int] = ()
     num_layers: int = 0                 # cross only
     final_activation: bool = False      # mlp only
+    start: int = 0                      # slice only
+    stop: int = 0                       # slice only
 
     def __post_init__(self):
         if self.type not in DENSE_LAYER_TYPES:
@@ -226,11 +276,10 @@ class DenseLayer:
 
 
 # ---------------------------------------------------------------------------
-# Lowering: layer graph -> RecsysConfig
+# Lowering: layer graph -> RecsysConfig (generic compile + recognition)
 # ---------------------------------------------------------------------------
 
-def _check_wiring(inp: Input, embs: List[SparseEmbedding],
-                  layers: List[DenseLayer]) -> None:
+def _check_embeddings(inp: Input, embs: List[SparseEmbedding]) -> None:
     produced = {inp.dense_name}
     for e in embs:
         if e.bottom_name != inp.sparse_name:
@@ -241,16 +290,6 @@ def _check_wiring(inp: Input, embs: List[SparseEmbedding],
         if e.top_name in produced:
             raise GraphError(f"duplicate tensor name {e.top_name!r}")
         produced.add(e.top_name)
-    for l in layers:
-        for b in l.bottom_names:
-            if b not in produced:
-                raise GraphError(
-                    f"DenseLayer({l.type}) -> {l.top!r} reads unknown "
-                    f"tensor {b!r}; layers must be added in topological "
-                    f"order (known so far: {sorted(produced)})")
-        if l.top in produced:
-            raise GraphError(f"duplicate tensor name {l.top!r}")
-        produced.add(l.top)
 
 
 def _split_embeddings(embs: List[SparseEmbedding]
@@ -275,144 +314,120 @@ def _split_embeddings(embs: List[SparseEmbedding]
     return deep, wide
 
 
-def _one(layers: List[DenseLayer], type_: str, *, what: str,
-         optional: bool = False) -> Optional[DenseLayer]:
-    found = [l for l in layers if l.type == type_]
-    if len(found) > 1:
-        raise GraphError(f"expected at most one {type_!r} layer "
-                         f"({what}), got {len(found)}")
-    if not found:
-        if optional:
-            return None
-        raise GraphError(f"missing the {type_!r} layer ({what})")
-    return found[0]
+# -- canonical-recipe recognition -------------------------------------------
+#
+# Recognition is NOT required for execution (any valid DAG compiles);
+# it only maps the four paper recipes onto their canonical RecsysConfigs
+# so they stay bit-exact with the registry entries, keep their
+# historical parameter names, and keep the paper's semantics (e.g. the
+# WDL wide head pools the wide branch with fixed weight 1). A graph
+# that misses a canonical shape by any detail simply lowers generically.
+
+def _find(layers: List[DenseLayer], type_: str,
+          bottoms: Optional[Tuple[str, ...]] = None) -> List[DenseLayer]:
+    return [l for l in layers if l.type == type_ and
+            (bottoms is None or tuple(l.bottom_names) == tuple(bottoms))]
 
 
-def _producer(layers: List[DenseLayer], name: str, *,
-              what: str) -> DenseLayer:
-    for l in layers:
-        if l.top == name:
-            return l
-    raise GraphError(f"no layer produces {name!r} ({what})")
+def _take_sigmoid(layers: List[DenseLayer], logits: Tuple[str, ...],
+                  used: List[DenseLayer], *, required: bool) -> bool:
+    sigs = _find(layers, "sigmoid")
+    if len(sigs) > 1:
+        return False
+    if not sigs:
+        return not required
+    # set AND length: a duplicated bottom (e.g. ['logit', 'logit'])
+    # means 2x-logit semantics under the generic executor, so it must
+    # NOT classify as the canonical recipe
+    if len(sigs[0].bottom_names) != len(logits) or \
+            set(sigs[0].bottom_names) != set(logits):
+        return False
+    used.append(sigs[0])
+    return True
 
 
-def _unused(layers: List[DenseLayer], used: List[DenseLayer],
-            kind: str) -> None:
-    left = [l for l in layers if not any(l is u for u in used)]
-    if left:
-        l = left[0]
-        raise GraphError(
-            f"DenseLayer({l.type}) -> {l.top!r} does not fit the "
-            f"{kind} recipe (see configs/{kind}_criteo.py for the "
-            f"canonical graph)")
-
-
-def _match_terminal_sigmoid(layers: List[DenseLayer],
-                            logits: Tuple[str, ...],
-                            used: List[DenseLayer], *,
-                            required: bool) -> None:
-    sig = _one(layers, "sigmoid", what="terminal probability",
-               optional=not required)
-    if sig is None:
-        return
-    if set(sig.bottom_names) != set(logits):
-        raise GraphError(
-            f"the sigmoid layer must sum exactly the logit tensors "
-            f"{sorted(logits)}, got {sorted(sig.bottom_names)}")
-    used.append(sig)
-
-
-def _lower_dlrm(name: str, inp: Input, deep: SparseEmbedding,
-                layers: List[DenseLayer]) -> RecsysConfig:
-    inter = _one(layers, "dot_interaction", what="DLRM interaction")
-    if inter.bottom_names[-1:] != (deep.top_name,) or \
-            len(inter.bottom_names) != 2:
-        raise GraphError(
-            "dot_interaction takes [bottom_mlp_out, "
-            f"{deep.top_name!r}], got {list(inter.bottom_names)}")
-    bot = _producer(layers, inter.bottom_names[0], what="bottom MLP")
-    if bot.type != "mlp" or bot.bottom_names != (inp.dense_name,):
-        raise GraphError(
-            f"the DLRM bottom tower must be an mlp over "
-            f"[{inp.dense_name!r}]")
-    if bot.units[-1] != deep.dim:
-        raise GraphError(
-            f"bottom mlp must end at the embedding dim for the "
-            f"interaction: units[-1]={bot.units[-1]} != {deep.dim}")
+def _classify_dlrm(name, inp, deep, layers):
+    inters = _find(layers, "dot_interaction")
+    if len(inters) != 1:
+        return None
+    inter = inters[0]
+    if len(inter.bottom_names) != 2 or \
+            inter.bottom_names[1] != deep.top_name:
+        return None
+    bots = [l for l in layers if l.top == inter.bottom_names[0]]
+    if len(bots) != 1:
+        return None
+    bot = bots[0]
+    if bot.type != "mlp" or tuple(bot.bottom_names) != (inp.dense_name,) \
+            or not bot.final_activation or not bot.units \
+            or bot.units[-1] != deep.dim:
+        return None
     used = [bot, inter]
     top_bottoms = (bot.top, inter.top)
-    cat = _one(layers, "concat", what="[bottom, interaction] concat",
-               optional=True)
-    if cat is not None:
-        if cat.bottom_names != top_bottoms:
-            raise GraphError(
-                f"the DLRM concat joins {list(top_bottoms)} in that "
-                f"order, got {list(cat.bottom_names)}")
-        used.append(cat)
-        top_bottoms = (cat.top,)
+    cats = _find(layers, "concat", top_bottoms)
+    if cats:
+        if len(cats) != 1:
+            return None
+        used.append(cats[0])
+        top_bottoms = (cats[0].top,)
     tops = [l for l in layers if l.type == "mlp" and l is not bot]
-    if len(tops) != 1 or tops[0].bottom_names != top_bottoms:
-        raise GraphError(
-            f"the DLRM top tower must be one mlp over "
-            f"{list(top_bottoms)}")
+    if len(tops) != 1:
+        return None
     top = tops[0]
-    if top.units[-1] != 1:
-        raise GraphError(f"top mlp must end in 1 logit unit, got "
-                         f"units={top.units}")
+    if tuple(top.bottom_names) != top_bottoms or not top.units or \
+            top.units[-1] != 1 or top.final_activation:
+        return None
     used.append(top)
-    _match_terminal_sigmoid(layers, (top.top,), used, required=False)
-    _unused(layers, used, "dlrm")
+    if not _take_sigmoid(layers, (top.top,), used, required=False):
+        return None
+    if len(used) != len(layers):
+        return None
     return RecsysConfig(
         name=name, model="dlrm", tables=deep.to_tables(),
         num_dense_features=inp.dense_dim, bottom_mlp=bot.units,
         top_mlp=top.units, embedding_dim=deep.dim)
 
 
-def _match_flat(layers: List[DenseLayer], inp: Input,
-                deep: SparseEmbedding) -> DenseLayer:
-    for l in layers:
-        if l.type == "concat" and \
-                l.bottom_names == (inp.dense_name, deep.top_name):
-            return l
-    raise GraphError(
-        f"missing the concat([{inp.dense_name!r}, {deep.top_name!r}]) "
-        "feature layer")
-
-
-def _lower_dcn(name: str, inp: Input, deep: SparseEmbedding,
-               layers: List[DenseLayer]) -> RecsysConfig:
-    flat = _match_flat(layers, inp, deep)
-    cross = _one(layers, "cross", what="DCN cross net", optional=True)
-    crossed = flat.top
+def _classify_dcn(name, inp, deep, layers):
+    flats = _find(layers, "concat", (inp.dense_name, deep.top_name))
+    if len(flats) != 1:
+        return None
+    flat = flats[0]
     used = [flat]
+    crosses = _find(layers, "cross")
+    if len(crosses) > 1:
+        return None
+    crossed = flat.top
+    cross = crosses[0] if crosses else None
     if cross is not None:
-        if cross.bottom_names != (flat.top,):
-            raise GraphError(
-                f"the cross net runs over [{flat.top!r}], got "
-                f"{list(cross.bottom_names)}")
+        if tuple(cross.bottom_names) != (flat.top,):
+            return None
         crossed = cross.top
         used.append(cross)
     mlps = [l for l in layers if l.type == "mlp"]
-    deep_mlp = next((l for l in mlps if l.bottom_names == (flat.top,)),
-                    None)
-    if deep_mlp is None:
-        raise GraphError(f"missing the deep mlp over [{flat.top!r}]")
+    deeps = [l for l in mlps if tuple(l.bottom_names) == (flat.top,)]
+    if len(deeps) != 1:
+        return None
+    deep_mlp = deeps[0]
+    if deep_mlp.final_activation or not deep_mlp.units:
+        return None
     used.append(deep_mlp)
-    both = next((l for l in layers if l.type == "concat"
-                 and l.bottom_names == (crossed, deep_mlp.top)), None)
-    if both is None:
-        raise GraphError(
-            f"missing the concat([{crossed!r}, {deep_mlp.top!r}]) "
-            "combine input")
-    used.append(both)
-    combine = next((l for l in mlps if l.bottom_names == (both.top,)),
-                   None)
-    if combine is None or combine.units != (1,):
-        raise GraphError(
-            f"the combine head must be mlp([{both.top!r}], units=(1,))")
+    boths = _find(layers, "concat", (crossed, deep_mlp.top))
+    if len(boths) != 1:
+        return None
+    used.append(boths[0])
+    combines = [l for l in mlps
+                if tuple(l.bottom_names) == (boths[0].top,)]
+    if len(combines) != 1:
+        return None
+    combine = combines[0]
+    if combine.units != (1,) or combine.final_activation:
+        return None
     used.append(combine)
-    _match_terminal_sigmoid(layers, (combine.top,), used, required=False)
-    _unused(layers, used, "dcn")
+    if not _take_sigmoid(layers, (combine.top,), used, required=False):
+        return None
+    if len(used) != len(layers):
+        return None
     return RecsysConfig(
         name=name, model="dcn", tables=deep.to_tables(),
         num_dense_features=inp.dense_dim, bottom_mlp=(),
@@ -420,75 +435,97 @@ def _lower_dcn(name: str, inp: Input, deep: SparseEmbedding,
         num_cross_layers=cross.num_layers if cross is not None else 0)
 
 
-def _match_wide_deep_mlp(layers: List[DenseLayer], inp: Input,
-                         deep: SparseEmbedding, kind: str
-                         ) -> Tuple[DenseLayer, DenseLayer]:
-    """The concat+deep-tower pair shared by DeepFM and WDL; the deep
-    tower declares its 1-logit head explicitly (units end in 1)."""
-    flat = _match_flat(layers, inp, deep)
-    deep_mlp = next((l for l in layers if l.type == "mlp"
-                     and l.bottom_names == (flat.top,)), None)
-    if deep_mlp is None:
-        raise GraphError(f"missing the deep mlp over [{flat.top!r}]")
-    if deep_mlp.units[-1] != 1:
-        raise GraphError(
-            f"the {kind} deep tower ends in its own 1-unit logit head: "
-            f"units must end in 1, got {deep_mlp.units}")
+def _classify_flat_deep(inp, deep, layers):
+    """The concat + 1-logit deep-tower pair DeepFM and WDL share."""
+    flats = _find(layers, "concat", (inp.dense_name, deep.top_name))
+    if len(flats) != 1:
+        return None
+    flat = flats[0]
+    deeps = [l for l in layers if l.type == "mlp"
+             and tuple(l.bottom_names) == (flat.top,)]
+    if len(deeps) != 1:
+        return None
+    deep_mlp = deeps[0]
+    if deep_mlp.final_activation or not deep_mlp.units or \
+            deep_mlp.units[-1] != 1:
+        return None
     return flat, deep_mlp
 
 
-def _lower_deepfm(name: str, inp: Input, deep: SparseEmbedding,
-                  wide: Optional[SparseEmbedding],
-                  layers: List[DenseLayer]) -> RecsysConfig:
-    if wide is None:
-        raise GraphError("DeepFM needs the dim-1 wide SparseEmbedding "
-                         "for its first-order term")
-    flat, deep_mlp = _match_wide_deep_mlp(layers, inp, deep, "deepfm")
-    fm = _one(layers, "fm", what="FM first+second order term")
-    if set(fm.bottom_names) != {inp.dense_name, wide.top_name,
-                               deep.top_name}:
-        raise GraphError(
-            f"the fm layer reads [{inp.dense_name!r}, "
-            f"{wide.top_name!r}, {deep.top_name!r}], got "
-            f"{list(fm.bottom_names)}")
+def _classify_deepfm(name, inp, deep, wide, layers):
+    pair = _classify_flat_deep(inp, deep, layers)
+    if pair is None:
+        return None
+    flat, deep_mlp = pair
+    fms = _find(layers, "fm")
+    if len(fms) != 1:
+        return None
+    fm = fms[0]
+    if len(fm.bottom_names) != 3 or set(fm.bottom_names) != \
+            {inp.dense_name, wide.top_name, deep.top_name}:
+        return None
     used = [flat, deep_mlp, fm]
-    _match_terminal_sigmoid(layers, (fm.top, deep_mlp.top), used,
-                            required=True)
-    _unused(layers, used, "deepfm")
+    if not _take_sigmoid(layers, (fm.top, deep_mlp.top), used,
+                         required=True):
+        return None
+    if len(used) != len(layers):
+        return None
     return RecsysConfig(
         name=name, model="deepfm", tables=deep.to_tables(),
         num_dense_features=inp.dense_dim, bottom_mlp=(),
         top_mlp=deep_mlp.units[:-1], embedding_dim=deep.dim)
 
 
-def _lower_wdl(name: str, inp: Input, deep: SparseEmbedding,
-               wide: Optional[SparseEmbedding],
-               layers: List[DenseLayer]) -> RecsysConfig:
-    if wide is None:
-        raise GraphError("WDL needs the dim-1 wide SparseEmbedding "
-                         "branch")
-    flat, deep_mlp = _match_wide_deep_mlp(layers, inp, deep, "wdl")
+def _classify_wdl(name, inp, deep, wide, layers):
+    pair = _classify_flat_deep(inp, deep, layers)
+    if pair is None:
+        return None
+    flat, deep_mlp = pair
     heads = [l for l in layers if l.type == "mlp"
              and set(l.bottom_names) == {inp.dense_name, wide.top_name}]
-    if len(heads) != 1 or heads[0].units != (1,):
-        raise GraphError(
-            f"the wide head must be mlp([{inp.dense_name!r}, "
-            f"{wide.top_name!r}], units=(1,))")
-    used = [flat, deep_mlp, heads[0]]
-    _match_terminal_sigmoid(layers, (heads[0].top, deep_mlp.top), used,
-                            required=True)
-    _unused(layers, used, "wdl")
+    if len(heads) != 1:
+        return None
+    head = heads[0]
+    if head.units != (1,) or head.final_activation:
+        return None
+    used = [flat, deep_mlp, head]
+    if not _take_sigmoid(layers, (head.top, deep_mlp.top), used,
+                         required=True):
+        return None
+    if len(used) != len(layers):
+        return None
     return RecsysConfig(
         name=name, model="wdl", tables=deep.to_tables(),
         num_dense_features=inp.dense_dim, bottom_mlp=(),
         top_mlp=deep_mlp.units[:-1], embedding_dim=deep.dim)
 
 
+def _classify_canonical(name, inp, deep, wide, layers):
+    types = {l.type for l in layers}
+    if types - {"mlp", "cross", "dot_interaction", "fm", "concat",
+                "sigmoid"}:
+        return None                     # extended vocabulary -> generic
+    if "dot_interaction" in types:
+        if wide is not None:
+            return None
+        return _classify_dlrm(name, inp, deep, layers)
+    if "fm" in types:
+        if wide is None:
+            return None
+        return _classify_deepfm(name, inp, deep, wide, layers)
+    if wide is not None:
+        return _classify_wdl(name, inp, deep, wide, layers)
+    return _classify_dcn(name, inp, deep, layers)
+
+
 def lower_graph(name: str, inp: Optional[Input],
                 embs: List[SparseEmbedding],
                 layers: List[DenseLayer]) -> RecsysConfig:
-    """Structurally match the layer graph onto one of the four recipes
-    the training stack executes; raise :class:`GraphError` otherwise."""
+    """Compile the layer graph: validate the DAG (wiring, shapes, single
+    terminal), then lower it — onto the canonical config when it IS one
+    of the four paper recipes, onto a generic ``model="graph"`` config
+    (DAG embedded) for everything else. :class:`GraphError` names the
+    offending layer/tensor on any invalid graph."""
     if inp is None:
         raise GraphError("the graph needs an Input layer")
     if not embs:
@@ -496,18 +533,26 @@ def lower_graph(name: str, inp: Optional[Input],
     if len(embs) > 2:
         raise GraphError("at most two SparseEmbedding groups (deep + "
                          f"wide) are supported, got {len(embs)}")
-    _check_wiring(inp, embs, layers)
+    _check_embeddings(inp, embs)
     deep, wide = _split_embeddings(embs)
-    types = {l.type for l in layers}
-    if "dot_interaction" in types:
-        if wide is not None:
-            raise GraphError("DLRM takes a single embedding group")
-        return _lower_dlrm(name, inp, deep, layers)
-    if "fm" in types:
-        return _lower_deepfm(name, inp, deep, wide, layers)
-    if wide is not None:
-        return _lower_wdl(name, inp, deep, wide, layers)
-    return _lower_dcn(name, inp, deep, layers)
+    specs = [spec_from_layer(l) for l in layers]
+    # the generic compile IS the validation: every graph must pass it
+    compile_layers(
+        specs, dense_name=inp.dense_name, num_dense=inp.dense_dim,
+        emb_name=deep.top_name, num_tables=len(deep.vocab_sizes),
+        emb_dim=deep.dim,
+        wide_name=wide.top_name if wide is not None else None)
+    cfg = _classify_canonical(name, inp, deep, wide, layers)
+    if cfg is not None:
+        return cfg
+    return RecsysConfig(
+        name=name, model="graph", tables=deep.to_tables(),
+        num_dense_features=inp.dense_dim, bottom_mlp=(), top_mlp=(),
+        embedding_dim=deep.dim,
+        dense_graph=graph_spec(
+            inp.dense_name, deep.top_name,
+            wide.top_name if wide is not None else None, specs),
+        wide_branch=wide is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -890,8 +935,32 @@ class Model:
 # Ensemble deployment: several models, one storage backend
 # ---------------------------------------------------------------------------
 
+def _hotness_demand(tables) -> int:
+    """A model's L1 working-set proxy from its table hotness stats:
+    ids per sample x expected hot rows (the ``hot_fraction`` share of
+    each vocab the planner already treats as the hot set)."""
+    return max(1, sum(
+        t.hotness * max(1, min(t.vocab_size,
+                               round(t.vocab_size * t.hot_fraction)))
+        for t in tables))
+
+
+def hotness_cache_capacities(models: Sequence["Model"],
+                             budget: int) -> Dict[str, int]:
+    """Split one total L1 row ``budget`` across ensemble members in
+    proportion to their table-hotness working sets (each model gets at
+    least 64 rows so a cold member still serves)."""
+    demand = {m.name: _hotness_demand(m.cfg.tables) for m in models}
+    total = sum(demand.values())
+    return {name: max(64, int(round(budget * d / total)))
+            for name, d in demand.items()}
+
+
 def deploy_ensemble(models: Sequence[Model], directory: str, *,
-                    cache_capacity: int = 4096, cache_shards: int = 1,
+                    cache_capacity: Union[int, Dict[str, int],
+                                          None] = None,
+                    cache_budget: Optional[int] = None,
+                    cache_shards: int = 1,
                     refresh_budget: int = 512, max_batch: int = 1024,
                     vdb=None, bus=None):
     """Write ONE multi-model serving bundle and return a ready
@@ -907,6 +976,15 @@ def deploy_ensemble(models: Sequence[Model], directory: str, *,
     and ``launch/serve.py::build_server_from_config`` reconstructs the
     whole multi-model server from it, bit-exact with per-model
     in-process servers.
+
+    Per-model L1 sizing: by default the total row budget
+    (``cache_budget``, default ``4096 * len(models)``) is split across
+    members in proportion to their table-hotness working sets
+    (:func:`hotness_cache_capacities`) instead of handing every model
+    one global knob. Explicit overrides still work: pass
+    ``cache_capacity=<int>`` for a uniform per-model capacity, or a
+    ``{model_name: rows}`` dict to pin specific members (unpinned ones
+    keep their hotness share).
     """
     from repro.core.hps.message_bus import MessageBus
     from repro.core.hps.persistent_db import PersistentDB
@@ -921,6 +999,20 @@ def deploy_ensemble(models: Sequence[Model], directory: str, *,
         if m._params is None:
             raise RuntimeError(
                 f"model {m.name!r}: fit() or load() before deploy")
+    for m in models:
+        m._require_compiled()
+    budget = cache_budget if cache_budget is not None \
+        else 4096 * len(models)
+    capacities = hotness_cache_capacities(models, budget)
+    if isinstance(cache_capacity, int):
+        capacities = {m.name: cache_capacity for m in models}
+    elif isinstance(cache_capacity, dict):
+        unknown = set(cache_capacity) - {m.name for m in models}
+        if unknown:
+            raise GraphError(
+                f"cache_capacity overrides for unknown models: "
+                f"{sorted(unknown)}")
+        capacities.update(cache_capacity)
     os.makedirs(directory, exist_ok=True)
     pdb = PersistentDB(os.path.join(directory, "pdb"))   # shared L3
     vdb = vdb if vdb is not None else VolatileDB()       # shared L2
@@ -929,7 +1021,7 @@ def deploy_ensemble(models: Sequence[Model], directory: str, *,
     servers = {}
     for m in models:
         hcfg = m._write_bundle_member(
-            pdb, directory, m.name, cache_capacity=cache_capacity,
+            pdb, directory, m.name, cache_capacity=capacities[m.name],
             cache_shards=cache_shards, refresh_budget=refresh_budget,
             max_batch=max_batch)
         hcfgs.append(hcfg)

@@ -49,7 +49,7 @@ class EmbeddingTableConfig:
 @dataclasses.dataclass(frozen=True)
 class RecsysConfig:
     name: str
-    model: str                       # "dlrm" | "dcn" | "deepfm" | "wdl"
+    model: str                       # "dlrm"|"dcn"|"deepfm"|"wdl"|"graph"
     tables: Tuple[EmbeddingTableConfig, ...]
     num_dense_features: int
     bottom_mlp: Tuple[int, ...]
@@ -57,6 +57,14 @@ class RecsysConfig:
     embedding_dim: int               # shared D across tables (DLRM-style)
     num_cross_layers: int = 3        # DCN only
     dtype: str = "bf16"              # compute dtype
+    #: model == "graph" only: the serialized dense-layer DAG the generic
+    #: compiler executes — one ("inputs", dense, emb, wide) header plus
+    #: one (type, bottoms, top, attrs) tuple per layer (see
+    #: models/recsys/dense_graph.py). Canonical recipes keep ().
+    dense_graph: Tuple = ()
+    #: model == "graph" only: whether a dim-1 wide twin branch exists
+    #: (wdl/deepfm imply it via their model name)
+    wide_branch: bool = False
 
     @property
     def num_tables(self) -> int:
@@ -68,8 +76,18 @@ class RecsysConfig:
 
 
 def recsys_config_to_dict(cfg: RecsysConfig) -> Dict:
-    """Plain-JSON form of a RecsysConfig (tuples become lists)."""
-    return dataclasses.asdict(cfg)
+    """Plain-JSON form of a RecsysConfig (tuples become lists).
+
+    Default-valued graph fields are omitted so canonical configs keep
+    the exact dict (and content hash) they had before the generic
+    compiler existed — pre-existing graph.json / ps.json bundles keep
+    verifying."""
+    d = dataclasses.asdict(cfg)
+    if not d["dense_graph"]:
+        del d["dense_graph"]
+    if not d["wide_branch"]:
+        del d["wide_branch"]
+    return d
 
 
 def recsys_config_from_dict(d: Dict) -> RecsysConfig:
@@ -77,6 +95,9 @@ def recsys_config_from_dict(d: Dict) -> RecsysConfig:
     rest = {k: v for k, v in d.items() if k != "tables"}
     for k in ("bottom_mlp", "top_mlp"):
         rest[k] = tuple(rest[k])
+    if rest.get("dense_graph"):
+        from repro.models.recsys.dense_graph import dense_graph_from_jsonable
+        rest["dense_graph"] = dense_graph_from_jsonable(rest["dense_graph"])
     return RecsysConfig(tables=tables, **rest)
 
 

@@ -175,6 +175,17 @@ RECSYS_ARCHS: Dict[str, RecsysConfig] = {
     c.name: c for c in (dlrm_criteo, dcn_criteo, deepfm_criteo, wdl_criteo)
 }
 
+#: every graph-API recipe module, selectable via ``--arch`` in the
+#: launchers: the four canonical paper recipes (which lower onto the
+#: registry configs above) PLUS novel architectures that lower to
+#: ``model="graph"`` and execute through the generic dense-graph
+#: compiler — no registry entry or per-arch code needed.
+RECSYS_RECIPES: Dict[str, str] = {
+    arch: "repro.configs." + arch.replace("-", "_")
+    for arch in ("dlrm-criteo", "dcn-criteo", "deepfm-criteo",
+                 "wdl-criteo", "twotower-criteo", "crossdeep-criteo")
+}
+
 
 def reduce_recsys_for_smoke(cfg: RecsysConfig) -> RecsysConfig:
     d = 16

@@ -32,7 +32,9 @@ row ``r`` -> stripe ``r % N``.
 from __future__ import annotations
 
 import functools
+import math
 import threading
+import time
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
@@ -104,6 +106,11 @@ class HPS:
         self.consumer = Consumer(bus, model_name) if bus else None
         self._host_pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
+        #: the lookahead the adaptive ``lookup_stream`` last settled on
+        #: (and the deepest it has reached) — observability for the
+        #: fetch/compute auto-tuner
+        self.stream_depth = 2
+        self.stream_depth_peak = 2
 
     # -- L2/L3 fall-through ------------------------------------------------------
 
@@ -350,9 +357,18 @@ class HPS:
         return jax.block_until_ready(
             self._finalize(payloads, slot_blocks, blocks, overflow, b))
 
+    def _timed_probe(self, ti: int, blocks: List[np.ndarray],
+                     rec: List[float]) -> LookupPlan:
+        """Host stage + its wall time (pure work, queueing excluded) —
+        the fetch half of the stream auto-tuner's fetch/compute ratio."""
+        t0 = time.perf_counter()
+        plan = self._probe(ti, blocks)
+        rec.append(time.perf_counter() - t0)
+        return plan
+
     def lookup_stream(self, cats: Iterable[np.ndarray],
                       hotness: Optional[List[int]] = None, *,
-                      depth: int = 2,
+                      depth: Optional[int] = None, max_depth: int = 8,
                       materialize: bool = True) -> Iterator:
         """Serve a stream of queries through the two-stage pipeline,
         yielding ``[B, T, D]`` pooled outputs in order.
@@ -363,8 +379,19 @@ class HPS:
         output is materialized only after query *i+1*'s device work has
         been dispatched — so the device is computing one query while the
         host probes another, the serving loop of the paper's HPS.
-        ``depth`` bounds the lookahead (queries whose fetched rows may be
-        held in flight).
+
+        ``depth`` bounds the lookahead (queries whose fetched rows may
+        be held in flight). The default (``None``) AUTO-TUNES it from
+        the observed fetch/compute ratio: each query records its host
+        stage's work time (probe + coalesced L2/L3 miss fetch) and the
+        consumer-side time until the next query is taken, and the
+        lookahead tracks ``ceil(fetch/compute) + 1`` within
+        ``[2, max_depth]`` — a deep-RTT L2 (remote Redis-style fetches)
+        admits more in-flight queries so misses overlap, while a warm
+        cache stays at the classic double buffer. The depth last settled
+        on (and the peak) is exposed as ``stream_depth`` /
+        ``stream_depth_peak`` and in :meth:`stats`. Pass an ``int`` to
+        pin the lookahead.
 
         ``materialize=False`` yields the un-synced DEVICE arrays instead
         of numpy, immediately after each query's device dispatch — the
@@ -376,28 +403,39 @@ class HPS:
         self._check_dims()
         pool = self._host_worker()
         it = iter(cats)
-        pending: "deque" = deque()          # (b, blocks, probe futures)
+        #: (b, blocks, probe futures, probe-time record) per query
+        pending: "deque" = deque()
         exhausted = False
+        adaptive = depth is None
+        cur_depth = 2 if adaptive else max(1, depth)
+        cap = max(cur_depth, max_depth)
+        workers = max(1, min(2, len(self.tables)))
+        ema_fetch: Optional[float] = None
+        ema_compute: Optional[float] = None
+        self.stream_depth = cur_depth        # pinned or adaptive start
+        self.stream_depth_peak = max(self.stream_depth_peak, cur_depth)
 
         def admit():
             nonlocal exhausted
-            while not exhausted and len(pending) < max(1, depth):
+            while not exhausted and len(pending) < max(1, cur_depth):
                 try:
                     cat = np.asarray(next(it))
                 except StopIteration:
                     exhausted = True
                     return
                 blocks = self._split_query(cat, hotness)
-                futs = [pool.submit(self._probe, ti, blocks)
+                rec: List[float] = []
+                futs = [pool.submit(self._timed_probe, ti, blocks, rec)
                         for ti in range(len(self.tables))]
-                pending.append((cat.shape[0], blocks, futs))
+                pending.append((cat.shape[0], blocks, futs, rec))
 
         in_flight: List[jax.Array] = []     # dispatched, not yet synced
         try:
             admit()
             while pending:
-                b, blocks, futs = pending.popleft()
+                b, blocks, futs, rec = pending.popleft()
                 plans = [f.result() for f in futs]
+                t0 = time.perf_counter()    # host-stage wait excluded
                 bp = 1 << (b - 1).bit_length()
                 slot_blocks, payloads, overflow = [], [], []
                 for ti, plan in enumerate(plans):
@@ -408,16 +446,32 @@ class HPS:
                 admit()                     # next query probes first ...
                 if not materialize:         # ... caller owns the delay
                     yield out
-                    continue
-                in_flight.append(out)
-                if len(in_flight) > 1:      # ... then sync, one behind:
-                    # the device computes query i while the host is
-                    # already probing/dispatching query i+1
-                    yield np.asarray(in_flight.pop(0))
+                else:
+                    in_flight.append(out)
+                    if len(in_flight) > 1:  # ... then sync, one behind:
+                        # the device computes query i while the host is
+                        # already probing/dispatching query i+1
+                        yield np.asarray(in_flight.pop(0))
+                if adaptive:
+                    # consume time includes the caller's work between
+                    # yields (the dense net in the stream-fed server) —
+                    # exactly what the fetch must overlap with
+                    compute = max(time.perf_counter() - t0, 1e-6)
+                    fetch = sum(rec) / workers
+                    ema_fetch = fetch if ema_fetch is None \
+                        else 0.5 * ema_fetch + 0.5 * fetch
+                    ema_compute = compute if ema_compute is None \
+                        else 0.5 * ema_compute + 0.5 * compute
+                    ratio = ema_fetch / ema_compute
+                    cur_depth = int(min(cap, max(
+                        2, math.ceil(ratio) + 1)))
+                    self.stream_depth = cur_depth
+                    self.stream_depth_peak = max(self.stream_depth_peak,
+                                                 cur_depth)
             for out in in_flight:
                 yield np.asarray(out)
         finally:
-            for _, _, futs in pending:      # abandoned mid-stream
+            for _, _, futs, _ in pending:   # abandoned mid-stream
                 for f in futs:
                     f.cancel()
 
@@ -480,4 +534,6 @@ class HPS:
                               for c in self.caches.values()),
                 "backlog": self.refresh_backlog(),
             },
+            "stream": {"depth": self.stream_depth,
+                       "depth_peak": self.stream_depth_peak},
         }

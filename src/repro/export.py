@@ -11,6 +11,11 @@ load without this codebase: a directory with
 ``export_recsys`` writes it; ``load_exported`` + ``run_exported`` execute
 the graph with nothing but numpy — the cross-framework check the ONNX
 converter provides (and our tests assert parity with the JAX forward).
+
+Emission is a WALK of the model's compiled :class:`DenseGraphProgram`
+(``models/recsys/dense_graph.py``): there is no per-architecture code
+here, so any graph the compiler accepts — the four canonical recipes and
+novel layer DAGs alike — exports and replays under the numpy executor.
 """
 from __future__ import annotations
 
@@ -21,25 +26,77 @@ from typing import Dict, List
 import numpy as np
 
 OPSET = {"gather_sum", "concat", "relu", "linear", "dot_interaction",
-         "cross", "sigmoid", "fm_second_order", "add", "reduce_sum"}
+         "cross", "sigmoid", "fm_second_order", "add", "reduce_sum",
+         "ewise_add", "ewise_mul", "slice"}
+
+
+def _subtree(params: Dict, path) -> Dict:
+    """The param sub-tree a program node's path points at."""
+    p = params
+    for k in path:
+        p = p[k]
+    return p
+
+
+def _param(params: Dict, path) -> np.ndarray:
+    return np.asarray(_subtree(params, path))
+
+
+def _emit_mlp(node, params, weights, nodes):
+    """One program mlp node -> (optional concat +) a linear chain."""
+    prefix = "/".join(node.params["p"])
+    pdict = _subtree(params, node.params["p"])
+    inp = node.inputs[0]
+    if len(node.inputs) > 1:
+        nodes.append({"op": "concat", "inputs": list(node.inputs),
+                      "output": f"{node.output}__in", "attrs": {}})
+        inp = f"{node.output}__in"
+    n = len(pdict) // 2
+    cur = inp
+    final = node.attrs["final_activation"]
+    for i in range(n):
+        weights[f"{prefix}/w{i}"] = np.asarray(pdict[f"w{i}"])
+        weights[f"{prefix}/b{i}"] = np.asarray(pdict[f"b{i}"])
+        dst = node.output if i == n - 1 else f"{prefix}_h{i}"
+        nodes.append({"op": "linear", "inputs": [cur], "output": dst,
+                      "attrs": {"w": f"{prefix}/w{i}",
+                                "b": f"{prefix}/b{i}",
+                                "relu": i < n - 1 or final}})
+        cur = dst
+
+
+def _emit_first_order(out, dense_in, wide_in, w_name, b_name, w, b,
+                      weights, nodes):
+    """wide.sum + dense @ w + b as portable reduce_sum/linear/add."""
+    weights[w_name] = np.asarray(w)[:, None]
+    weights[b_name] = np.asarray(b)[None]
+    nodes.append({"op": "reduce_sum", "inputs": [wide_in],
+                  "output": f"{out}__ws", "attrs": {}})
+    nodes.append({"op": "linear", "inputs": [dense_in],
+                  "output": f"{out}__lin",
+                  "attrs": {"w": w_name, "b": b_name, "relu": False}})
+    return [f"{out}__ws", f"{out}__lin"]
 
 
 def export_recsys(model, params: Dict, directory: str,
                   model_name: str = "model") -> str:
-    """Serialize a RecsysModel + trained params to the portable format."""
+    """Serialize a RecsysModel + trained params to the portable format
+    by walking its compiled dense program."""
     from repro.models.recsys.model import logical_tables
 
     os.makedirs(directory, exist_ok=True)
     cfg = model.cfg
+    program = model.program
     weights: Dict[str, np.ndarray] = {}
     nodes: List[Dict] = []
 
     # -- embeddings: logical (unpadded, de-striped) per-table arrays -------
+    emb_out = program.inputs["emb"]
     for name, full in logical_tables(model.embedding,
                                      params["embedding"]).items():
         weights[f"table/{name}"] = full
     nodes.append({"op": "gather_sum", "inputs": ["cat"],
-                  "output": "emb",
+                  "output": emb_out,
                   "attrs": {"tables": [t.name for t in cfg.tables],
                             "combiners": [t.combiner
                                           for t in cfg.tables]}})
@@ -50,70 +107,87 @@ def export_recsys(model, params: Dict, directory: str,
             weights[f"table/{name}"] = full
             wide_table_names.append(name)
         nodes.append({"op": "gather_sum", "inputs": ["cat"],
-                      "output": "wide",
+                      "output": program.inputs["wide"] or "wide",
                       "attrs": {"tables": wide_table_names,
                                 "combiners": ["sum"] * len(
                                     wide_table_names)}})
 
-    # -- dense graph per model type ----------------------------------------
-    def mlp(prefix, pdict, inp, out, final_relu=False):
-        n = len(pdict) // 2
-        cur = inp
-        for i in range(n):
-            weights[f"{prefix}/w{i}"] = np.asarray(pdict[f"w{i}"])
-            weights[f"{prefix}/b{i}"] = np.asarray(pdict[f"b{i}"])
-            dst = out if i == n - 1 else f"{prefix}_h{i}"
-            nodes.append({"op": "linear", "inputs": [cur],
-                          "output": dst,
-                          "attrs": {"w": f"{prefix}/w{i}",
-                                    "b": f"{prefix}/b{i}",
-                                    "relu": i < n - 1 or final_relu}})
-            cur = dst
+    # -- dense graph: one walk of the compiled program ---------------------
+    for node in program.nodes:
+        if node.op == "mlp":
+            _emit_mlp(node, params, weights, nodes)
+        elif node.op == "cross":
+            prefix = "/".join(node.params["p"])
+            p = _subtree(params, node.params["p"])
+            n_cross = len(p) // 2
+            for i in range(n_cross):
+                weights[f"{prefix}/w{i}"] = np.asarray(p[f"w{i}"])
+                weights[f"{prefix}/b{i}"] = np.asarray(p[f"b{i}"])
+            nodes.append({"op": "cross", "inputs": [node.inputs[0]],
+                          "output": node.output,
+                          "attrs": {"layers": n_cross,
+                                    "prefix": prefix}})
+        elif node.op == "dot_interaction":
+            nodes.append({"op": "dot_interaction",
+                          "inputs": list(node.inputs),
+                          "output": node.output, "attrs": {}})
+        elif node.op == "concat":
+            nodes.append({"op": "concat", "inputs": list(node.inputs),
+                          "output": node.output, "attrs": {}})
+        elif node.op == "first_order":
+            terms = _emit_first_order(
+                node.output, node.inputs[0], node.inputs[1],
+                "/".join(node.params["w"]), "/".join(node.params["b"]),
+                _param(params, node.params["w"]),
+                _param(params, node.params["b"]), weights, nodes)
+            nodes.append({"op": "add", "inputs": terms,
+                          "output": node.output, "attrs": {}})
+        elif node.op == "fm_second":
+            nodes.append({"op": "fm_second_order",
+                          "inputs": [node.inputs[0]],
+                          "output": node.output, "attrs": {}})
+        elif node.op == "fm":
+            p = _subtree(params, node.params["p"])
+            prefix = "/".join(node.params["p"])
+            terms = _emit_first_order(
+                node.output, node.inputs[0], node.inputs[1],
+                f"{prefix}/w", f"{prefix}/b", p["w"], p["b"],
+                weights, nodes)
+            nodes.append({"op": "fm_second_order",
+                          "inputs": [node.inputs[2]],
+                          "output": f"{node.output}__fm2", "attrs": {}})
+            nodes.append({"op": "add",
+                          "inputs": terms + [f"{node.output}__fm2"],
+                          "output": node.output, "attrs": {}})
+        elif node.op == "add":
+            nodes.append({"op": "ewise_add", "inputs": list(node.inputs),
+                          "output": node.output, "attrs": {}})
+        elif node.op == "multiply":
+            nodes.append({"op": "ewise_mul", "inputs": list(node.inputs),
+                          "output": node.output, "attrs": {}})
+        elif node.op == "relu":
+            nodes.append({"op": "relu", "inputs": [node.inputs[0]],
+                          "output": node.output, "attrs": {}})
+        elif node.op == "slice":
+            nodes.append({"op": "slice", "inputs": [node.inputs[0]],
+                          "output": node.output,
+                          "attrs": {"start": node.attrs["start"],
+                                    "stop": node.attrs["stop"]}})
+        elif node.op == "reduce_sum":
+            nodes.append({"op": "reduce_sum", "inputs": [node.inputs[0]],
+                          "output": node.output, "attrs": {}})
+        else:                                # pragma: no cover
+            raise NotImplementedError(f"export for op {node.op}")
 
-    if cfg.model == "dlrm":
-        mlp("bottom", params["bottom"], "dense", "bot", final_relu=True)
-        nodes.append({"op": "dot_interaction", "inputs": ["bot", "emb"],
-                      "output": "tri", "attrs": {}})
-        nodes.append({"op": "concat", "inputs": ["bot", "tri"],
-                      "output": "top_in", "attrs": {}})
-        mlp("top", params["top"], "top_in", "logit")
-    elif cfg.model == "dcn":
-        nodes.append({"op": "concat", "inputs": ["dense", "emb_flat"],
-                      "output": "flat", "attrs": {}})
-        n_cross = len(params["cross"]) // 2
-        for i in range(n_cross):
-            weights[f"cross/w{i}"] = np.asarray(params["cross"][f"w{i}"])
-            weights[f"cross/b{i}"] = np.asarray(params["cross"][f"b{i}"])
-        nodes.append({"op": "cross", "inputs": ["flat"],
-                      "output": "crossed",
-                      "attrs": {"layers": n_cross}})
-        mlp("deep", params["deep"], "flat", "deep_out")
-        nodes.append({"op": "concat", "inputs": ["crossed", "deep_out"],
-                      "output": "both", "attrs": {}})
-        mlp("combine", params["combine"], "both", "logit")
-    elif cfg.model in ("deepfm", "wdl"):
-        # shared first-order term: sum(wide rows) + dense @ w + bias
-        weights["dense_w"] = np.asarray(params["dense_w"])[:, None]
-        weights["bias"] = np.asarray(params["bias"])[None]
-        nodes.append({"op": "reduce_sum", "inputs": ["wide"],
-                      "output": "wide_sum", "attrs": {}})
-        nodes.append({"op": "linear", "inputs": ["dense"],
-                      "output": "dense_lin",
-                      "attrs": {"w": "dense_w", "b": "bias",
-                                "relu": False}})
-        nodes.append({"op": "concat", "inputs": ["dense", "emb_flat"],
-                      "output": "flat", "attrs": {}})
-        mlp("deep", params["deep"], "flat", "deep_out")
-        logit_terms = ["wide_sum", "dense_lin", "deep_out"]
-        if cfg.model == "deepfm":
-            nodes.append({"op": "fm_second_order", "inputs": ["emb"],
-                          "output": "fm2", "attrs": {}})
-            logit_terms.insert(2, "fm2")
-        nodes.append({"op": "add", "inputs": logit_terms,
-                      "output": "logit", "attrs": {}})
+    # -- terminal: sum the logit bottoms, then the probability -------------
+    if len(program.logit_bottoms) == 1:
+        logit_name = program.logit_bottoms[0]
     else:
-        raise NotImplementedError(f"export for {cfg.model}")
-    nodes.append({"op": "sigmoid", "inputs": ["logit"],
+        logit_name = "logit" if "logit" not in program.shapes \
+            else "__logit"
+        nodes.append({"op": "add", "inputs": list(program.logit_bottoms),
+                      "output": logit_name, "attrs": {}})
+    nodes.append({"op": "sigmoid", "inputs": [logit_name],
                   "output": "prob", "attrs": {}})
 
     from repro.configs.base import recsys_config_hash
@@ -127,6 +201,7 @@ def export_recsys(model, params: Dict, directory: str,
         "config_hash": recsys_config_hash(cfg),
         "num_dense_features": cfg.num_dense_features,
         "embedding_dim": cfg.embedding_dim,
+        "dense_input": program.inputs["dense"],
         "tables": [{"name": t.name, "vocab": t.vocab_size,
                     "dim": t.dim, "hotness": t.hotness,
                     "combiner": t.combiner} for t in all_tables],
@@ -150,12 +225,17 @@ def run_exported(graph: Dict, weights: Dict[str, np.ndarray],
                  batch: Dict[str, np.ndarray]) -> np.ndarray:
     """Pure-numpy executor — the cross-framework parity check."""
     env: Dict[str, np.ndarray] = {
-        "dense": np.asarray(batch["dense"], np.float32)}
+        graph.get("dense_input", "dense"):
+            np.asarray(batch["dense"], np.float32)}
     cat = np.asarray(batch["cat"])
 
     def _col(x: np.ndarray) -> np.ndarray:
         """Any logit-shaped tensor -> [B] (flattens a trailing 1-dim)."""
         return x.reshape(len(cat), -1).sum(axis=1)
+
+    def _2d(x: np.ndarray) -> np.ndarray:
+        """Any tensor -> [B, n] (3-D embedding blocks flatten)."""
+        return x.reshape(x.shape[0], -1)
 
     for node in graph["nodes"]:
         op, out = node["op"], node["output"]
@@ -179,12 +259,12 @@ def run_exported(graph: Dict, weights: Dict[str, np.ndarray],
             env[out] = np.stack(outs, axis=1)
             env[f"{out}_flat"] = env[out].reshape(len(cat), -1)
         elif op == "linear":
-            x = env[node["inputs"][0]]
+            x = _2d(env[node["inputs"][0]])
             h = x @ weights[a["w"]] + weights[a["b"]]
             env[out] = np.maximum(h, 0) if a["relu"] else h
         elif op == "concat":
             env[out] = np.concatenate(
-                [env[i] for i in node["inputs"]], axis=1)
+                [_2d(env[i]) for i in node["inputs"]], axis=1)
         elif op == "dot_interaction":
             bot, emb = env[node["inputs"][0]], env[node["inputs"][1]]
             feats = np.concatenate([bot[:, None, :], emb], axis=1)
@@ -192,11 +272,12 @@ def run_exported(graph: Dict, weights: Dict[str, np.ndarray],
             i, j = np.tril_indices(feats.shape[1], -1)
             env[out] = gram[:, i, j]
         elif op == "cross":
+            prefix = a.get("prefix", "cross")
             x0 = env[node["inputs"][0]]
             x = x0
             for i in range(a["layers"]):
-                xw = x @ weights[f"cross/w{i}"]
-                x = x0 * xw[:, None] + weights[f"cross/b{i}"] + x
+                xw = x @ weights[f"{prefix}/w{i}"]
+                x = x0 * xw[:, None] + weights[f"{prefix}/b{i}"] + x
             env[out] = x
         elif op == "reduce_sum":
             env[out] = _col(env[node["inputs"][0]])
@@ -208,6 +289,21 @@ def run_exported(graph: Dict, weights: Dict[str, np.ndarray],
         elif op == "add":
             env[out] = np.sum([_col(env[i]) for i in node["inputs"]],
                               axis=0)
+        elif op == "ewise_add":
+            acc = env[node["inputs"][0]]
+            for i in node["inputs"][1:]:
+                acc = acc + env[i]
+            env[out] = acc
+        elif op == "ewise_mul":
+            acc = env[node["inputs"][0]]
+            for i in node["inputs"][1:]:
+                acc = acc * env[i]
+            env[out] = acc
+        elif op == "relu":
+            env[out] = np.maximum(env[node["inputs"][0]], 0)
+        elif op == "slice":
+            env[out] = _2d(env[node["inputs"][0]])[:,
+                                                   a["start"]:a["stop"]]
         elif op == "sigmoid":
             env[out] = 1.0 / (1.0 + np.exp(-env[node["inputs"][0]]))
         else:

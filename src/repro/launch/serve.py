@@ -35,12 +35,14 @@ import json
 import os
 import tempfile
 import time
+from typing import Optional
 
 import numpy as np
 
 from repro.configs.base import (
     EnsembleConfig, HPSConfig, ps_config_from_dict, recsys_config_hash,
 )
+from repro.configs.registry import RECSYS_RECIPES
 
 
 def load_ps_config(path: str):
@@ -50,16 +52,22 @@ def load_ps_config(path: str):
 
 
 def _build_model_server(base: str, hcfg: HPSConfig, pdb, *, mesh=None,
-                        vdb=None, bus=None):
+                        vdb=None, bus=None,
+                        cache_capacity: Optional[int] = None):
     """One model's HPS(+wide)+InferenceServer over an open PDB: reload
     the graph + dense weights from the bundle, then hand off to the same
     ``Model._build_server`` wiring the in-process deploy path uses."""
+    import dataclasses
+
     from repro.api import Model
     from repro.models.recsys.model import wide_tables
     from repro.train import checkpoint as ck
 
     import jax
 
+    if cache_capacity is not None:      # operator override of the
+        hcfg = dataclasses.replace(     # bundle's (hotness-sized) L1
+            hcfg, cache_capacity=cache_capacity)
     m = Model.from_json(os.path.join(base, hcfg.graph_path), mesh=mesh)
     m.compile()
     if hcfg.config_hash and \
@@ -90,7 +98,7 @@ def _build_model_server(base: str, hcfg: HPSConfig, pdb, *, mesh=None,
 
 
 def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
-                             bus=None):
+                             bus=None, cache_capacity=None):
     """ps.json -> ready server (the Triton-ensemble analogue).
 
     Single-model bundles return ``(InferenceServer, api.Model)``;
@@ -98,6 +106,11 @@ def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
     every member model served from ONE PersistentDB process, one shared
     VolatileDB and one shared message bus. The models are handed back so
     the caller can cross-check predictions or introspect the graphs.
+
+    ``cache_capacity`` overrides the bundle's per-model L1 sizes (an
+    ensemble bundle carries hotness-proportional sizes by default): an
+    ``int`` applies to every model, a ``{model_name: rows}`` dict pins
+    specific members and leaves the rest on their bundled value.
     """
     from repro.core.hps.persistent_db import PersistentDB
     from repro.core.hps.volatile_db import VolatileDB
@@ -106,10 +119,15 @@ def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
     base = os.path.dirname(os.path.abspath(ps_path))
     cfg = load_ps_config(ps_path)
 
+    def _cap(model_name):
+        if isinstance(cache_capacity, dict):
+            return cache_capacity.get(model_name)
+        return cache_capacity
+
     if isinstance(cfg, HPSConfig):
         pdb = PersistentDB(os.path.join(base, cfg.pdb_root))
         return _build_model_server(base, cfg, pdb, mesh=mesh, vdb=vdb,
-                                   bus=bus)
+                                   bus=bus, cache_capacity=_cap(cfg.model))
 
     assert isinstance(cfg, EnsembleConfig)
     pdb = PersistentDB(os.path.join(base, cfg.models[0].pdb_root))
@@ -119,15 +137,16 @@ def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
     servers, models = {}, {}
     for hcfg in cfg.models:
         servers[hcfg.model], models[hcfg.model] = _build_model_server(
-            base, hcfg, pdb, mesh=mesh, vdb=vdb, bus=bus)
+            base, hcfg, pdb, mesh=mesh, vdb=vdb, bus=bus,
+            cache_capacity=_cap(hcfg.model))
     return MultiModelServer(servers, vdb=vdb, pdb=pdb, bus=bus), models
 
 
 def _train_model(arch: str, train_steps: int, batch: int):
-    """Train one recipe briefly via the graph API."""
+    """Train one recipe briefly via the graph API (novel graph archs
+    included — they compile through the generic dense-graph program)."""
     from repro.api import Solver
-    mod = importlib.import_module(
-        "repro.configs." + arch.replace("-", "_"))
+    mod = importlib.import_module(RECSYS_RECIPES[arch])
     m = mod.build_model(smoke=True,
                         solver=Solver(batch_size=batch, lr=1e-2))
     m.compile()
@@ -138,12 +157,16 @@ def _train_model(arch: str, train_steps: int, batch: int):
 
 
 def _train_and_deploy(archs, train_steps: int, batch: int,
-                      deploy_dir: str, cache_capacity: int) -> str:
+                      deploy_dir: str,
+                      cache_capacity: Optional[int]) -> str:
     """Demo path: train the recipes briefly, write ONE deployment
-    bundle (single-model or ensemble), return the ps.json path."""
+    bundle (single-model or ensemble), return the ps.json path.
+    ``cache_capacity=None`` lets ensembles size per-model L1 caches
+    from table hotness."""
     models = [_train_model(a, train_steps, batch) for a in archs]
     if len(models) == 1:
-        models[0].deploy(deploy_dir, cache_capacity=cache_capacity)
+        models[0].deploy(deploy_dir,
+                         cache_capacity=cache_capacity or 2048)
     else:
         from repro.api import deploy_ensemble
         deploy_ensemble(models, deploy_dir,
@@ -216,21 +239,23 @@ def main():
     ap.add_argument("--arch", default="dlrm-criteo",
                     help="demo mode: train+deploy these recipes first "
                          "(comma-separated list of "
-                         "dlrm-criteo|dcn-criteo|deepfm-criteo|"
-                         "wdl-criteo; 2+ archs deploy an ensemble "
-                         "bundle)")
+                         f"{'|'.join(sorted(RECSYS_RECIPES))}; 2+ archs "
+                         "deploy an ensemble bundle; twotower/crossdeep "
+                         "are novel graphs served via the generic "
+                         "compiler)")
     ap.add_argument("--train-steps", type=int, default=20)
     ap.add_argument("--requests", type=int, default=50)
     ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--cache-capacity", type=int, default=2048)
+    ap.add_argument("--cache-capacity", type=int, default=None,
+                    help="per-model L1 rows (default: 2048 for a single "
+                         "model; hotness-proportional for ensembles)")
     ap.add_argument("--deploy-dir", default=None)
     args = ap.parse_args()
 
     ps_path = args.config
     if ps_path is None:
         archs = [a.strip() for a in args.arch.split(",") if a.strip()]
-        known = ("dlrm-criteo", "dcn-criteo", "deepfm-criteo",
-                 "wdl-criteo")
+        known = tuple(sorted(RECSYS_RECIPES))
         bad = [a for a in archs if a not in known]
         if bad:
             ap.error(f"unknown arch(es) {bad}; choose from {known}")

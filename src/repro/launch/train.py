@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import (
-    LM_ARCHS, RECSYS_ARCHS, reduce_for_smoke,
+    LM_ARCHS, RECSYS_RECIPES, reduce_for_smoke,
 )
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 
@@ -27,7 +27,7 @@ from repro.launch.mesh import make_production_mesh, make_test_mesh
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True,
-                    choices=sorted(LM_ARCHS) + sorted(RECSYS_ARCHS))
+                    choices=sorted(LM_ARCHS) + sorted(RECSYS_RECIPES))
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--seq", type=int, default=64)
@@ -56,16 +56,16 @@ def main():
         mesh = make_test_mesh((r, c))
     print(f"mesh: {dict(mesh.shape)} over {n_dev} devices")
 
-    if args.arch in RECSYS_ARCHS:
+    if args.arch in RECSYS_RECIPES:
         # recsys models go through the graph API front door: the recipe
-        # module declares the layer graph, compile() lowers it onto the
-        # same RecsysModel/Trainer machinery
+        # module declares the layer graph, compile() lowers it — novel
+        # graphs (twotower/crossdeep) run through the generic compiled
+        # program, the paper recipes through their canonical configs
         import importlib
 
         from repro.api import Solver
 
-        recipe = importlib.import_module(
-            "repro.configs." + args.arch.replace("-", "_"))
+        recipe = importlib.import_module(RECSYS_RECIPES[args.arch])
         solver = Solver(batch_size=args.batch, lr=args.lr,
                         grad_allreduce_dtype=args.grad_ar_dtype,
                         mode=args.mode,

@@ -1,0 +1,596 @@
+"""Generic dense-graph compiler: layer DAG -> :class:`DenseGraphProgram`.
+
+This is the execution half of the graph API redesign (HugeCTR's front
+door is a declarative layer graph the framework compiles for ANY
+architecture, not a menu of recipes). ``compile_layers`` takes the named
+``DenseLayer`` wiring, validates it (unknown tensors, duplicate names,
+cycles, arity, shape agreement, single terminal, no unused layers),
+topologically sorts it, infers every tensor's per-sample shape, and
+emits a ``DenseGraphProgram``: a node list the model executes as ONE
+jitted apply, plus per-layer parameter init. ``RecsysModel.apply_dense``
+runs the program for every model — the four canonical recipes execute
+through it bit-exactly (their programs are derived from the canonical
+``RecsysConfig`` by :func:`canonical_program`, binding the historical
+parameter names), and novel graphs execute through the same node loop
+with per-layer parameters keyed by their output tensor.
+
+Tensor shapes are tracked per sample (the batch axis is implicit):
+``(n,)`` is a 2-D ``[B, n]`` feature block, ``(T, D)`` is a 3-D pooled
+embedding block, and ``()`` is a logit-shaped ``[B]`` column. The op
+vocabulary and its shape rules live in ``OP_RULES`` below; ``api.py``
+documents the user-facing subset.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recsys import layers as dlayers
+
+#: params that can never be shadowed by a layer output (the embedding
+#: collections own these keys in the param tree)
+RESERVED_NAMES = ("embedding", "wide_embedding")
+
+
+class GraphError(ValueError):
+    """A model graph that cannot be compiled into a dense program."""
+
+
+# ---------------------------------------------------------------------------
+# Specs and nodes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerSpec:
+    """One dense layer before compilation (validated, not yet typed)."""
+    type: str
+    bottoms: Tuple[str, ...]
+    top: str
+    units: Tuple[int, ...] = ()
+    num_layers: int = 0
+    final_activation: bool = False
+    start: int = 0
+    stop: int = 0
+    #: parameter-tree path override (canonical programs bind historical
+    #: names like ("bottom",); default is (top,))
+    param: Optional[Tuple[str, ...]] = None
+
+
+@dataclasses.dataclass
+class Node:
+    """One compiled op: inputs resolved, shapes known, params bound."""
+    op: str
+    inputs: Tuple[str, ...]
+    output: str
+    attrs: Dict
+    #: local param name -> path into the model param tree
+    params: Dict[str, Tuple[str, ...]]
+
+
+def spec_from_layer(layer) -> LayerSpec:
+    """An ``api.DenseLayer``-shaped object -> :class:`LayerSpec`."""
+    return LayerSpec(
+        type=layer.type, bottoms=tuple(layer.bottom_names),
+        top=layer.top_names[0], units=tuple(layer.units),
+        num_layers=int(layer.num_layers),
+        final_activation=bool(layer.final_activation),
+        start=int(getattr(layer, "start", 0)),
+        stop=int(getattr(layer, "stop", 0)))
+
+
+# -- serializable spec (RecsysConfig.dense_graph) ---------------------------
+
+def graph_spec(dense_name: str, emb_name: str, wide_name: Optional[str],
+               specs: Sequence[LayerSpec]) -> Tuple:
+    """The hashable tuple form embedded in ``RecsysConfig.dense_graph``:
+    one ``("inputs", dense, emb, wide)`` header + one
+    ``(type, bottoms, top, attrs)`` tuple per layer."""
+    out: List[Tuple] = [("inputs", dense_name, emb_name, wide_name or "")]
+    for s in specs:
+        attrs: List[Tuple] = []
+        if s.type == "mlp":
+            attrs = [("final_activation", s.final_activation),
+                     ("units", tuple(s.units))]
+        elif s.type == "cross":
+            attrs = [("num_layers", s.num_layers)]
+        elif s.type == "slice":
+            attrs = [("start", s.start), ("stop", s.stop)]
+        out.append((s.type, tuple(s.bottoms), s.top, tuple(attrs)))
+    return tuple(out)
+
+
+def spec_layers(dense_graph: Tuple) -> Tuple[str, str, Optional[str],
+                                             List[LayerSpec]]:
+    """Inverse of :func:`graph_spec`."""
+    if not dense_graph or dense_graph[0][0] != "inputs":
+        raise GraphError("dense_graph spec is missing its inputs header")
+    _, dense_name, emb_name, wide_name = dense_graph[0]
+    specs = []
+    for typ, bottoms, top, attrs in dense_graph[1:]:
+        kw = dict(attrs)
+        specs.append(LayerSpec(
+            type=typ, bottoms=tuple(bottoms), top=top,
+            units=tuple(kw.get("units", ())),
+            num_layers=int(kw.get("num_layers", 0)),
+            final_activation=bool(kw.get("final_activation", False)),
+            start=int(kw.get("start", 0)), stop=int(kw.get("stop", 0))))
+    return dense_name, emb_name, (wide_name or None), specs
+
+
+def dense_graph_from_jsonable(g) -> Tuple:
+    """Rebuild the tuple spec from its JSON (lists) form."""
+    if not g:
+        return ()
+    out: List[Tuple] = [tuple(g[0])]
+    for typ, bottoms, top, attrs in g[1:]:
+        out.append((typ, tuple(bottoms), top,
+                    tuple((k, tuple(v) if isinstance(v, (list, tuple))
+                           else v) for k, v in attrs)))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Shape inference
+# ---------------------------------------------------------------------------
+
+def _flat_dim(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def _fmt(name: str, shape: Tuple[int, ...]) -> str:
+    return f"{name!r} [B{''.join(f', {s}' for s in shape)}]"
+
+
+def _arity(s: LayerSpec, lo: int, hi: Optional[int] = None) -> None:
+    n = len(s.bottoms)
+    if n < lo or (hi is not None and n > hi):
+        want = f"exactly {lo}" if hi == lo else (
+            f"at least {lo}" if hi is None else f"{lo}..{hi}")
+        raise GraphError(
+            f"DenseLayer({s.type}) -> {s.top!r} takes {want} bottom "
+            f"tensor(s), got {list(s.bottoms)}")
+
+
+def _infer_shape(s: LayerSpec, shp: Dict[str, Tuple[int, ...]]
+                 ) -> Tuple[int, ...]:
+    """Per-sample output shape of layer ``s`` given its bottoms' shapes;
+    raises :class:`GraphError` naming the offending tensor on mismatch."""
+    bs = [shp[b] for b in s.bottoms]
+    if s.type == "mlp":
+        _arity(s, 1)
+        if not s.units:
+            raise GraphError(f"DenseLayer(mlp) -> {s.top!r} needs units")
+        return (s.units[-1],)
+    if s.type == "cross":
+        _arity(s, 1, 1)
+        if len(bs[0]) != 1:
+            raise GraphError(
+                f"cross -> {s.top!r} runs over a 2-D feature block, but "
+                f"{_fmt(s.bottoms[0], bs[0])} is not [B, n]")
+        return bs[0]
+    if s.type == "dot_interaction":
+        _arity(s, 2, 2)
+        vec, emb = bs
+        if len(vec) != 1 or len(emb) != 2:
+            raise GraphError(
+                f"dot_interaction -> {s.top!r} takes [bottom_mlp_out "
+                f"[B, D], embeddings [B, T, D]], got "
+                f"{_fmt(s.bottoms[0], vec)} and {_fmt(s.bottoms[1], emb)}")
+        if vec[0] != emb[1]:
+            raise GraphError(
+                f"dot_interaction -> {s.top!r}: bottom mlp must end at "
+                f"the embedding dim for the interaction: "
+                f"{s.bottoms[0]!r} has {vec[0]} features != embedding "
+                f"dim {emb[1]} of {s.bottoms[1]!r}")
+        f = emb[0] + 1
+        return (f * (f - 1) // 2,)
+    if s.type == "fm":
+        _arity(s, 3, 3)
+        return ()
+    if s.type == "concat":
+        _arity(s, 1)
+        return (sum(_flat_dim(b) for b in bs),)
+    if s.type in ("add", "multiply"):
+        _arity(s, 2)
+        for b, bshape in zip(s.bottoms[1:], bs[1:]):
+            if bshape != bs[0]:
+                raise GraphError(
+                    f"{s.type} -> {s.top!r} needs equal shapes, but "
+                    f"{_fmt(b, bshape)} != {_fmt(s.bottoms[0], bs[0])}")
+        return bs[0]
+    if s.type == "relu":
+        _arity(s, 1, 1)
+        return bs[0]
+    if s.type == "slice":
+        _arity(s, 1, 1)
+        if len(bs[0]) != 1:
+            raise GraphError(
+                f"slice -> {s.top!r} cuts a 2-D feature block, but "
+                f"{_fmt(s.bottoms[0], bs[0])} is not [B, n]")
+        if not (0 <= s.start < s.stop <= bs[0][0]):
+            raise GraphError(
+                f"slice -> {s.top!r}: [{s.start}:{s.stop}] out of range "
+                f"for {_fmt(s.bottoms[0], bs[0])}")
+        return (s.stop - s.start,)
+    if s.type == "reduce_sum":
+        _arity(s, 1, 1)
+        return ()
+    if s.type == "sigmoid":
+        _arity(s, 1)
+        for b, bshape in zip(s.bottoms, bs):
+            if bshape not in ((), (1,)):
+                raise GraphError(
+                    f"sigmoid sums logit-shaped bottoms ([B] or [B, 1]), "
+                    f"but {_fmt(b, bshape)} is wider — end the branch "
+                    "with a 1-unit head or a reduce_sum")
+        return ()
+    if s.type == "first_order":        # internal (canonical wdl/deepfm)
+        return ()
+    if s.type == "fm_second":          # internal (canonical deepfm)
+        return ()
+    raise GraphError(f"unknown DenseLayer type {s.type!r}")
+
+
+# ---------------------------------------------------------------------------
+# The compiler
+# ---------------------------------------------------------------------------
+
+def _toposort(specs: List[LayerSpec],
+              available: set) -> List[LayerSpec]:
+    """Kahn's algorithm over the layer DAG (stable w.r.t. declaration
+    order). Unknown tensors and cycles raise with the offending names."""
+    producible = set(available) | {s.top for s in specs}
+    for s in specs:
+        for b in s.bottoms:
+            if b not in producible:
+                raise GraphError(
+                    f"DenseLayer({s.type}) -> {s.top!r} reads unknown "
+                    f"tensor {b!r} (known tensors: "
+                    f"{sorted(producible)})")
+    done = set(available)
+    order: List[LayerSpec] = []
+    remaining = list(specs)
+    while remaining:
+        ready = [s for s in remaining if all(b in done for b in s.bottoms)]
+        if not ready:
+            cyc = sorted(s.top for s in remaining)
+            raise GraphError(
+                f"dependency cycle among DenseLayers producing {cyc}: "
+                "each reads a tensor that (transitively) depends on its "
+                "own output")
+        for s in ready:
+            order.append(s)
+            done.add(s.top)
+        remaining = [s for s in remaining if s not in ready]
+    return order
+
+
+class DenseGraphProgram:
+    """A compiled dense graph: topo-ordered nodes, per-tensor shapes,
+    one ``apply`` (jit-traceable) and per-layer ``init``."""
+
+    def __init__(self, nodes: List[Node], shapes: Dict[str, Tuple],
+                 inputs: Dict[str, Optional[str]],
+                 logit_bottoms: Tuple[str, ...], *,
+                 use_kernels: bool = False):
+        self.nodes = nodes
+        self.shapes = shapes
+        self.inputs = inputs                 # {"dense","emb","wide"} -> name
+        self.logit_bottoms = logit_bottoms
+        self.use_kernels = use_kernels
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key: jax.Array) -> Dict:
+        """Init every param-bearing node (novel graphs; canonical models
+        keep their historical init in ``RecsysModel.init``)."""
+        bearing = [n for n in self.nodes
+                   if n.op in ("mlp", "cross", "fm")]
+        params: Dict = {}
+        if not bearing:
+            return params
+        keys = jax.random.split(key, len(bearing))
+        for n, k in zip(bearing, keys):
+            if n.op == "mlp":
+                p = dlayers.mlp_init(k, n.attrs["in_dim"],
+                                     n.attrs["units"])
+            elif n.op == "cross":
+                p = dlayers.cross_init(k, n.attrs["in_dim"],
+                                       n.attrs["num_layers"])
+            else:                            # fm first-order weights
+                p = {"w": jax.random.normal(
+                        k, (n.attrs["in_dim"],)) * 0.01,
+                     "b": jnp.zeros(())}
+            params[n.params["p"][0]] = p
+        return params
+
+    # -- execution -------------------------------------------------------------
+
+    def make_env(self, dense, emb, wide, compute_dtype) -> Dict:
+        """Input environment with the canonical entry casts: dense f32,
+        the deep embedding block in compute dtype, the wide block as
+        delivered (the first-order term pools it in its own dtype)."""
+        env = {self.inputs["dense"]: dense.astype(jnp.float32),
+               self.inputs["emb"]: emb.astype(compute_dtype)}
+        if self.inputs.get("wide") and wide is not None:
+            env[self.inputs["wide"]] = wide
+        return env
+
+    def apply(self, params: Dict, env: Dict, compute_dtype) -> jax.Array:
+        """Execute the node list; returns the logit column ``[B]``."""
+
+        def fetch(node: Node, local: str):
+            p = params
+            for k in node.params[local]:
+                p = p[k]
+            return p
+
+        def x2d(v):
+            return v if v.ndim == 2 else v.reshape(v.shape[0], -1)
+
+        def col(v):
+            return v if v.ndim == 1 else \
+                v.reshape(v.shape[0], -1).sum(axis=1)
+
+        for n in self.nodes:
+            xs = [env[i] for i in n.inputs]
+            if n.op == "mlp":
+                vs = [x2d(v) for v in xs]
+                x = vs[0] if len(vs) == 1 else jnp.concatenate(vs, axis=1)
+                env[n.output] = dlayers.mlp_apply(
+                    fetch(n, "p"), x,
+                    final_activation=n.attrs["final_activation"],
+                    compute_dtype=compute_dtype)
+            elif n.op == "cross":
+                env[n.output] = dlayers.cross_apply(
+                    fetch(n, "p"), xs[0], compute_dtype=compute_dtype)
+            elif n.op == "dot_interaction":
+                feats = jnp.concatenate([xs[0][:, None, :], xs[1]], axis=1)
+                if self.use_kernels:
+                    from repro.kernels import ops as kops
+                    env[n.output] = kops.dot_interaction(feats)
+                else:
+                    from repro.kernels.ref import dot_interaction_ref
+                    env[n.output] = dot_interaction_ref(feats)
+            elif n.op == "concat":
+                env[n.output] = jnp.concatenate([x2d(v) for v in xs],
+                                                axis=1)
+            elif n.op == "add":
+                out = xs[0]
+                for v in xs[1:]:
+                    out = out + v
+                env[n.output] = out
+            elif n.op == "multiply":
+                out = xs[0]
+                for v in xs[1:]:
+                    out = out * v
+                env[n.output] = out
+            elif n.op == "relu":
+                env[n.output] = jax.nn.relu(xs[0])
+            elif n.op == "slice":
+                env[n.output] = xs[0][:, n.attrs["start"]:n.attrs["stop"]]
+            elif n.op == "reduce_sum":
+                env[n.output] = col(xs[0])
+            elif n.op == "first_order":
+                dense_v, wide_v = xs
+                env[n.output] = wide_v.sum(axis=(1, 2)) \
+                    + dense_v @ fetch(n, "w") + fetch(n, "b")
+            elif n.op == "fm_second":
+                env[n.output] = dlayers.fm_second_order(xs[0]).sum(axis=1)
+            elif n.op == "fm":
+                dense_v, wide_v, emb_v = xs
+                p = fetch(n, "p")
+                first = wide_v.sum(axis=(1, 2)) \
+                    + dense_v @ p["w"] + p["b"]
+                env[n.output] = first \
+                    + dlayers.fm_second_order(emb_v).sum(axis=1)
+            else:                            # pragma: no cover
+                raise ValueError(f"uncompiled op {n.op!r}")
+
+        out = None
+        for name in self.logit_bottoms:
+            v = col(env[name])
+            out = v if out is None else out + v
+        return out
+
+
+def compile_layers(specs: Sequence[LayerSpec], *, dense_name: str,
+                   num_dense: int, emb_name: str, num_tables: int,
+                   emb_dim: int, wide_name: Optional[str] = None,
+                   use_kernels: bool = False) -> DenseGraphProgram:
+    """Validate + toposort + shape-infer the layer DAG and emit the
+    program. Every failure is a :class:`GraphError` naming the offending
+    layer or tensor."""
+    specs = list(specs)
+    inputs: Dict[str, Tuple[int, ...]] = {dense_name: (num_dense,),
+                                          emb_name: (num_tables, emb_dim)}
+    if wide_name:
+        inputs[wide_name] = (num_tables, 1)
+
+    produced = set(inputs)
+    for s in specs:
+        if s.top in produced:
+            raise GraphError(f"duplicate tensor name {s.top!r}")
+        if s.top in RESERVED_NAMES:
+            raise GraphError(
+                f"tensor name {s.top!r} is reserved for the embedding "
+                "parameter groups")
+        produced.add(s.top)
+
+    order = _toposort(specs, set(inputs))
+
+    # shapes (in topo order, so every bottom is known)
+    shapes: Dict[str, Tuple[int, ...]] = dict(inputs)
+    for s in order:
+        shapes[s.top] = _infer_shape(s, shapes)
+
+    # terminal discipline: exactly one unconsumed tensor, every
+    # embedding branch read, sigmoid only at the end
+    consumed = {b for s in specs for b in s.bottoms}
+    for s in specs:
+        if s.type == "sigmoid" and s.top in consumed:
+            raise GraphError(
+                f"sigmoid -> {s.top!r} is a terminal layer; "
+                f"{s.top!r} cannot feed another layer")
+    terminals = [s for s in specs if s.top not in consumed]
+    if not terminals:
+        raise GraphError("the graph has no terminal: every layer output "
+                         "is consumed by another layer")
+    if len(terminals) > 1:
+        names = sorted(s.top for s in terminals)
+        raise GraphError(
+            f"the graph must end in exactly one terminal tensor, got "
+            f"{len(terminals)}: {names} are all unconsumed — unused "
+            "layers must be removed or wired in")
+    for name in (emb_name,) + ((wide_name,) if wide_name else ()):
+        if name not in consumed:
+            raise GraphError(
+                f"SparseEmbedding output {name!r} is never read by any "
+                "DenseLayer")
+
+    term = terminals[0]
+    if term.type == "sigmoid":
+        logit_bottoms = tuple(term.bottoms)
+    else:
+        if shapes[term.top] not in ((), (1,)):
+            raise GraphError(
+                f"terminal tensor {_fmt(term.top, shapes[term.top])} is "
+                "not logit-shaped; end the graph with a 1-unit head, a "
+                "reduce_sum, or a sigmoid layer")
+        logit_bottoms = (term.top,)
+
+    # emit nodes (the sigmoid terminal compiles into the logit sum)
+    nodes: List[Node] = []
+    for s in order:
+        if s.type == "sigmoid":
+            continue
+        attrs: Dict = {}
+        params: Dict[str, Tuple[str, ...]] = {}
+        path = s.param or (s.top,)
+        if s.type == "mlp":
+            attrs = {"units": tuple(s.units),
+                     "final_activation": s.final_activation,
+                     "in_dim": sum(_flat_dim(shapes[b])
+                                   for b in s.bottoms)}
+            params = {"p": path}
+        elif s.type == "cross":
+            attrs = {"num_layers": s.num_layers,
+                     "in_dim": shapes[s.bottoms[0]][0]}
+            params = {"p": path}
+        elif s.type == "slice":
+            attrs = {"start": s.start, "stop": s.stop}
+        elif s.type == "first_order":
+            # internal op; canonical_program rebinds these paths to the
+            # historical top-level ("dense_w", "bias") entries
+            params = {"w": (s.top, "w"), "b": (s.top, "b")}
+        elif s.type == "fm":
+            # roles by shape: the 2-D block, the dim-1 3-D block, the
+            # embedding 3-D block
+            vec = [b for b in s.bottoms if len(shapes[b]) == 1]
+            wid = [b for b in s.bottoms
+                   if len(shapes[b]) == 2 and shapes[b][1] == 1]
+            emb = [b for b in s.bottoms
+                   if len(shapes[b]) == 2 and shapes[b][1] != 1]
+            if len(vec) != 1 or len(wid) != 1 or len(emb) != 1:
+                raise GraphError(
+                    f"fm -> {s.top!r} reads [dense features [B, n], "
+                    "wide embeddings [B, T, 1], deep embeddings "
+                    f"[B, T, D>1]], got shapes "
+                    f"{[shapes[b] for b in s.bottoms]} for "
+                    f"{list(s.bottoms)}")
+            s = dataclasses.replace(s, bottoms=(vec[0], wid[0], emb[0]))
+            attrs = {"in_dim": shapes[vec[0]][0]}
+            params = {"p": path}
+        nodes.append(Node(op=s.type, inputs=tuple(s.bottoms), output=s.top,
+                          attrs=attrs, params=params))
+
+    return DenseGraphProgram(
+        nodes, shapes,
+        {"dense": dense_name, "emb": emb_name, "wide": wide_name},
+        logit_bottoms, use_kernels=use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# Canonical programs (the four paper recipes, historical param names)
+# ---------------------------------------------------------------------------
+
+def canonical_program(cfg, *, use_kernels: bool = False
+                      ) -> DenseGraphProgram:
+    """The fixed-recipe graphs expressed as programs — node for node the
+    computation ``RecsysModel.apply_dense`` always ran, so execution
+    through the generic program is bit-exact with the legacy path."""
+    t, d, nd = len(cfg.tables), cfg.embedding_dim, cfg.num_dense_features
+
+    def mlp(bottoms, top, units, param, final=False):
+        return LayerSpec("mlp", tuple(bottoms), top, units=tuple(units),
+                         final_activation=final, param=(param,))
+
+    if cfg.model == "dlrm":
+        specs = [
+            mlp(("dense",), "bot", cfg.bottom_mlp, "bottom", final=True),
+            LayerSpec("dot_interaction", ("bot", "emb"), "tri"),
+            LayerSpec("concat", ("bot", "tri"), "top_in"),
+            mlp(("top_in",), "logit", cfg.top_mlp, "top"),
+            LayerSpec("sigmoid", ("logit",), "prob"),
+        ]
+        wide = None
+    elif cfg.model == "dcn":
+        specs = [
+            LayerSpec("concat", ("dense", "emb"), "flat"),
+            LayerSpec("cross", ("flat",), "crossed",
+                      num_layers=cfg.num_cross_layers, param=("cross",)),
+            mlp(("flat",), "deep_out", cfg.top_mlp, "deep"),
+            LayerSpec("concat", ("crossed", "deep_out"), "both"),
+            mlp(("both",), "logit", (1,), "combine"),
+            LayerSpec("sigmoid", ("logit",), "prob"),
+        ]
+        wide = None
+    elif cfg.model == "deepfm":
+        specs = [
+            LayerSpec("concat", ("dense", "emb"), "flat"),
+            mlp(("flat",), "deep_out", cfg.top_mlp + (1,), "deep"),
+            LayerSpec("first_order", ("dense", "wide"), "first"),
+            LayerSpec("fm_second", ("emb",), "fm2"),
+            LayerSpec("sigmoid", ("first", "fm2", "deep_out"), "prob"),
+        ]
+        wide = "wide"
+    elif cfg.model == "wdl":
+        specs = [
+            LayerSpec("concat", ("dense", "emb"), "flat"),
+            mlp(("flat",), "deep_out", cfg.top_mlp + (1,), "deep"),
+            LayerSpec("first_order", ("dense", "wide"), "wide_out"),
+            LayerSpec("sigmoid", ("wide_out", "deep_out"), "prob"),
+        ]
+        wide = "wide"
+    else:
+        raise ValueError(f"no canonical program for model {cfg.model!r}")
+
+    prog = compile_layers(
+        specs, dense_name="dense", num_dense=nd, emb_name="emb",
+        num_tables=t, emb_dim=d, wide_name=wide,
+        use_kernels=use_kernels)
+    # bind the historical first-order params (compile defaults them
+    # under the layer name; the canonical tree keeps them at the top)
+    for n in prog.nodes:
+        if n.op == "first_order":
+            n.params = {"w": ("dense_w",), "b": ("bias",)}
+    return prog
+
+
+def program_for(cfg, *, use_kernels: bool = False) -> DenseGraphProgram:
+    """The program for ANY RecsysConfig: canonical recipes bind their
+    historical params; ``model == "graph"`` compiles ``cfg.dense_graph``."""
+    if cfg.model != "graph":
+        return canonical_program(cfg, use_kernels=use_kernels)
+    dense_name, emb_name, wide_name, specs = spec_layers(cfg.dense_graph)
+    return compile_layers(
+        specs, dense_name=dense_name, num_dense=cfg.num_dense_features,
+        emb_name=emb_name, num_tables=len(cfg.tables),
+        emb_dim=cfg.embedding_dim, wide_name=wide_name,
+        use_kernels=use_kernels)

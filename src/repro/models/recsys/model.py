@@ -23,7 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import RecsysConfig, EmbeddingTableConfig
 from repro.core.embedding import EmbeddingCollection, resolve_strategies
 from repro.launch.mesh import mesh_config_for
-from repro.models.recsys import layers
+from repro.models.recsys import dense_graph, layers
 from repro.kernels import ops as kops
 
 
@@ -100,7 +100,8 @@ class RecsysModel:
                  global_batch: int,
                  comm: str = "allgather_rs",
                  embed_shard_axes: str = "all",
-                 use_kernels: bool = False):
+                 use_kernels: bool = False,
+                 dense_executor: str = "graph"):
         self.cfg = cfg
         self.mesh = mesh
         if cfg.model == "dlrm" and cfg.bottom_mlp[-1] != cfg.embedding_dim:
@@ -108,6 +109,15 @@ class RecsysModel:
                 "DLRM needs bottom_mlp[-1] == embedding_dim for the "
                 f"interaction, got {cfg.bottom_mlp[-1]} != "
                 f"{cfg.embedding_dim}")
+        if dense_executor not in ("graph", "reference"):
+            raise ValueError(
+                f"dense_executor must be 'graph' (the compiled program) "
+                f"or 'reference' (the fixed pipeline), got "
+                f"{dense_executor!r}")
+        if dense_executor == "reference" and cfg.model == "graph":
+            raise ValueError(
+                "the reference executor only covers the four canonical "
+                "recipes; model='graph' always runs the compiled program")
         tables = resolve_strategies(cfg.tables, mesh_config_for(mesh),
                                     global_batch)
         cd = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
@@ -117,8 +127,15 @@ class RecsysModel:
             shard_axes=embed_shard_axes, pool_fn=pool)
         self.compute_dtype = cd
         self.use_kernels = use_kernels
+        self.dense_executor = dense_executor
+        #: the compiled dense program — ONE executor for every model
+        #: kind: canonical recipes bind their historical params,
+        #: model="graph" compiles the embedded DAG
+        self.program = dense_graph.program_for(cfg,
+                                               use_kernels=use_kernels)
         self.wide: Optional[EmbeddingCollection] = None
-        if cfg.model in ("wdl", "deepfm"):
+        if cfg.model in ("wdl", "deepfm") or \
+                (cfg.model == "graph" and cfg.wide_branch):
             self.wide = EmbeddingCollection(wide_tables(cfg), mesh,
                                             comm=comm, compute_dtype=cd)
 
@@ -132,7 +149,12 @@ class RecsysModel:
             params["wide_embedding"] = self.wide.init(k_wide)
         d, t = cfg.embedding_dim, cfg.num_tables
         nd = cfg.num_dense_features
-        if cfg.model == "dlrm":
+        if cfg.model == "graph":
+            # per-layer params from the compiled program, keyed by each
+            # layer's output tensor (the trainer's dense/sparse split is
+            # by the reserved embedding keys, so any layer name works)
+            params.update(self.program.init(k1))
+        elif cfg.model == "dlrm":
             params["bottom"] = layers.mlp_init(k1, nd, cfg.bottom_mlp)
             f = t + 1
             top_in = cfg.bottom_mlp[-1] + f * (f - 1) // 2
@@ -197,7 +219,24 @@ class RecsysModel:
 
         This is the inference entry point: the HPS resolves ``emb`` (and
         ``wide``) on the host, the replicated dense net runs on device.
+
+        Execution is the compiled :class:`DenseGraphProgram` — the same
+        node loop for the canonical recipes and for novel graphs
+        (bit-exact with the historical fixed pipeline, which survives as
+        :meth:`apply_dense_reference` for the parity tests and the
+        compile-overhead benchmark).
         """
+        if self.dense_executor == "reference":
+            return self.apply_dense_reference(params, dense, emb, wide)
+        env = self.program.make_env(dense, emb, wide, self.compute_dtype)
+        return self.program.apply(params, env, self.compute_dtype)
+
+    def apply_dense_reference(self, params: Dict, dense: jax.Array,
+                              emb: jax.Array,
+                              wide: Optional[jax.Array] = None
+                              ) -> jax.Array:
+        """The pre-compiler fixed pipeline (canonical recipes only) —
+        kept as the bit-exactness reference for the generic executor."""
         cfg = self.cfg
         cd = self.compute_dtype
         emb = emb.astype(cd)                       # [B, T, D]

@@ -82,16 +82,32 @@ def test_api_checkpointing(tmp_path):
 # Portable export
 # ---------------------------------------------------------------------------
 
+def _smoke_cfg(arch):
+    """Registry archs reduce for smoke; novel graph archs lower their
+    recipe graph to a generic model='graph' config — exercising
+    RecsysModel construction from the config ALONE (the dense DAG
+    travels inside it)."""
+    if arch in RECSYS_ARCHS:
+        return reduce_recsys_for_smoke(RECSYS_ARCHS[arch])
+    import importlib
+
+    from repro.configs.registry import RECSYS_RECIPES
+    mod = importlib.import_module(RECSYS_RECIPES[arch])
+    return mod.build_model(smoke=True).to_recsys_config()
+
+
 @pytest.mark.parametrize("arch", ["dlrm-criteo", "dcn-criteo",
-                                  "deepfm-criteo", "wdl-criteo"])
+                                  "deepfm-criteo", "wdl-criteo",
+                                  "twotower-criteo", "crossdeep-criteo"])
 def test_export_numpy_parity(arch, tmp_path):
     """The exported graph run by PURE NUMPY matches the JAX forward —
-    including the wide models' two-table-set graphs."""
+    the wide models' two-table-set graphs AND novel generic graphs
+    (the export is a walk of the compiled program, no per-arch code)."""
     from repro.export import export_recsys, load_exported, run_exported
     from repro.launch.mesh import make_test_mesh
     from repro.models.recsys.model import RecsysModel
 
-    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS[arch])
+    cfg = _smoke_cfg(arch)
     mesh = make_test_mesh((1, 1))
     with mesh:
         model = RecsysModel(cfg, mesh, global_batch=16)
@@ -107,13 +123,14 @@ def test_export_numpy_parity(arch, tmp_path):
     np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
 
 
-@pytest.mark.parametrize("arch", ["dlrm-criteo", "wdl-criteo"])
+@pytest.mark.parametrize("arch", ["dlrm-criteo", "wdl-criteo",
+                                  "twotower-criteo"])
 def test_export_artifact_is_self_describing(arch, tmp_path):
     from repro.export import export_recsys, load_exported
     from repro.launch.mesh import make_test_mesh
     from repro.models.recsys.model import RecsysModel
 
-    cfg = reduce_recsys_for_smoke(RECSYS_ARCHS[arch])
+    cfg = _smoke_cfg(arch)
     mesh = make_test_mesh((1, 1))
     with mesh:
         model = RecsysModel(cfg, mesh, global_batch=8)

@@ -291,6 +291,61 @@ def test_lookup_stream_matches_sequential(tmp_path):
         np.testing.assert_array_equal(np.asarray(h_seq.lookup(q)), o)
 
 
+def test_lookup_stream_autotunes_depth_in_deep_rtt(tmp_path):
+    """The ROADMAP open item: the stream lookahead is no longer a
+    hard-coded 2 — in a deep-RTT regime (every coalesced miss fetch
+    pays a remote-L2-style round trip) the auto-tuner admits MORE
+    in-flight queries (bounded by the cap), and a warm fetch-free
+    stream stays at the classic double buffer."""
+    hps = _hps(tmp_path, "auto", cache_capacity=16)   # tiny L1: misses
+    for c in hps.caches.values():                     # every fetch pays
+        orig = c.fetch_fn                             # an RTT
+
+        def slow(ids, _orig=orig):
+            time.sleep(0.02)
+            return _orig(ids)
+
+        c.fetch_fn = slow
+    rng = np.random.default_rng(7)
+    queries = [rng.integers(0, 120, size=(4, 3, 4)).astype(np.int32)
+               for _ in range(12)]
+    outs = list(hps.lookup_stream(iter(queries)))
+    assert len(outs) == len(queries)
+    assert hps.stream_depth_peak > 2        # deepened past the classic 2
+    assert hps.stream_depth_peak <= 8       # ...within the bounded cap
+    assert hps.stats()["stream"]["depth_peak"] == hps.stream_depth_peak
+    # results stay bit-identical to the unpipelined path under the
+    # deepened lookahead
+    ref_hps = _hps(tmp_path, "auto_ref", cache_capacity=16)
+    for q, o in zip(queries, outs):
+        np.testing.assert_array_equal(np.asarray(ref_hps.lookup(q)), o)
+
+    # warm regime: resident ids, near-zero fetch -> classic depth
+    warm_hps = _hps(tmp_path, "warm", cache_capacity=200)
+    warm = [np.full((4, 3, 4), 5, np.int32) for _ in range(10)]
+    list(warm_hps.lookup_stream(iter(warm)))
+    assert warm_hps.stream_depth == 2
+
+
+def test_lookup_stream_explicit_depth_is_pinned(tmp_path):
+    """Passing depth=<int> disables the auto-tuner (the pre-redesign
+    contract) even when fetches are slow."""
+    hps = _hps(tmp_path, "pin", cache_capacity=16)
+    for c in hps.caches.values():
+        orig = c.fetch_fn
+
+        def slow(ids, _orig=orig):
+            time.sleep(0.01)
+            return _orig(ids)
+
+        c.fetch_fn = slow
+    rng = np.random.default_rng(8)
+    queries = [rng.integers(0, 120, size=(4, 3, 4)).astype(np.int32)
+               for _ in range(6)]
+    list(hps.lookup_stream(iter(queries), depth=2))
+    assert hps.stream_depth_peak == 2
+
+
 def test_lookup_stream_propagates_errors(tmp_path):
     hps = _hps(tmp_path, "err", cache_capacity=16)
     bad = [np.zeros((2, 2), np.int32)]        # 2-D without hotness

@@ -237,3 +237,85 @@ def test_ensemble_rejects_duplicate_names(ensemble, tmp_path):
     models, d, bus, server = ensemble
     with pytest.raises(GraphError, match="unique"):
         deploy_ensemble([models[0], models[0]], str(tmp_path / "dup"))
+
+
+def _tiny_graph_model(name, hotness):
+    """A minimal trainable graph model whose table hotness we control."""
+    from repro.api import (DataReaderParams, DenseLayer, Input, Model,
+                           Solver, SparseEmbedding)
+    m = Model(Solver(batch_size=8, lr=1e-2),
+              DataReaderParams(num_dense_features=4), name=name)
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[400, 400], dim=8,
+                          hotness=hotness, top_name="emb"))
+    m.add(DenseLayer("concat", ["dense", "emb"], ["flat"]))
+    m.add(DenseLayer("mlp", ["flat"], ["deep"], units=(8,)))
+    m.add(DenseLayer("concat", ["flat", "deep"], ["both"]))
+    m.add(DenseLayer("mlp", ["both"], ["logit"], units=(1,)))
+    m.compile()
+    m.fit(steps=1)
+    return m
+
+
+def test_ensemble_l1_sized_from_table_hotness(tmp_path):
+    """No more one-global-knob L1: by default each member's
+    cache_capacity is its hotness-proportional share of the total row
+    budget, persisted in ps.json; explicit overrides still win."""
+    import json
+    import os
+
+    from repro.api import deploy_ensemble, hotness_cache_capacities
+    hot = _tiny_graph_model("hot-model", hotness=8)
+    cold = _tiny_graph_model("cold-model", hotness=1)
+
+    want = hotness_cache_capacities([hot, cold], budget=2048)
+    assert want["hot-model"] > want["cold-model"]    # 8x the ids/sample
+    server = deploy_ensemble([hot, cold], str(tmp_path / "auto"),
+                             cache_budget=2048)
+    server.stop()
+    with open(os.path.join(str(tmp_path / "auto"), "ps.json")) as f:
+        caps = {m["model"]: m["cache_capacity"]
+                for m in json.load(f)["models"]}
+    assert caps == want
+    # the budget is conserved (up to rounding / per-model floors)
+    assert abs(sum(caps.values()) - 2048) <= len(caps) * 64
+
+    # explicit overrides: uniform int, and per-model dict pinning
+    server = deploy_ensemble([hot, cold], str(tmp_path / "uniform"),
+                             cache_capacity=96)
+    server.stop()
+    with open(os.path.join(str(tmp_path / "uniform"), "ps.json")) as f:
+        caps = {m["model"]: m["cache_capacity"]
+                for m in json.load(f)["models"]}
+    assert caps == {"hot-model": 96, "cold-model": 96}
+
+    server = deploy_ensemble([hot, cold], str(tmp_path / "pin"),
+                             cache_budget=2048,
+                             cache_capacity={"cold-model": 77})
+    server.stop()
+    with open(os.path.join(str(tmp_path / "pin"), "ps.json")) as f:
+        caps = {m["model"]: m["cache_capacity"]
+                for m in json.load(f)["models"]}
+    assert caps["cold-model"] == 77                  # pinned
+    assert caps["hot-model"] == want["hot-model"]    # hotness share
+
+
+def test_rebuild_with_cache_capacity_override(tmp_path):
+    """launch.serve honors an operator-side per-model L1 override when
+    standing a bundle back up."""
+    import os
+
+    from repro.api import deploy_ensemble
+    from repro.launch.serve import build_server_from_config
+    a = _tiny_graph_model("model-a", hotness=2)
+    b = _tiny_graph_model("model-b", hotness=2)
+    server = deploy_ensemble([a, b], str(tmp_path / "ens"),
+                             cache_capacity=128)
+    server.stop()
+    rebuilt, _ = build_server_from_config(
+        os.path.join(str(tmp_path / "ens"), "ps.json"),
+        cache_capacity={"model-a": 32})
+    cap_a = next(iter(rebuilt["model-a"].hps.caches.values())).capacity
+    cap_b = next(iter(rebuilt["model-b"].hps.caches.values())).capacity
+    assert cap_a == 32       # overridden
+    assert cap_b == 128      # bundle value kept
