@@ -325,7 +325,7 @@ def serve_throughput(report: Report, tmp_root: str):
             for s in servers.values():
                 s.predict(dense_in, q)
         for s in servers.values():
-            s.latencies_ms.clear()
+            s.reset_latencies()
             s.start()
         t_arm: Dict[str, List[float]] = {e: [] for e in servers}
         for p in range(passes):

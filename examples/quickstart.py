@@ -54,7 +54,7 @@ def main():
         data = SyntheticCTR(loaded.cfg, 256)
         warm = data.batch(998)
         server.predict(warm["dense"], warm["cat"])  # jit + cache warmup
-        server.latencies_ms.clear()
+        server.reset_latencies()
         req = data.batch(999)
         preds = server.predict(req["dense"], req["cat"])
         want = m.predict(req)

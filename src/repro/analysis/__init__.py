@@ -1,0 +1,66 @@
+"""Repo-specific static analysis + runtime sanitizers for the HPS
+serving stack.
+
+The serving pipeline's correctness rests on concurrency invariants
+that used to live only in prose — "refresh re-pulls rows with the
+cache lock RELEASED", "the delivered prediction is the only host sync
+point per group". This package turns them into machine-checked rules,
+run by ``python -m repro.analysis`` (see ``__main__``) and gated in CI.
+
+Passes and rule ids
+-------------------
+
+``concurrency`` — lock-discipline lint (static, AST):
+    * ``LOCK001`` — attribute declared in a class's ``_GUARDED_BY``
+      mapping accessed outside a ``with self.<lock>:`` scope.
+    * ``LOCK002`` — blocking call while holding a lock: L2/L3 fetches
+      (``fetch_fn``, ``pdb.fetch``/``upsert``, ``vdb.query``/
+      ``insert``), ``time.sleep``, bus poll/publish, future
+      ``.result``, thread ``.join``, pool ``.shutdown``,
+      ``block_until_ready``, and ``np.asarray`` on a value that
+      visibly comes off-device.
+    * ``LOCK003`` — lock-order cycle in the static acquisition graph,
+      or re-acquiring a held non-reentrant lock.
+    * ``LOCK004`` — ``*_locked``-suffixed method (analyzed as
+      lock-assumed-held) called without holding the lock.
+
+``hotpath`` — runtime sanitizer (:class:`~.hotpath.HotPathMonitor`):
+    * ``SYNC001`` — implicit device->host transfer (``numpy.asarray``
+      et al. on a ``jax.Array``, ``jax.device_get``) or blocking sync
+      (``jax.block_until_ready``) inside the monitored region.
+    * ``SYNC002`` — fresh jit compilation inside the monitored region
+      (post-warmup recompile).
+
+``deadcode`` — import-graph reachability:
+    * ``DEAD001`` — module unreachable from every entry point
+      (``launch/*``, ``api``, ``__main__`` modules, benchmarks,
+      examples, tests).
+    * ``DEAD002`` — module reachable only from tests (informational).
+
+``lockorder`` — :class:`~.lockorder.LockOrderRecorder`, the dynamic
+counterpart of LOCK003: wraps live locks during a test hammer and
+asserts the OBSERVED acquisition graph is acyclic.
+
+Conventions
+-----------
+
+* Guard contracts are class attributes:
+  ``_GUARDED_BY = {"attr": "_lockattr", ...}``; injected callables
+  declare their lock footprint with
+  ``_LOCKS_OF = {"attr": ("Class._lock", ...)}``.
+* Intentional findings carry ``# lock-ok: RULE reason`` on the line or
+  the line above; grandfathered findings live in ``baseline.toml``,
+  which may only shrink (stale entries fail ``--check``).
+
+Everything importable from this package's static passes is
+stdlib-only, so the CLI runs in CI without jax installed; only
+``hotpath`` touches jax, and only when a monitor is armed.
+"""
+from repro.analysis.findings import Finding, apply_baseline, load_baseline
+from repro.analysis.hotpath import HotPathMonitor, active_monitor
+from repro.analysis.lockorder import LockOrderRecorder
+
+__all__ = [
+    "Finding", "apply_baseline", "load_baseline",
+    "HotPathMonitor", "active_monitor", "LockOrderRecorder",
+]

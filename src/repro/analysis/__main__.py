@@ -1,0 +1,85 @@
+"""CLI for the analysis passes: ``python -m repro.analysis``.
+
+Prints findings as ``file:line RULE message`` and a one-line summary.
+``--check`` (the CI gate) exits non-zero on any live finding that is
+neither inline-waived nor baselined, AND on stale baseline entries —
+the baseline may only shrink. Informational findings (DEAD002) are
+reported but never fail.
+
+Stdlib-only: runs without jax installed (the lint and reachability
+passes are pure AST walks).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+
+def main(argv: List[str] = None) -> int:
+    from repro.analysis import concurrency, deadcode
+    from repro.analysis.findings import apply_baseline, load_baseline
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    default_src = os.path.dirname(here)                   # src/repro
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="HPS concurrency lint + reachability report")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any non-baselined finding or "
+                         "stale baseline entry (the CI gate)")
+    ap.add_argument("--root", default=default_src,
+                    help="package source tree to analyze "
+                         "(default: the repro package)")
+    ap.add_argument("--baseline",
+                    default=os.path.join(here, "baseline.toml"),
+                    help="shrink-only allowlist (default: the "
+                         "checked-in analysis/baseline.toml)")
+    ap.add_argument("--rules", default="lock,dead",
+                    help="comma-set of passes to run: lock,dead")
+    ap.add_argument("--show-waived", action="store_true",
+                    help="also print inline-waived findings")
+    args = ap.parse_args(argv)
+
+    src_root = os.path.abspath(args.root)
+    repo_root = os.path.dirname(os.path.dirname(src_root))
+
+    findings = []
+    passes = {p.strip() for p in args.rules.split(",") if p.strip()}
+    if "lock" in passes:
+        findings += concurrency.lint_tree(src_root, repo_root)
+    if "dead" in passes:
+        findings += deadcode.lint(repo_root, src_root)
+
+    entries = load_baseline(args.baseline) \
+        if os.path.exists(args.baseline) else []
+    live = [f for f in findings if not f.waived and not f.advice]
+    failing, stale = apply_baseline(live, entries)
+    baselined = {f.key() for f in live} - {f.key() for f in failing}
+
+    shown = 0
+    for f in findings:
+        if f.waived and not args.show_waived:
+            continue
+        suffix = " (baselined)" if f.key() in baselined else ""
+        print(f.format() + suffix)
+        shown += 1
+    for e in stale:
+        print(f"{args.baseline}: stale [[allow]] entry {e!r} matches "
+              "no current finding — the baseline only shrinks")
+
+    n_waived = sum(1 for f in findings if f.waived)
+    n_info = sum(1 for f in findings if f.advice)
+    print(f"repro.analysis: {len(failing)} failing finding(s), "
+          f"{len(baselined)} baselined, {n_waived} waived, "
+          f"{n_info} informational, {len(stale)} stale baseline "
+          f"entr{'y' if len(stale) == 1 else 'ies'}")
+    if args.check and (failing or stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""Finding model, inline waivers, and the shrink-only baseline.
+
+Every analysis pass reports :class:`Finding` objects that print as
+``file:line RULE message`` — the grep/CI-friendly shape.
+
+Two escape hatches exist, with different lifetimes:
+
+* **Inline waivers** (``# lock-ok: RULE reason``, on the offending line
+  or the line directly above) mark *intentional designs* the rule
+  cannot distinguish from bugs. They live next to the code, carry their
+  justification, and are reviewed whenever the code changes. Waived
+  findings are still reported (tagged) but never fail ``--check``.
+* **``baseline.toml``** grandfathers *pre-existing findings* at the
+  moment a pass is introduced. It may only SHRINK: an entry that no
+  longer matches any live finding is *stale* and fails ``--check``, so
+  the file cannot rot into a permanent allowlist.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    file: str                  # repo-relative path
+    line: int
+    message: str
+    symbol: str = ""           # "Class.method" when known
+    waived: bool = False
+    waive_reason: str = ""
+    advice: bool = False       # informational: reported, never fails
+
+    def format(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        tag = " (waived)" if self.waived else \
+              " (info)" if self.advice else ""
+        return f"{self.file}:{self.line} {self.rule} {self.message}" \
+               f"{sym}{tag}"
+
+    def key(self) -> Tuple[str, str, int, str]:
+        return (self.file, self.rule, self.line, self.message)
+
+
+_WAIVER_RE = re.compile(r"#\s*lock-ok:\s*([A-Z]+\d+)\b\s*(.*)")
+
+
+def waiver_on(lines: Sequence[str], lineno: int,
+              rule: str) -> Optional[str]:
+    """Return the waiver reason if ``lines`` carries an inline
+    ``# lock-ok: <rule>`` marker on ``lineno`` (1-based) or the line
+    directly above it."""
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _WAIVER_RE.search(lines[ln - 1])
+            if m and m.group(1) == rule:
+                return m.group(2).strip() or "waived"
+    return None
+
+
+# -- baseline (minimal TOML subset: [[allow]] tables of scalars) --------------
+
+_KV_STR = re.compile(r'^(\w+)\s*=\s*"([^"]*)"\s*(?:#.*)?$')
+_KV_INT = re.compile(r"^(\w+)\s*=\s*(\d+)\s*(?:#.*)?$")
+
+
+def load_baseline(path: str) -> List[Dict[str, object]]:
+    """Parse ``baseline.toml``: a list of ``[[allow]]`` tables with
+    string/int values. Hand-rolled because the floor interpreter is
+    3.10 (no ``tomllib``) and the analysis CLI must stay stdlib-only."""
+    entries: List[Dict[str, object]] = []
+    cur: Optional[Dict[str, object]] = None
+    with open(path) as f:
+        for raw in f:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if line == "[[allow]]":
+                cur = {}
+                entries.append(cur)
+                continue
+            m = _KV_STR.match(line)
+            if m and cur is not None:
+                cur[m.group(1)] = m.group(2)
+                continue
+            m = _KV_INT.match(line)
+            if m and cur is not None:
+                cur[m.group(1)] = int(m.group(2))
+                continue
+            raise ValueError(f"{path}: cannot parse line {line!r}")
+    return entries
+
+
+def _matches(entry: Dict[str, object], f: Finding) -> bool:
+    if entry.get("rule") != f.rule or entry.get("file") != f.file:
+        return False
+    if "line" in entry and entry["line"] != f.line:
+        return False
+    if "symbol" in entry and entry["symbol"] != f.symbol:
+        return False
+    return True
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   entries: Sequence[Dict[str, object]]
+                   ) -> Tuple[List[Finding], List[Dict[str, object]]]:
+    """Split live findings against the baseline.
+
+    Returns ``(unmatched_findings, stale_entries)``: findings no entry
+    covers (these fail ``--check``) and entries covering nothing (these
+    ALSO fail ``--check`` — the baseline may only shrink)."""
+    used = [False] * len(entries)
+    unmatched: List[Finding] = []
+    for f in findings:
+        hit = False
+        for i, e in enumerate(entries):
+            if _matches(e, f):
+                used[i] = True
+                hit = True
+        if not hit:
+            unmatched.append(f)
+    stale = [e for i, e in enumerate(entries) if not used[i]]
+    return unmatched, stale

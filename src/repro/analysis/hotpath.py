@@ -1,0 +1,182 @@
+"""Hot-path sanitizer: runtime device-sync + recompile monitor
+(SYNC001/SYNC002).
+
+:class:`HotPathMonitor` is a context manager that instruments, for the
+duration of the ``with`` block:
+
+* **implicit device->host transfers** (``SYNC001``): ``numpy.asarray``
+  / ``numpy.array`` / ``numpy.ascontiguousarray`` applied to a live
+  ``jax.Array`` (the ``__array__`` protocol path), plus the explicit
+  ``jax.block_until_ready`` / ``jax.device_get`` sync points;
+* **jit compilations** (``SYNC002``): jax's
+  ``/jax/core/compile/backend_compile_duration`` monitoring event,
+  which fires only on FRESH compilations — cache hits are silent.
+
+This is how tests pin the stream serve engine's contract: after
+warmup, exactly ONE host sync per served group (the delivered
+prediction in ``InferenceServer._materialize``) and ZERO recompiles.
+
+The hooks are strictly scoped: module attributes are swapped on
+``__enter__`` and restored to the original function objects on
+``__exit__``, so disabled overhead is zero — outside a monitor,
+``numpy.asarray`` IS the original numpy function, not a wrapper. One
+jax monitoring listener is registered lazily on first use (jax has no
+per-listener unregister) and is a no-op unless a monitor is active.
+Monitors do not nest and there is at most one active process-wide.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+
+class SyncEvent(NamedTuple):
+    kind: str       # "d2h" (host materialization) | "block" (sync wait)
+    via: str        # entry point, e.g. "numpy.asarray"
+    shape: Any      # shape of the device value, when it has one
+
+
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_state_lock = threading.Lock()
+_active: Optional["HotPathMonitor"] = None
+_saved: Dict[Tuple[str, str], Any] = {}
+_listener_on = False
+
+
+def active_monitor() -> Optional["HotPathMonitor"]:
+    """The currently-armed monitor, or None (the disabled state)."""
+    return _active
+
+
+def _on_event_duration(event: str, duration: float, **kw) -> None:
+    mon = _active
+    if mon is not None and event == COMPILE_EVENT:
+        mon._note_compile(duration)
+
+
+def _ensure_listener() -> None:
+    global _listener_on
+    if _listener_on:
+        return
+    from jax import monitoring
+    monitoring.register_event_duration_secs_listener(_on_event_duration)
+    _listener_on = True
+
+
+def _install() -> None:
+    import jax
+    import numpy
+
+    _ensure_listener()
+
+    def np_hook(name: str, orig):
+        def hooked(a, *args, **kwargs):
+            mon = _active
+            if mon is not None and isinstance(a, jax.Array):
+                mon._note_sync("d2h", f"numpy.{name}",
+                               getattr(a, "shape", None))
+            return orig(a, *args, **kwargs)
+        hooked._hotpath_orig = orig
+        return hooked
+
+    def jax_hook(name: str, kind: str, orig):
+        def hooked(x, *args, **kwargs):
+            mon = _active
+            if mon is not None:
+                mon._note_sync(kind, f"jax.{name}",
+                               getattr(x, "shape", None))
+            return orig(x, *args, **kwargs)
+        hooked._hotpath_orig = orig
+        return hooked
+
+    for name in ("asarray", "array", "ascontiguousarray"):
+        orig = getattr(numpy, name)
+        _saved[("numpy", name)] = orig
+        setattr(numpy, name, np_hook(name, orig))
+    for name, kind in (("block_until_ready", "block"),
+                       ("device_get", "d2h")):
+        orig = getattr(jax, name)
+        _saved[("jax", name)] = orig
+        setattr(jax, name, jax_hook(name, kind, orig))
+
+
+def _uninstall() -> None:
+    import jax
+    import numpy
+    for (modname, name), orig in list(_saved.items()):
+        setattr(numpy if modname == "numpy" else jax, name, orig)
+    _saved.clear()
+
+
+class HotPathMonitor:
+    """Arm the sanitizer for a ``with`` block; see the module docstring.
+
+    Event recording is thread-safe (the serve loop and HPS host workers
+    run on their own threads), and attribution is process-global: every
+    sync/compile anywhere in the process during the block is charged to
+    this monitor.
+    """
+
+    _GUARDED_BY = {"syncs": "_mu", "compiles": "_mu",
+                   "compile_secs": "_mu"}
+
+    def __init__(self, label: str = ""):
+        self.label = label
+        self.syncs: List[SyncEvent] = []
+        self.compiles = 0
+        self.compile_secs = 0.0
+        self._mu = threading.Lock()
+
+    # -- recording (called from the hooks, any thread) -----------------------
+
+    def _note_sync(self, kind: str, via: str, shape) -> None:
+        with self._mu:
+            self.syncs.append(SyncEvent(kind, via, shape))
+
+    def _note_compile(self, duration: float) -> None:
+        with self._mu:
+            self.compiles += 1
+            self.compile_secs += duration
+
+    # -- inspection ----------------------------------------------------------
+
+    @property
+    def sync_count(self) -> int:
+        with self._mu:
+            return len(self.syncs)
+
+    def events(self) -> List[SyncEvent]:
+        with self._mu:
+            return list(self.syncs)
+
+    def summary(self) -> Dict[str, Any]:
+        with self._mu:
+            return {"label": self.label,
+                    "syncs": len(self.syncs),
+                    "d2h": sum(1 for e in self.syncs
+                               if e.kind == "d2h"),
+                    "block": sum(1 for e in self.syncs
+                                 if e.kind == "block"),
+                    "compiles": self.compiles,
+                    "compile_secs": self.compile_secs}
+
+    # -- arming --------------------------------------------------------------
+
+    def __enter__(self) -> "HotPathMonitor":
+        global _active
+        with _state_lock:
+            if _active is not None:
+                raise RuntimeError(
+                    "HotPathMonitor does not nest: one monitor may be "
+                    "active per process")
+            _install()
+            _active = self
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        global _active
+        with _state_lock:
+            _active = None
+            _uninstall()
+        return False

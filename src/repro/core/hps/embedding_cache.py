@@ -78,6 +78,23 @@ class LookupPlan:
 
 class DeviceEmbeddingCache:
 
+    # Concurrency contract, checked by `python -m repro.analysis`: every
+    # listed attribute may only be touched under self._lock. fetch_fn is
+    # the injected L2/L3 fall-through, which takes the VDB/PDB locks and
+    # bumps the HPS L3 counters — declared so the lock-order pass sees
+    # the cross-object edges.
+    _GUARDED_BY = {
+        "_id_of": "_lock", "_freq": "_lock", "_next_free": "_lock",
+        "_sorted_ids": "_lock", "_sorted_slots": "_lock",
+        "_pending": "_lock", "_pending_plan": "_lock",
+        "_dirty": "_lock", "hits": "_lock", "misses": "_lock",
+        "rows_refreshed": "_lock", "refresh_chunks": "_lock",
+    }
+    _LOCKS_OF = {
+        "fetch_fn": ("VolatileDB._lock", "PersistentDB._lock",
+                     "HPS._l3_stats_lock"),
+    }
+
     def __init__(self, capacity: int, dim: int, *,
                  fetch_fn: Callable[[np.ndarray], np.ndarray],
                  decay: float = 0.99, shards: int = 1, mesh=None,
@@ -129,7 +146,7 @@ class DeviceEmbeddingCache:
 
     # -- host index --------------------------------------------------------------
 
-    def _find(self, ids: np.ndarray) -> np.ndarray:
+    def _find_locked(self, ids: np.ndarray) -> np.ndarray:
         """Vectorized id -> slot (-1 if not resident). ``ids`` unique."""
         if len(self._sorted_ids) == 0:
             return np.full(len(ids), -1, np.int64)
@@ -138,7 +155,7 @@ class DeviceEmbeddingCache:
         found = self._sorted_ids[pos] == ids
         return np.where(found, self._sorted_slots[pos], -1)
 
-    def _rebuild_index(self) -> None:
+    def _rebuild_index_locked(self) -> None:
         occ = self._id_of[:self._next_free]
         order = np.argsort(occ, kind="stable").astype(np.int64)
         self._sorted_ids = occ[order]
@@ -208,7 +225,7 @@ class DeviceEmbeddingCache:
         if self._pending is not None:
             dest, rows = self._pending
             self._pending = None
-            self._scatter(dest, rows)
+            self._scatter_locked(dest, rows)
         if self._pending_plan is not None:
             self._pending_plan.payload = self._store.snapshot()
             self._pending_plan = None
@@ -226,7 +243,7 @@ class DeviceEmbeddingCache:
         has_pad = len(uniq) > 0 and uniq[0] < 0
         slots_u = np.full(len(uniq), -1, np.int64)
         real = slice(1, None) if has_pad else slice(None)
-        slots_u[real] = self._find(uniq[real])
+        slots_u[real] = self._find_locked(uniq[real])
         found = slots_u >= 0
         real_mask = uniq >= 0
         self.hits += int(counts[found].sum())
@@ -239,6 +256,7 @@ class DeviceEmbeddingCache:
         ov_idx, ov_rows = empty
         if miss.any():
             miss_ids = uniq[miss]
+            # lock-ok: LOCK002 probe fetch under the lock preserves same-table ordering; the pipelined engine keeps it off the hot thread
             rows = np.asarray(self.fetch_fn(miss_ids), np.float32)
             k = len(miss_ids)
             n_occ = self._next_free
@@ -271,7 +289,7 @@ class DeviceEmbeddingCache:
             self._id_of[dest] = miss_ids[sel]
             self._freq[dest] = counts[miss][sel].astype(np.float64)
             self._dirty[dest] = False      # fresh from the lower levels
-            self._rebuild_index()
+            self._rebuild_index_locked()
             if ins:  # the ONE device scatter, deferred to commit()
                 self._pending = (dest, rows[sel])
             miss_slots = np.full(k, -1, np.int64)
@@ -288,7 +306,7 @@ class DeviceEmbeddingCache:
 
         return slots_u[inv].astype(np.int64), ov_idx, ov_rows
 
-    def _scatter(self, slots: np.ndarray, rows: np.ndarray) -> None:
+    def _scatter_locked(self, slots: np.ndarray, rows: np.ndarray) -> None:
         """The one device scatter (striping handled by the store)."""
         self._store.scatter(slots, rows)
 
@@ -318,7 +336,7 @@ class DeviceEmbeddingCache:
         levels changed under them). Returns how many were resident."""
         ids = np.unique(np.asarray(ids, np.int64))
         with self._lock:
-            slots = self._find(ids)
+            slots = self._find_locked(ids)
             slots = slots[slots >= 0]
             self._dirty[slots] = True
             return len(slots)
@@ -363,10 +381,10 @@ class DeviceEmbeddingCache:
             ids = self._id_of[slots].copy()
         rows = np.asarray(self.fetch_fn(ids), np.float32)   # slow IO
         with self._lock:
-            keep = self._find(ids) == slots       # binding may have moved
+            keep = self._find_locked(ids) == slots  # binding may have moved
             kept = int(keep.sum())
             if kept:
-                self._scatter(slots[keep], rows[keep])
+                self._scatter_locked(slots[keep], rows[keep])
             self.rows_refreshed += kept
             self.refresh_chunks += 1
             return kept
@@ -401,7 +419,16 @@ class DeviceEmbeddingCache:
             self._refresh_thread = None
         self._stop.clear()
 
+    def counters(self) -> dict:
+        """Lock-consistent snapshot of the serving counters."""
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "rows_refreshed": self.rows_refreshed,
+                    "refresh_chunks": self.refresh_chunks}
+
     @property
     def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
+        with self._lock:
+            hits, misses = self.hits, self.misses
+        n = hits + misses
+        return hits / n if n else 0.0

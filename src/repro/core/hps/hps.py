@@ -74,6 +74,15 @@ def _pooled_stack(payloads: Tuple[jax.Array, ...],
 
 class HPS:
 
+    # Checked by `python -m repro.analysis`: the L3 fetch counters have
+    # their own lock (probe and refresh fetches race), and the lazy host
+    # pool is built under _pool_lock.
+    _GUARDED_BY = {
+        "_l3_fetch_calls": "_l3_stats_lock",
+        "_l3_fetch_rows": "_l3_stats_lock",
+        "_host_pool": "_pool_lock",
+    }
+
     def __init__(self, model_name: str,
                  tables: Sequence[EmbeddingTableConfig],
                  pdb: PersistentDB, *,
@@ -520,18 +529,24 @@ class HPS:
     # -- metrics ---------------------------------------------------------------------
 
     def stats(self) -> Dict:
+        with self._l3_stats_lock:
+            l3 = {"calls": dict(self._l3_fetch_calls),
+                  "rows": dict(self._l3_fetch_rows)}
+        l2 = self.vdb.stats()                 # one locked L2 snapshot
+        l1 = {k: c.counters() for k, c in self.caches.items()}
         return {
-            "l1_hit_rate": {k: c.hit_rate for k, c in self.caches.items()},
-            "l2_hits": self.vdb.hits,
-            "l2_misses": self.vdb.misses,
-            "l2": self.vdb.stats(),
-            "l3_fetches": {"calls": dict(self._l3_fetch_calls),
-                           "rows": dict(self._l3_fetch_rows)},
+            "l1_hit_rate": {
+                k: (c["hits"] / (c["hits"] + c["misses"])
+                    if c["hits"] + c["misses"] else 0.0)
+                for k, c in l1.items()},
+            "l2_hits": l2["hits"],
+            "l2_misses": l2["misses"],
+            "l2": l2,
+            "l3_fetches": l3,
             "refresh": {
-                "rows_refreshed": sum(c.rows_refreshed
-                                      for c in self.caches.values()),
-                "chunks": sum(c.refresh_chunks
-                              for c in self.caches.values()),
+                "rows_refreshed": sum(c["rows_refreshed"]
+                                      for c in l1.values()),
+                "chunks": sum(c["refresh_chunks"] for c in l1.values()),
                 "backlog": self.refresh_backlog(),
             },
             "stream": {"depth": self.stream_depth,

@@ -35,6 +35,9 @@ def _deserialize(data: bytes) -> Tuple[np.ndarray, np.ndarray]:
 
 class MessageBus:
 
+    # Checked by `python -m repro.analysis`.
+    _GUARDED_BY = {"_topics": "_lock"}
+
     def __init__(self):
         self._topics: Dict[str, List[bytes]] = {}
         self._lock = threading.Lock()

@@ -22,6 +22,10 @@ from repro.configs.base import EmbeddingTableConfig
 
 class PersistentDB:
 
+    # Checked by `python -m repro.analysis`: the memmap handles and
+    # their shapes only move under the store-wide lock.
+    _GUARDED_BY = {"_maps": "_lock", "_meta": "_lock"}
+
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)

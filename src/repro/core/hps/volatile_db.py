@@ -120,6 +120,13 @@ class _Shard:
 
 class VolatileDB:
 
+    # Checked by `python -m repro.analysis`: shard state, the LRU clock
+    # and the hit/miss counters are all behind the one store-wide lock.
+    _GUARDED_BY = {
+        "_store": "_lock", "_now": "_lock",
+        "hits": "_lock", "misses": "_lock",
+    }
+
     def __init__(self, *, shards: int = 1, capacity_per_shard: int = 100000):
         self.shards = shards
         self.capacity = capacity_per_shard
@@ -129,7 +136,7 @@ class VolatileDB:
         self.misses = 0
         self._lock = threading.RLock()
 
-    def _ns(self, table: str) -> List[_Shard]:
+    def _ns_locked(self, table: str) -> List[_Shard]:
         if table not in self._store:
             self._store[table] = [_Shard(self.capacity)
                                   for _ in range(self.shards)]
@@ -146,7 +153,7 @@ class VolatileDB:
 
     def _query_locked(self, table: str, ids: np.ndarray
                       ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
-        ns = self._ns(table)
+        ns = self._ns_locked(table)
         ids = np.asarray(ids, np.int64)
         self._now += 1
         mask = np.zeros(len(ids), bool)
@@ -171,7 +178,7 @@ class VolatileDB:
 
     def insert(self, table: str, ids: np.ndarray, rows: np.ndarray) -> None:
         with self._lock:
-            ns = self._ns(table)
+            ns = self._ns_locked(table)
             ids = np.asarray(ids, np.int64)
             rows = np.asarray(rows, np.float32)
             self._now += 1
@@ -183,7 +190,7 @@ class VolatileDB:
 
     def evict(self, table: str, ids: np.ndarray) -> None:
         with self._lock:
-            ns = self._ns(table)
+            ns = self._ns_locked(table)
             ids = np.asarray(ids, np.int64)
             shard_of = ids % self.shards
             for s, shard in enumerate(ns):
@@ -193,7 +200,7 @@ class VolatileDB:
 
     def size(self, table: str) -> int:
         with self._lock:
-            return sum(s.n for s in self._ns(table))
+            return sum(s.n for s in self._ns_locked(table))
 
     def stats(self) -> Dict:
         """Per-table occupancy for the serving L1/L2/L3 picture."""

@@ -174,9 +174,17 @@ def _train_and_deploy(archs, train_steps: int, batch: int,
     return os.path.join(deploy_dir, "ps.json")
 
 
-def _serve_bundle(ps_path: str, requests: int, batch: int) -> None:
+def _serve_bundle(ps_path: str, requests: int, batch: int, *,
+                  sanitize: bool = False) -> None:
     """Stand the bundle back up, push requests through ``submit`` and
-    print the serving picture (per model for ensembles)."""
+    print the serving picture (per model for ensembles).
+
+    ``sanitize=True`` arms the hot-path sanitizer over the measured
+    phase and fails the run unless the serve loops performed exactly ONE
+    device->host sync per delivered group and ZERO post-warmup
+    recompiles — the pipeline invariants, enforced in CI."""
+    from contextlib import nullcontext
+
     from repro.data.synthetic import SyntheticCTR
     from repro.serve.server import MultiModelServer
 
@@ -193,22 +201,57 @@ def _serve_bundle(ps_path: str, requests: int, batch: int) -> None:
         for n, s in servers.items():          # warm jit off the clock
             warm = data[n].batch(10_000)
             s.predict(warm["dense"], warm["cat"])
-            s.latencies_ms.clear()
+            if sanitize:
+                # pin one request per coalesced group so "one sync per
+                # group" is countable against the delivered groups
+                s.max_batch = batch
             s.start()
+        if sanitize:                          # warm the serve-loop path
+            for r in range(2):
+                warm_handles = [
+                    s.submit(req["dense"], req["cat"])
+                    for n, s in servers.items()
+                    for req in (data[n].batch(30_000 + r),)]
+                for h in warm_handles:
+                    h.get(timeout=300)
+        for s in servers.values():
+            s.reset_latencies()
+
+        if sanitize:
+            from repro.analysis import HotPathMonitor
+            mon = HotPathMonitor("serve-smoke")
+        else:
+            mon = None
         t0 = time.time()
-        handles = []
-        for r in range(requests):
-            for n, s in servers.items():
-                req = data[n].batch(20_000 + r)
-                handles.append((n, s.submit(req["dense"], req["cat"])))
-        for n, h in handles:
-            out = h.get(timeout=300)
-            if isinstance(out, Exception):  # a failed group delivers its
-                raise out                   # exception — surface it
-            outs[n].append(out)
+        with mon if mon is not None else nullcontext():
+            handles = []
+            for r in range(requests):
+                for n, s in servers.items():
+                    req = data[n].batch(20_000 + r)
+                    handles.append((n, s.submit(req["dense"],
+                                                req["cat"])))
+            for n, h in handles:
+                out = h.get(timeout=300)
+                if isinstance(out, Exception):  # a failed group delivers
+                    raise out                   # its exception — surface
+                outs[n].append(out)
         dt = time.time() - t0
         for s in servers.values():
             s.stop()
+
+    if mon is not None:
+        groups = sum(s.counters()["groups_served"]
+                     for s in servers.values())
+        summ = mon.summary()
+        if summ["syncs"] != groups or summ["compiles"] != 0:
+            raise SystemExit(
+                f"hot-path sanitizer: expected {groups} host syncs (one "
+                f"per served group) and 0 recompiles; observed "
+                f"{summ['syncs']} syncs ({summ['d2h']} d2h, "
+                f"{summ['block']} block) and {summ['compiles']} "
+                "compile(s)")
+        print(f"sanitizer: {summ['syncs']} host syncs over {groups} "
+              "served groups, 0 post-warmup recompiles")
 
     total = sum(len(o) for os_ in outs.values() for o in os_)
     print(f"served {total} predictions over {len(servers)} model(s) "
@@ -250,6 +293,11 @@ def main():
                     help="per-model L1 rows (default: 2048 for a single "
                          "model; hotness-proportional for ensembles)")
     ap.add_argument("--deploy-dir", default=None)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="arm the hot-path sanitizer over the measured "
+                         "phase: fail unless every served group cost "
+                         "exactly one device->host sync and zero "
+                         "post-warmup recompiles")
     args = ap.parse_args()
 
     ps_path = args.config
@@ -264,7 +312,8 @@ def main():
                                     deploy_dir, args.cache_capacity)
         print(f"deployment bundle: {deploy_dir}")
 
-    _serve_bundle(ps_path, args.requests, args.batch)
+    _serve_bundle(ps_path, args.requests, args.batch,
+                  sanitize=args.sanitize)
 
 
 if __name__ == "__main__":

@@ -82,6 +82,15 @@ def deploy_from_training(model, params: Dict, pdb: PersistentDB,
 
 class InferenceServer:
 
+    # Checked by `python -m repro.analysis`: serving counters and the
+    # latency samples are written by the serve-loop thread and read by
+    # stats/benchmark callers, so they live behind _stats_lock.
+    _GUARDED_BY = {
+        "updates_applied": "_stats_lock",
+        "rows_refreshed": "_stats_lock",
+        "latencies_ms": "_stats_lock",
+    }
+
     def __init__(self, model, dense_params: Dict, hps: HPS, *,
                  max_batch: int = 1024, needs_wide: bool = False,
                  wide_hps: Optional[HPS] = None,
@@ -105,6 +114,7 @@ class InferenceServer:
         self.refresh_budget = refresh_budget
         #: period of the full-mark sweep (None = only bus-marked rows)
         self.refresh_poll_s = refresh_poll_s
+        self._stats_lock = threading.Lock()
         self.updates_applied = 0
         self.rows_refreshed = 0
         self._last_poll = time.monotonic()
@@ -116,6 +126,11 @@ class InferenceServer:
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
         self.latencies_ms: List[float] = []
+
+    def _record_latency(self, t0: float) -> None:
+        ms = (time.perf_counter() - t0) * 1e3
+        with self._stats_lock:
+            self.latencies_ms.append(ms)
 
     # -- synchronous path ---------------------------------------------------------
 
@@ -141,7 +156,7 @@ class InferenceServer:
                 cat, self.hotness,
                 pipelined=len(self.wide_hps.tables) > 1)
         out = np.asarray(self._dense_forward(dense, emb, wide))
-        self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        self._record_latency(t0)
         return out
 
     def _predict_stage_sync(self, dense: np.ndarray,
@@ -161,7 +176,7 @@ class InferenceServer:
             out = self._predict_nowide(self.dense_params,
                                        jnp.asarray(dense), emb)
         out = np.asarray(jax.nn.sigmoid(jax.block_until_ready(out)))
-        self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        self._record_latency(t0)
         return out
 
     # -- refresh scheduling (runs on the serve loop, between batches) -------------
@@ -182,15 +197,20 @@ class InferenceServer:
             if now - self._last_poll >= self.refresh_poll_s:
                 self._last_poll = now
                 sweep = True
-        for hps in (self.hps, self.wide_hps):
-            if hps is None:
+        applied = refreshed = 0            # the bus/refresh IO runs
+        for hps in (self.hps, self.wide_hps):   # unlocked; counters
+            if hps is None:                     # update in one step below
                 continue
             if hps.consumer is not None:
-                self.updates_applied += hps.apply_updates()
+                applied += hps.apply_updates()
             if sweep:
                 hps.schedule_refresh()
             if hps.refresh_backlog():
-                self.rows_refreshed += hps.refresh_step(self.refresh_budget)
+                refreshed += hps.refresh_step(self.refresh_budget)
+        if applied or refreshed:
+            with self._stats_lock:
+                self.updates_applied += applied
+                self.rows_refreshed += refreshed
 
     # -- queued/batched path --------------------------------------------------------
 
@@ -320,7 +340,7 @@ class InferenceServer:
         except Exception as exc:            # deferred device error: this
             self._deliver_error(reqs, exc)  # group's handles first, the
             raise                           # burst handler does the rest
-        self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        self._record_latency(t0)
         self._deliver(reqs, preds)
 
     # -- serve loop -----------------------------------------------------------------
@@ -363,13 +383,26 @@ class InferenceServer:
         self._stop.clear()
 
     def latency_percentiles(self) -> Dict[str, float]:
-        if not self.latencies_ms:
+        with self._stats_lock:
+            arr = np.asarray(self.latencies_ms)
+        if len(arr) == 0:
             return {}
-        arr = np.asarray(self.latencies_ms)
         return {"p50": float(np.percentile(arr, 50)),
                 "p95": float(np.percentile(arr, 95)),
                 "p99": float(np.percentile(arr, 99)),
                 "mean": float(arr.mean())}
+
+    def reset_latencies(self) -> None:
+        """Drop accumulated latency samples (benchmark warmup reset)."""
+        with self._stats_lock:
+            self.latencies_ms = []
+
+    def counters(self) -> Dict[str, int]:
+        """Lock-consistent snapshot of the serving counters."""
+        with self._stats_lock:
+            return {"updates_applied": self.updates_applied,
+                    "rows_refreshed": self.rows_refreshed,
+                    "groups_served": len(self.latencies_ms)}
 
 
 class MultiModelServer:
@@ -430,8 +463,11 @@ class MultiModelServer:
 
     def stats(self) -> Dict[str, Dict]:
         """Per-model serving picture: L1/L2/L3 + refresh + latency."""
-        return {name: {"hps": s.hps.stats(),
-                       "latency_ms": s.latency_percentiles(),
-                       "updates_applied": s.updates_applied,
-                       "rows_refreshed": s.rows_refreshed}
-                for name, s in self.servers.items()}
+        out = {}
+        for name, s in self.servers.items():
+            c = s.counters()
+            out[name] = {"hps": s.hps.stats(),
+                         "latency_ms": s.latency_percentiles(),
+                         "updates_applied": c["updates_applied"],
+                         "rows_refreshed": c["rows_refreshed"]}
+        return out

@@ -1,0 +1,38 @@
+"""Fixture: blocking work under a lock (LOCK002 x3)."""
+import time
+import threading
+
+import numpy as np
+
+
+class SlowCache:
+
+    _GUARDED_BY = {"rows": "_lock"}
+    _LOCKS_OF = {"fetch_fn": ("Store._lock",)}
+
+    def __init__(self, fetch_fn, store):
+        self._lock = threading.Lock()
+        self.fetch_fn = fetch_fn
+        self.store = store
+        self.rows = {}
+
+    def refill(self, ids):
+        with self._lock:
+            fresh = self.fetch_fn(ids)          # LOCK002: fetch held
+            time.sleep(0.01)                    # LOCK002: sleep held
+            self.rows = dict(zip(ids, fresh))
+
+    def snapshot_host(self):
+        with self._lock:
+            # LOCK002: host materialization of a device value while the
+            # lock is held (np.asarray over a device-producing call)
+            return np.asarray(self.store.snapshot())
+
+
+class Store:
+
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def snapshot(self):
+        return None

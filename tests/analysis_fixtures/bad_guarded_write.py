@@ -1,0 +1,20 @@
+"""Fixture: guarded attribute touched outside the lock (LOCK001 x2)."""
+import threading
+
+
+class Counter:
+
+    _GUARDED_BY = {"count": "_lock", "total": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.total = 0
+
+    def bump(self, n: int) -> None:
+        with self._lock:
+            self.count += 1
+        self.total += n          # LOCK001: write outside the lock
+
+    def peek(self) -> int:
+        return self.count        # LOCK001: read outside the lock

@@ -1,0 +1,23 @@
+"""Fixture for the RUNTIME sanitizer: a pipeline that materializes a
+device value mid-loop (leaky) next to one that stays on device (clean).
+``tests/test_hotpath_sanitizer.py`` runs both under a
+:class:`~repro.analysis.HotPathMonitor` and asserts only the leaky one
+trips SYNC001."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def leaky_pipeline(steps: int = 3):
+    x = jnp.arange(8.0)
+    total = 0.0
+    for _ in range(steps):
+        x = x * 2.0
+        total += float(np.asarray(x).sum())   # hidden d2h each step
+    return total
+
+
+def clean_pipeline(steps: int = 3):
+    x = jnp.arange(8.0)
+    for _ in range(steps):
+        x = x * 2.0
+    return np.asarray(x).sum()                # ONE d2h at the end

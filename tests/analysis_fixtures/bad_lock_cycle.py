@@ -1,0 +1,38 @@
+"""Fixture: AB-BA lock order between two classes (LOCK003)."""
+import threading
+
+
+class Left:
+
+    _GUARDED_BY = {"value": "_lock"}
+
+    def __init__(self, peer: "Right"):
+        self._lock = threading.Lock()
+        self.peer = peer
+        self.value = 0
+
+    def receive(self, v: int) -> None:
+        with self._lock:
+            self.value = v
+
+    def push(self) -> None:
+        with self._lock:            # Left._lock -> Right._lock
+            self.peer.receive(self.value)
+
+
+class Right:
+
+    _GUARDED_BY = {"value": "_lock"}
+
+    def __init__(self, peer: Left):
+        self._lock = threading.Lock()
+        self.peer = peer
+        self.value = 0
+
+    def receive(self, v: int) -> None:
+        with self._lock:
+            self.value = v
+
+    def push(self) -> None:
+        with self._lock:            # Right._lock -> Left._lock: cycle
+            self.peer.receive(self.value)

@@ -1,0 +1,21 @@
+"""Fixture: ``*_locked`` helper called without the lock (LOCK004)."""
+import threading
+
+
+class Index:
+
+    _GUARDED_BY = {"entries": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.entries = {}
+
+    def _find_locked(self, key):
+        return self.entries.get(key)
+
+    def get(self, key):
+        with self._lock:
+            return self._find_locked(key)
+
+    def get_fast(self, key):
+        return self._find_locked(key)   # LOCK004: lock not held

@@ -1,0 +1,42 @@
+"""Fixture: lock discipline done right — trips NO rule.
+
+Covers the idioms the lint must accept: guarded access under ``with``,
+``*_locked`` helpers called with the lock held, blocking work done
+between lock scopes, an inline waiver, and init-time writes."""
+import threading
+
+import numpy as np
+
+
+class CleanCache:
+
+    _GUARDED_BY = {"rows": "_lock", "hits": "_lock"}
+
+    def __init__(self, fetch_fn):
+        self._lock = threading.Lock()
+        self.fetch_fn = fetch_fn
+        self.rows = {}
+        self.hits = 0          # __init__ writes are exempt
+
+    def _lookup_locked(self, key):
+        return self.rows.get(key)
+
+    def get(self, key):
+        with self._lock:
+            hit = self._lookup_locked(key)
+            if hit is not None:
+                self.hits += 1
+                return hit
+        fresh = self.fetch_fn([key])          # blocking IO: lock released
+        with self._lock:
+            self.rows[key] = fresh[0]
+            return fresh[0]
+
+    def prefetch(self, key):
+        with self._lock:
+            # lock-ok: LOCK002 startup-only path, contention accepted
+            self.rows[key] = self.fetch_fn([key])[0]
+
+    def snapshot(self):
+        with self._lock:
+            return np.asarray(list(self.rows.values()))

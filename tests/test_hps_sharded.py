@@ -455,6 +455,9 @@ def test_refresh_concurrent_with_stream_under_update_hammer(tmp_path):
         pdb.create_table("m", f"t{t}", vocab, dim, initial=init)
         tabs.append(EmbeddingTableConfig(f"t{t}", vocab, dim, hotness=1))
     hps = HPS("m", tabs, pdb, cache_capacity=32, bus=bus)
+    from repro.analysis import LockOrderRecorder
+    rec = LockOrderRecorder()
+    rec.instrument_hps(hps)         # record every lock the hammer takes
     stop = threading.Event()
     failures = []
 
@@ -507,4 +510,9 @@ def test_refresh_concurrent_with_stream_under_update_hammer(tmp_path):
             t.join(timeout=120)
     assert not any(t.is_alive() for t in threads), "deadlocked threads"
     assert not failures, failures
+    # the OBSERVED global lock-acquisition graph must be a DAG: the
+    # stream/refresh/update hammer really contended (edges exist), and
+    # no two threads ever ordered any pair of locks both ways
+    assert rec.edges(), "hammer never held two locks at once"
+    rec.assert_acyclic()
     hps.close()

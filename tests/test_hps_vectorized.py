@@ -72,9 +72,9 @@ def test_single_fetch_and_scatter_per_query(monkeypatch):
     fetches, scatters = [], []
     c = DeviceEmbeddingCache(
         8, 8, fetch_fn=lambda ids: fetches.append(len(ids)) or store[ids])
-    orig = DeviceEmbeddingCache._scatter
+    orig = DeviceEmbeddingCache._scatter_locked
     monkeypatch.setattr(
-        DeviceEmbeddingCache, "_scatter",
+        DeviceEmbeddingCache, "_scatter_locked",
         lambda self, s, r: scatters.append(len(s)) or orig(self, s, r))
     c.query(np.asarray([5, 1, 5, 9, 1, 3]))       # 4 unique misses
     assert fetches == [4] and scatters == [4]
