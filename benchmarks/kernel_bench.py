@@ -32,3 +32,41 @@ def run(report: Report):
         tr = time_fn(jr, x, iters=3)["min_s"]
         report.add(f"kernel.interaction.B{b}xF{f}.pallas_interp", tk,
                    f"jnp_oracle_us={tr * 1e6:.1f}")
+
+    # fused dequantize-gather (int8 L1 payload + per-row scales) vs the
+    # two-dispatch reference: gather the int8 rows + scales first, THEN
+    # dequantize in a second jitted op. The fused kernel folds the scale
+    # into the one-hot before its single MXU pass, so the compressed
+    # tile never materializes at f32 width between dispatches.
+    for c, d, n in ((8192, 32, 2048), (16384, 64, 4096)):
+        payload = jax.random.randint(jax.random.fold_in(key, 2),
+                                     (c, d), -127, 128, jnp.int8)
+        scales = jax.random.uniform(jax.random.fold_in(key, 3), (c,),
+                                    jnp.float32, 0.01, 2.0)
+        slots = jax.random.randint(jax.random.fold_in(key, 4),
+                                   (n,), -1, c)
+
+        def fused(p, sc, s):
+            return ops.cache_gather(p, s, scales=sc, use_kernel=True)
+
+        @jax.jit
+        def gathered_then_dequant_rows(p, sc, s):
+            valid = s >= 0
+            safe = jnp.where(valid, s, 0)
+            return (jnp.take(p, safe, axis=0),
+                    jnp.take(sc, safe), valid)
+
+        @jax.jit
+        def dequant(rows, rsc, valid):
+            out = rows.astype(jnp.float32) * rsc[:, None]
+            return jnp.where(valid[:, None], out, 0.0)
+
+        def two_dispatch(p, sc, s):
+            rows, rsc, valid = gathered_then_dequant_rows(p, sc, s)
+            return dequant(rows, rsc, valid)
+
+        tk = time_fn(fused, payload, scales, slots, iters=3)["min_s"]
+        tr = time_fn(two_dispatch, payload, scales, slots,
+                     iters=3)["min_s"]
+        report.add(f"kernel.dequant_gather.C{c}xD{d}.fused_interp", tk,
+                   f"two_dispatch_us={tr * 1e6:.1f}")

@@ -851,8 +851,8 @@ class Model:
 
     def _write_bundle_member(self, pdb, bundle_dir: str, sub: str, *,
                              cache_capacity: int, cache_shards: int,
-                             refresh_budget: int,
-                             max_batch: int) -> HPSConfig:
+                             refresh_budget: int, max_batch: int,
+                             payload_dtype: str = "f32") -> HPSConfig:
         """Export THIS model into a deployment bundle: tables into the
         (possibly shared) PDB, graph.json + dense.npz under
         ``bundle_dir/sub``, returning the relocatable HPSConfig whose
@@ -874,6 +874,7 @@ class Model:
             wide=self._model.wide is not None,
             cache_capacity=cache_capacity, cache_shards=cache_shards,
             refresh_budget=refresh_budget, max_batch=max_batch,
+            payload_dtype=payload_dtype,
             config_hash=recsys_config_hash(self.cfg))
 
     def _build_server(self, pdb, hcfg: HPSConfig, dense: Dict, *,
@@ -889,7 +890,8 @@ class Model:
         from repro.serve.server import InferenceServer
         hps = HPS(self.name, self.cfg.tables, pdb, vdb=vdb, bus=bus,
                   cache_capacity=hcfg.cache_capacity,
-                  cache_shards=hcfg.cache_shards)
+                  cache_shards=hcfg.cache_shards,
+                  payload_dtype=hcfg.payload_dtype)
         wide_hps = None
         if hcfg.wide:
             # the wide branch shares the bus (its *_wide topics mark its
@@ -898,7 +900,8 @@ class Model:
             wide_hps = HPS(self.name, wide_tables(self.cfg), pdb,
                            vdb=vdb, bus=bus,
                            cache_capacity=hcfg.cache_capacity,
-                           cache_shards=hcfg.cache_shards)
+                           cache_shards=hcfg.cache_shards,
+                           payload_dtype=hcfg.payload_dtype)
         return InferenceServer(self._model, dense, hps,
                                wide_hps=wide_hps,
                                max_batch=hcfg.max_batch,
@@ -906,7 +909,8 @@ class Model:
 
     def deploy(self, directory: str, *, cache_capacity: int = 4096,
                cache_shards: int = 1, refresh_budget: int = 512,
-               max_batch: int = 1024, vdb=None, bus=None):
+               max_batch: int = 1024, payload_dtype: str = "f32",
+               vdb=None, bus=None):
         """Write the serving bundle and return a ready InferenceServer.
 
         The bundle — ``pdb/`` (every table, wide twins included),
@@ -915,6 +919,23 @@ class Model:
         later with no Python object from this process. To serve SEVERAL
         models from one bundle/storage backend, see
         :func:`deploy_ensemble`.
+
+        ``payload_dtype`` sets the L1 storage precision and persists in
+        ps.json, so a config-driven rebuild serves the exact same mode:
+
+        * ``"f32"`` (default) — bit-exact with the uncompressed store.
+        * ``"f16"`` — half the HBM bytes per resident row; rows downcast
+          on insert/refresh and widen to f32 inside the gather.
+        * ``"int8"`` — ~4x fewer payload bytes (plus one f32 scale per
+          row): rows are per-row absmax-quantized on insert/refresh and
+          dequantized INSIDE the fused Pallas gather kernel, so the
+          pooled ``[B, T, D]`` output stays f32 and a single jitted
+          dispatch. At a fixed HBM budget that is 2-4x more resident hot
+          rows — a direct L1 hit-rate (and therefore qps) lever.
+
+        The PDB/VDB always hold full-precision rows; only the L1 payload
+        is compressed, and dirty-row refreshes requantize from the
+        full-precision lower levels (never from their own rounded rows).
         """
         if self._params is None:
             raise RuntimeError("fit() or load() before deploy()")
@@ -924,7 +945,7 @@ class Model:
         hcfg = self._write_bundle_member(
             pdb, directory, "", cache_capacity=cache_capacity,
             cache_shards=cache_shards, refresh_budget=refresh_budget,
-            max_batch=max_batch)
+            max_batch=max_batch, payload_dtype=payload_dtype)
         with open(os.path.join(directory, "ps.json"), "w") as f:
             json.dump(hps_config_to_dict(hcfg), f, indent=1)
         return self._build_server(pdb, hcfg, self.dense_params(),
@@ -962,6 +983,8 @@ def deploy_ensemble(models: Sequence[Model], directory: str, *,
                     cache_budget: Optional[int] = None,
                     cache_shards: int = 1,
                     refresh_budget: int = 512, max_batch: int = 1024,
+                    payload_dtype: str = "f32",
+                    rebalance_interval_s: Optional[float] = None,
                     vdb=None, bus=None):
     """Write ONE multi-model serving bundle and return a ready
     :class:`~repro.serve.server.MultiModelServer`.
@@ -985,6 +1008,17 @@ def deploy_ensemble(models: Sequence[Model], directory: str, *,
     ``cache_capacity=<int>`` for a uniform per-model capacity, or a
     ``{model_name: rows}`` dict to pin specific members (unpinned ones
     keep their hotness share).
+
+    ``rebalance_interval_s`` (opt-in, default off) re-splits that shared
+    row budget periodically from *observed* per-model L1 miss pressure
+    instead of the static declared hotness: the serving loop feeds the
+    :class:`~repro.serve.server.MultiModelServer` rebalancer, which
+    resizes member caches (hottest rows retained) at most once per
+    interval. Leave it ``None`` for latency-critical serving — a resize
+    recompiles the pooled gather for the new payload shape.
+
+    ``payload_dtype`` applies to every member's L1 (see
+    :meth:`Model.deploy` for the precision modes).
     """
     from repro.core.hps.message_bus import MessageBus
     from repro.core.hps.persistent_db import PersistentDB
@@ -1023,11 +1057,13 @@ def deploy_ensemble(models: Sequence[Model], directory: str, *,
         hcfg = m._write_bundle_member(
             pdb, directory, m.name, cache_capacity=capacities[m.name],
             cache_shards=cache_shards, refresh_budget=refresh_budget,
-            max_batch=max_batch)
+            max_batch=max_batch, payload_dtype=payload_dtype)
         hcfgs.append(hcfg)
         servers[m.name] = m._build_server(pdb, hcfg, m.dense_params(),
                                           vdb=vdb, bus=bus)
     ens = EnsembleConfig(models=tuple(hcfgs))
     with open(os.path.join(directory, "ps.json"), "w") as f:
         json.dump(ensemble_config_to_dict(ens), f, indent=1)
-    return MultiModelServer(servers, vdb=vdb, pdb=pdb, bus=bus)
+    return MultiModelServer(servers, vdb=vdb, pdb=pdb, bus=bus,
+                            cache_budget=budget,
+                            rebalance_interval_s=rebalance_interval_s)

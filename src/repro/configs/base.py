@@ -132,7 +132,16 @@ class HPSConfig:
     cache_shards: int = 1
     refresh_budget: int = 512
     max_batch: int = 1024
+    #: L1 storage precision: "f32" (bit-exact), "f16", or "int8"
+    #: (per-row absmax scales; dequantized inside the gather kernel)
+    payload_dtype: str = "f32"
     config_hash: str = ""
+
+    def __post_init__(self):
+        if self.payload_dtype not in ("f32", "f16", "int8"):
+            raise ValueError(
+                f"payload_dtype must be one of ('f32', 'f16', 'int8'), "
+                f"got {self.payload_dtype!r}")
 
 
 def hps_config_to_dict(cfg: HPSConfig) -> Dict:

@@ -69,7 +69,7 @@ class LookupPlan:
     __slots__ = ("slots", "ov_idx", "ov_rows", "payload")
 
     def __init__(self, slots: np.ndarray, ov_idx: np.ndarray,
-                 ov_rows: np.ndarray, payload: Optional[jax.Array]):
+                 ov_rows: np.ndarray, payload):
         self.slots = slots
         self.ov_idx = ov_idx
         self.ov_rows = ov_rows
@@ -98,18 +98,24 @@ class DeviceEmbeddingCache:
     def __init__(self, capacity: int, dim: int, *,
                  fetch_fn: Callable[[np.ndarray], np.ndarray],
                  decay: float = 0.99, shards: int = 1, mesh=None,
-                 refresh_chunk_rows: int = 1024):
+                 refresh_chunk_rows: int = 1024,
+                 payload_dtype: str = "f32"):
         """``fetch_fn(missing_ids) -> rows`` pulls from VDB/PDB.
 
         ``shards``/``mesh`` select the striped payload layout (see
         ``payload_store``); ``shards=1`` is the classic single payload.
+        ``payload_dtype`` selects the storage precision (f32/f16/int8) —
+        inserts and refreshes quantize on the way in, the gather
+        dequantizes in-kernel, so everything in this file stays f32.
         """
         self.capacity = capacity
         self.dim = dim
         self.fetch_fn = fetch_fn
         self.decay = decay
+        self.payload_dtype = payload_dtype
         self._store = ShardedPayloadStore(capacity, dim, shards=shards,
-                                          mesh=mesh)
+                                          mesh=mesh,
+                                          payload_dtype=payload_dtype)
         self._id_of = np.full(capacity, -1, np.int64)
         self._freq = np.zeros(capacity, np.float64)
         self._next_free = 0
@@ -138,8 +144,9 @@ class DeviceEmbeddingCache:
         return self._store.shards
 
     @property
-    def payload(self) -> jax.Array:
-        """Current payload snapshot (pending device stage flushed)."""
+    def payload(self):
+        """Current ``(payload, scales)`` snapshot pair (pending device
+        stage flushed; ``scales`` is None outside int8 mode)."""
         with self._lock:
             self._flush_pending_locked()
             return self._store.snapshot()
@@ -192,7 +199,7 @@ class DeviceEmbeddingCache:
                 self._pending_plan = plan
             return plan
 
-    def commit(self, plan: LookupPlan) -> jax.Array:
+    def commit(self, plan: LookupPlan):
         """DEVICE stage: dispatch the plan's deferred payload scatter
         (if still pending) and return its lock-consistent snapshot.
         Gather from IT, not ``self.payload`` — a later query may evict
@@ -203,8 +210,7 @@ class DeviceEmbeddingCache:
         return plan.payload
 
     def acquire_slots(self, ids: np.ndarray
-                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                 jax.Array]:
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, tuple]:
         """Both stages back-to-back (the unpipelined path).
 
         Returns ``(slots [n], ov_idx [m], ov_rows [m, D], payload)``:
@@ -404,6 +410,55 @@ class DeviceEmbeddingCache:
                 break
             total += self.refresh_chunk(chunk)
         return total
+
+    # -- capacity rebalance (ensemble budget re-split) ---------------------------
+
+    def resize(self, new_capacity: int) -> int:
+        """Rebuild the cache at ``new_capacity``, retaining the hottest
+        resident rows (LFU counters order the survivors). Used by the
+        ensemble budget rebalancer — a rare control-plane operation, not
+        a serving-path one. Returns how many rows were retained.
+
+        The survivors are re-pulled from the lower levels so compressed
+        payloads requantize from full-precision sources, never from
+        their own dequantized rows.
+        """
+        if new_capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {new_capacity}")
+        if self._store.shards > new_capacity:
+            raise ValueError(
+                f"new_capacity={new_capacity} is below the store's "
+                f"shard count {self._store.shards}")
+        with self._lock:
+            if new_capacity == self.capacity:
+                return self._next_free
+            self._flush_pending_locked()
+            n_occ = self._next_free
+            keep = min(n_occ, new_capacity)
+            ids = freqs = rows = None
+            if keep:
+                hot = np.argsort(-self._freq[:n_occ],
+                                 kind="stable")[:keep].astype(np.int64)
+                ids = self._id_of[hot].copy()
+                freqs = self._freq[hot].copy()
+                # lock-ok: LOCK002 resize is a rare control-plane op; re-pulling survivors under the lock keeps index and payload atomic
+                rows = np.asarray(self.fetch_fn(ids), np.float32)
+            self._store = ShardedPayloadStore(
+                new_capacity, self.dim, shards=self._store.shards,
+                mesh=self._store.mesh, axis=self._store.axis,
+                payload_dtype=self.payload_dtype)
+            self.capacity = new_capacity
+            self._id_of = np.full(new_capacity, -1, np.int64)
+            self._freq = np.zeros(new_capacity, np.float64)
+            self._dirty = np.zeros(new_capacity, bool)
+            self._next_free = keep
+            if keep:
+                dest = np.arange(keep, dtype=np.int64)
+                self._id_of[dest] = ids
+                self._freq[dest] = freqs
+                self._scatter_locked(dest, rows)
+            self._rebuild_index_locked()
+            return keep
 
     def start_refresh(self, interval_s: float):
         def loop():

@@ -53,18 +53,24 @@ from repro.kernels import ops
 
 @functools.partial(jax.jit, static_argnames=("combiners", "apply_mean",
                                              "shards", "mesh", "axis"))
-def _pooled_stack(payloads: Tuple[jax.Array, ...],
+def _pooled_stack(payloads: Tuple[tuple, ...],
                   slots: Tuple[jax.Array, ...],
                   combiners: Tuple[str, ...],
                   apply_mean: bool = True, shards: int = 1,
                   mesh=None, axis: str = "cache") -> jax.Array:
-    """One device dispatch: per-table pooled gathers stacked to [B, T, D]."""
+    """One device dispatch: per-table pooled gathers stacked to [B, T, D].
+
+    Each payload is a ``(payload, scales)`` snapshot pair; compressed
+    stores dequantize inside the fused gather kernel, so the stacked
+    output is f32 regardless of storage precision — still ONE dispatch.
+    """
     outs = []
-    for p, s, comb in zip(payloads, slots, combiners):
+    for (p, sc), s, comb in zip(payloads, slots, combiners):
         if shards == 1:
-            pooled = ops.pooled_cache_lookup(p, s)       # [B, D] sum over H
+            pooled = ops.pooled_cache_lookup(p, s, sc)   # [B, D] sum over H
         else:
-            pooled = ops.sharded_pooled_lookup(p, s, mesh=mesh, axis=axis)
+            pooled = ops.sharded_pooled_lookup(p, s, scales=sc,
+                                               mesh=mesh, axis=axis)
         if comb == "mean" and apply_mean:
             denom = jnp.maximum((s >= 0).sum(axis=1, keepdims=True), 1)
             pooled = pooled / denom.astype(pooled.dtype)
@@ -90,13 +96,16 @@ class HPS:
                  cache_capacity: int = 4096,
                  bus: Optional[MessageBus] = None,
                  cache_shards: int = 1, cache_mesh=None,
-                 refresh_chunk_rows: int = 1024):
+                 refresh_chunk_rows: int = 1024,
+                 payload_dtype: str = "f32"):
         self.model_name = model_name
         self.tables = tuple(tables)
         self.pdb = pdb
         self.vdb = vdb or VolatileDB()
         self.cache_shards = cache_shards
         self.cache_mesh = cache_mesh
+        self.cache_capacity = cache_capacity
+        self.payload_dtype = payload_dtype
         # O(1) per-table config (the L2/L3 fetch path runs per miss batch)
         self._table_cfg: Dict[str, EmbeddingTableConfig] = {
             t.name: t for t in tables}
@@ -111,7 +120,8 @@ class HPS:
                 min(cache_capacity, t.vocab_size), t.dim,
                 fetch_fn=self._make_fetch(t.name),
                 shards=cache_shards, mesh=cache_mesh,
-                refresh_chunk_rows=refresh_chunk_rows)
+                refresh_chunk_rows=refresh_chunk_rows,
+                payload_dtype=payload_dtype)
         self.consumer = Consumer(bus, model_name) if bus else None
         self._host_pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
@@ -517,6 +527,16 @@ class HPS:
     def refresh_caches(self) -> int:
         """Full re-pull of every resident row (offline convenience)."""
         return sum(c.refresh_once() for c in self.caches.values())
+
+    def resize_caches(self, capacity: int) -> int:
+        """Rebuild every table's L1 at ``min(capacity, vocab)`` rows,
+        keeping the hottest residents (the ensemble budget rebalancer's
+        entry point). Returns total rows retained across tables."""
+        kept = 0
+        for t in self.tables:
+            kept += self.caches[t.name].resize(min(capacity, t.vocab_size))
+        self.cache_capacity = capacity
+        return kept
 
     def start_refresh(self, interval_s: float):
         for c in self.caches.values():

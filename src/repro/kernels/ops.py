@@ -114,21 +114,56 @@ def _cache_gather_jit(payload, slots, block_n, block_c, use_kernel):
     return out[:n]
 
 
-def pooled_cache_lookup(payload: jax.Array, slots: jax.Array) -> jax.Array:
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_c", "use_kernel"))
+def _dequant_cache_gather_jit(payload, scales, slots, block_n, block_c,
+                              use_kernel):
+    """Compressed twin of ``_cache_gather_jit``: ``payload [C, D]`` in its
+    storage dtype plus a per-row f32 ``scales [C]`` — one fused
+    dequantize-gather dispatch (the scale is applied inside the kernel's
+    one-hot matmul, never as a second pass over the rows)."""
+    if not use_kernel:
+        from repro.kernels import ref as _ref
+        return _ref.dequant_gather_ref(payload, scales, slots)
+    from repro.kernels import hps_gather as _hg
+    c, d = payload.shape
+    n = slots.shape[0]
+    bn = min(block_n, _round_up(n, 8))
+    bc = min(block_c, _round_up(c, 8))
+    cp, np_ = _round_up(c, bc), _round_up(n, bn)
+    ppad = jnp.pad(payload, ((0, cp - c), (0, 0)))
+    scpad = jnp.pad(scales.astype(jnp.float32), (0, cp - c))[:, None]
+    spad = jnp.pad(slots.astype(jnp.int32), (0, np_ - n),
+                   constant_values=-1)[:, None]
+    out = _hg.dequant_gather_rows(ppad, scpad, spad, block_n=bn, block_c=bc,
+                                  interpret=_interpret())
+    return out[:n]
+
+
+def pooled_cache_lookup(payload: jax.Array, slots: jax.Array,
+                        scales=None) -> jax.Array:
     """Serving-path pooled gather: ``payload [C, D]``, ``slots [B, H]``
     (-1 = hole) -> sum-pooled ``[B, D]``.
 
     Inference-only (no vjp): the MXU one-hot-matmul kernel on TPU, the
     equivalent XLA take+sum elsewhere — same switch as ``cache_gather``.
+    With per-row ``scales`` (int8 payloads) the gather is the fused
+    dequantize kernel and the pooling sum stays inside the same jit.
     """
+    if scales is not None:
+        b, h = slots.shape
+        rows = _dequant_cache_gather_jit(payload, scales, slots.reshape(-1),
+                                         256, 512, not _interpret())
+        return rows.reshape(b, h, -1).sum(axis=1)
     if _interpret():
         from repro.kernels import ref as _ref
         return _ref.embedding_lookup_ref(payload, slots)
     return fused_embedding_lookup(payload, slots)
 
 
-def cache_gather(payload: jax.Array, slots, *, block_n: int = 256,
-                 block_c: int = 512, use_kernel=None) -> jax.Array:
+def cache_gather(payload: jax.Array, slots, *, scales=None,
+                 block_n: int = 256, block_c: int = 512,
+                 use_kernel=None) -> jax.Array:
     """``payload [C, D]``, ``slots [N]`` (-1 = hole -> zero row) -> ``[N, D]``.
 
     Jitted wrapper: one device dispatch per call after the first trace,
@@ -136,9 +171,14 @@ def cache_gather(payload: jax.Array, slots, *, block_n: int = 256,
     On TPU the read is the ``hps_gather`` Pallas kernel; elsewhere the
     same jit lowers to the equivalent XLA gather (``use_kernel=True``
     forces the kernel in interpret mode — how tests validate it).
+    ``scales`` (per-row f32, int8 payloads) switches to the fused
+    dequantize-gather kernel — still one dispatch.
     """
     if use_kernel is None:
         use_kernel = not _interpret()
+    if scales is not None:
+        return _dequant_cache_gather_jit(payload, scales, jnp.asarray(slots),
+                                         block_n, block_c, use_kernel)
     return _cache_gather_jit(payload, jnp.asarray(slots), block_n, block_c,
                              use_kernel)
 
@@ -164,8 +204,17 @@ def _sharded_gather_flat(stripes, slots, use_kernel):
                              256, 512, use_kernel)
 
 
-def sharded_cache_gather(stripes: jax.Array, slots, *, mesh=None,
-                         axis: str = "cache", use_kernel=None) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _dequant_sharded_gather_flat(stripes, scales, slots, use_kernel):
+    flat = stripes.reshape(-1, stripes.shape[-1])
+    return _dequant_cache_gather_jit(flat, scales.reshape(-1),
+                                     flatten_striped_slots(stripes, slots),
+                                     256, 512, use_kernel)
+
+
+def sharded_cache_gather(stripes: jax.Array, slots, *, scales=None,
+                         mesh=None, axis: str = "cache",
+                         use_kernel=None) -> jax.Array:
     """``stripes [N, Cl, D]``, GLOBAL ``slots [n]`` (-1 = hole) ->
     ``[n, D]`` f32.
 
@@ -174,32 +223,54 @@ def sharded_cache_gather(stripes: jax.Array, slots, *, mesh=None,
     one psum — the payload never moves). Without one, the same striped
     layout is served from host-shard stripes in a single jitted dispatch
     via the flattened-slot remap, which is bit-identical row-wise.
+    ``scales [N, Cl]`` (int8 payloads) rides the same stripe layout —
+    the fused dequantize kernel runs per device, same single psum.
     """
     if use_kernel is None:
         use_kernel = not _interpret()
     slots = jnp.asarray(slots)
     if mesh is not None and axis in mesh.shape and mesh.shape[axis] > 1:
         from repro.kernels import hps_gather as _hg
+        if scales is not None:
+            return _hg.sharded_dequant_gather_rows(
+                stripes, scales, slots, mesh=mesh, axis=axis,
+                use_kernel=use_kernel, interpret=_interpret())
         return _hg.sharded_gather_rows(stripes, slots, mesh=mesh, axis=axis,
                                        use_kernel=use_kernel,
                                        interpret=_interpret())
+    if scales is not None:
+        return _dequant_sharded_gather_flat(stripes, scales, slots,
+                                            use_kernel)
     return _sharded_gather_flat(stripes, slots, use_kernel)
 
 
 def sharded_pooled_lookup(stripes: jax.Array, slots: jax.Array, *,
-                          mesh=None, axis: str = "cache") -> jax.Array:
+                          scales=None, mesh=None,
+                          axis: str = "cache") -> jax.Array:
     """Pooled serving gather off the striped payload: ``stripes
     [N, Cl, D]``, GLOBAL ``slots [B, H]`` (-1 = hole) -> sum-pooled
     ``[B, D]`` — the striped twin of ``pooled_cache_lookup``."""
     if mesh is not None and axis in mesh.shape and mesh.shape[axis] > 1:
         from repro.kernels import hps_gather as _hg
         b, h = slots.shape
-        rows = _hg.sharded_gather_rows(stripes, slots.reshape(-1),
-                                       mesh=mesh, axis=axis,
-                                       use_kernel=not _interpret(),
-                                       interpret=_interpret())
+        if scales is not None:
+            rows = _hg.sharded_dequant_gather_rows(
+                stripes, scales, slots.reshape(-1), mesh=mesh, axis=axis,
+                use_kernel=not _interpret(), interpret=_interpret())
+        else:
+            rows = _hg.sharded_gather_rows(stripes, slots.reshape(-1),
+                                           mesh=mesh, axis=axis,
+                                           use_kernel=not _interpret(),
+                                           interpret=_interpret())
         return rows.reshape(b, h, -1).sum(axis=1)
     flat = stripes.reshape(-1, stripes.shape[-1])
+    if scales is not None:
+        b, h = slots.shape
+        rows = _dequant_cache_gather_jit(
+            flat, scales.reshape(-1),
+            flatten_striped_slots(stripes, slots).reshape(-1),
+            256, 512, not _interpret())
+        return rows.reshape(b, h, -1).sum(axis=1)
     return pooled_cache_lookup(flat, flatten_striped_slots(stripes, slots))
 
 

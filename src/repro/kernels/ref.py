@@ -46,6 +46,31 @@ def cache_gather_ref(payload: jax.Array, slots: jax.Array) -> jax.Array:
     return jnp.where(valid[:, None], rows, 0.0)
 
 
+def dequant_gather_ref(payload: jax.Array, scales: jax.Array,
+                       slots: jax.Array) -> jax.Array:
+    """``payload [C, D]`` (any storage dtype), ``scales [C]`` f32 per-row
+    scale, ``slots [N]`` int (-1 = hole) -> ``[N, D]`` f32 dequantized
+    rows: ``payload[s].astype(f32) * scales[s]``."""
+    valid = slots >= 0
+    safe = jnp.where(valid, slots, 0)
+    rows = jnp.take(payload, safe, axis=0).astype(jnp.float32)
+    rows = rows * jnp.take(scales, safe).astype(jnp.float32)[:, None]
+    return jnp.where(valid[:, None], rows, 0.0)
+
+
+def dequant_sharded_gather_ref(stripes: jax.Array, scales: jax.Array,
+                               slots: jax.Array) -> jax.Array:
+    """Striped dequantizing gather oracle: ``stripes [N, Cl, D]``,
+    ``scales [N, Cl]`` f32, ``slots [n]`` GLOBAL slot ids -> ``[n, D]``
+    f32; slot ``s`` lives at ``stripes[s % N, s // N]``."""
+    n_stripes = stripes.shape[0]
+    valid = slots >= 0
+    safe = jnp.where(valid, slots, 0)
+    rows = stripes[safe % n_stripes, safe // n_stripes].astype(jnp.float32)
+    sc = scales[safe % n_stripes, safe // n_stripes].astype(jnp.float32)
+    return jnp.where(valid[:, None], rows * sc[:, None], 0.0)
+
+
 def sharded_gather_ref(stripes: jax.Array, slots: jax.Array) -> jax.Array:
     """Striped-payload gather oracle: ``stripes [N, Cl, D]``, ``slots
     [n]`` GLOBAL slot ids (-1 = hole) -> ``[n, D]`` f32; global slot

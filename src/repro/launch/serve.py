@@ -53,7 +53,8 @@ def load_ps_config(path: str):
 
 def _build_model_server(base: str, hcfg: HPSConfig, pdb, *, mesh=None,
                         vdb=None, bus=None,
-                        cache_capacity: Optional[int] = None):
+                        cache_capacity: Optional[int] = None,
+                        payload_dtype: Optional[str] = None):
     """One model's HPS(+wide)+InferenceServer over an open PDB: reload
     the graph + dense weights from the bundle, then hand off to the same
     ``Model._build_server`` wiring the in-process deploy path uses."""
@@ -68,6 +69,9 @@ def _build_model_server(base: str, hcfg: HPSConfig, pdb, *, mesh=None,
     if cache_capacity is not None:      # operator override of the
         hcfg = dataclasses.replace(     # bundle's (hotness-sized) L1
             hcfg, cache_capacity=cache_capacity)
+    if payload_dtype is not None:       # operator override of the L1
+        hcfg = dataclasses.replace(     # storage precision (safe: the
+            hcfg, payload_dtype=payload_dtype)  # PDB/VDB rows stay f32)
     m = Model.from_json(os.path.join(base, hcfg.graph_path), mesh=mesh)
     m.compile()
     if hcfg.config_hash and \
@@ -98,7 +102,10 @@ def _build_model_server(base: str, hcfg: HPSConfig, pdb, *, mesh=None,
 
 
 def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
-                             bus=None, cache_capacity=None):
+                             bus=None, cache_capacity=None,
+                             payload_dtype: Optional[str] = None,
+                             cache_budget: Optional[int] = None,
+                             rebalance_interval_s: Optional[float] = None):
     """ps.json -> ready server (the Triton-ensemble analogue).
 
     Single-model bundles return ``(InferenceServer, api.Model)``;
@@ -111,6 +118,13 @@ def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
     ensemble bundle carries hotness-proportional sizes by default): an
     ``int`` applies to every model, a ``{model_name: rows}`` dict pins
     specific members and leaves the rest on their bundled value.
+
+    ``payload_dtype`` overrides the bundle's L1 storage precision for
+    every member (bundles deployed before the knob existed read back as
+    ``"f32"``). ``cache_budget`` + ``rebalance_interval_s`` arm the
+    ensemble's observed-miss-pressure budget rebalancer (opt-in, see
+    :class:`~repro.serve.server.MultiModelServer`); single-model bundles
+    ignore them.
     """
     from repro.core.hps.persistent_db import PersistentDB
     from repro.core.hps.volatile_db import VolatileDB
@@ -127,7 +141,8 @@ def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
     if isinstance(cfg, HPSConfig):
         pdb = PersistentDB(os.path.join(base, cfg.pdb_root))
         return _build_model_server(base, cfg, pdb, mesh=mesh, vdb=vdb,
-                                   bus=bus, cache_capacity=_cap(cfg.model))
+                                   bus=bus, cache_capacity=_cap(cfg.model),
+                                   payload_dtype=payload_dtype)
 
     assert isinstance(cfg, EnsembleConfig)
     pdb = PersistentDB(os.path.join(base, cfg.models[0].pdb_root))
@@ -138,8 +153,11 @@ def build_server_from_config(ps_path: str, *, mesh=None, vdb=None,
     for hcfg in cfg.models:
         servers[hcfg.model], models[hcfg.model] = _build_model_server(
             base, hcfg, pdb, mesh=mesh, vdb=vdb, bus=bus,
-            cache_capacity=_cap(hcfg.model))
-    return MultiModelServer(servers, vdb=vdb, pdb=pdb, bus=bus), models
+            cache_capacity=_cap(hcfg.model), payload_dtype=payload_dtype)
+    return MultiModelServer(servers, vdb=vdb, pdb=pdb, bus=bus,
+                            cache_budget=cache_budget,
+                            rebalance_interval_s=rebalance_interval_s), \
+        models
 
 
 def _train_model(arch: str, train_steps: int, batch: int):
@@ -158,37 +176,44 @@ def _train_model(arch: str, train_steps: int, batch: int):
 
 def _train_and_deploy(archs, train_steps: int, batch: int,
                       deploy_dir: str,
-                      cache_capacity: Optional[int]) -> str:
+                      cache_capacity: Optional[int],
+                      payload_dtype: str = "f32") -> str:
     """Demo path: train the recipes briefly, write ONE deployment
     bundle (single-model or ensemble), return the ps.json path.
     ``cache_capacity=None`` lets ensembles size per-model L1 caches
-    from table hotness."""
+    from table hotness; ``payload_dtype`` persists in the bundle's
+    ps.json, so the rebuilt server serves the same precision mode."""
     models = [_train_model(a, train_steps, batch) for a in archs]
     if len(models) == 1:
         models[0].deploy(deploy_dir,
-                         cache_capacity=cache_capacity or 2048)
+                         cache_capacity=cache_capacity or 2048,
+                         payload_dtype=payload_dtype)
     else:
         from repro.api import deploy_ensemble
         deploy_ensemble(models, deploy_dir,
-                        cache_capacity=cache_capacity)
+                        cache_capacity=cache_capacity,
+                        payload_dtype=payload_dtype)
     return os.path.join(deploy_dir, "ps.json")
 
 
 def _serve_bundle(ps_path: str, requests: int, batch: int, *,
-                  sanitize: bool = False) -> None:
+                  sanitize: bool = False,
+                  payload_dtype: Optional[str] = None) -> None:
     """Stand the bundle back up, push requests through ``submit`` and
     print the serving picture (per model for ensembles).
 
     ``sanitize=True`` arms the hot-path sanitizer over the measured
     phase and fails the run unless the serve loops performed exactly ONE
     device->host sync per delivered group and ZERO post-warmup
-    recompiles — the pipeline invariants, enforced in CI."""
+    recompiles — the pipeline invariants, enforced in CI.
+    ``payload_dtype`` overrides the bundle's L1 storage precision."""
     from contextlib import nullcontext
 
     from repro.data.synthetic import SyntheticCTR
     from repro.serve.server import MultiModelServer
 
-    built, loaded = build_server_from_config(ps_path)
+    built, loaded = build_server_from_config(ps_path,
+                                             payload_dtype=payload_dtype)
     if isinstance(built, MultiModelServer):
         servers = {name: built[name] for name in built.models}
         models = loaded
@@ -274,6 +299,50 @@ def _serve_bundle(ps_path: str, requests: int, batch: int, *,
               f"L2 hits={stats['l2_hits']} misses={stats['l2_misses']}; "
               f"L3 fetches={sum(stats['l3_fetches']['calls'].values())}")
 
+    _crosscheck_compressed(ps_path, servers, models, data,
+                           override=payload_dtype)
+
+
+#: max-abs prediction deviation a compressed bundle may show against an
+#: f32-reference rebuild of the same bundle (post-sigmoid outputs)
+_PAYLOAD_TOL = {"f16": 0.05, "int8": 0.1}
+
+
+def _crosscheck_compressed(ps_path: str, servers, models, data, *,
+                           override: Optional[str] = None) -> None:
+    """Compressed-payload bundles: rebuild an f32-reference server from
+    the SAME bundle (the dtype override re-pulls full-precision rows
+    from the shared PDB) and require one prediction batch per compressed
+    model to stay within quantization tolerance. Runs after the measured
+    phase, so its extra compiles/syncs never trip the sanitizer."""
+    cfg = load_ps_config(ps_path)
+    members = cfg.models if isinstance(cfg, EnsembleConfig) else (cfg,)
+    dtypes = {m.model: override or m.payload_dtype for m in members}
+    if all(dt == "f32" for dt in dtypes.values()):
+        return
+    from repro.serve.server import MultiModelServer
+    ref_built, _ = build_server_from_config(ps_path, payload_dtype="f32")
+    if isinstance(ref_built, MultiModelServer):
+        refs = {name: ref_built[name] for name in ref_built.models}
+    else:
+        refs = {next(iter(servers)): ref_built}
+    with next(iter(models.values())).mesh:
+        for n, s in servers.items():
+            if dtypes[n] == "f32":
+                continue
+            req = data[n].batch(77_000)
+            got = s.predict(req["dense"], req["cat"])
+            want = refs[n].predict(req["dense"], req["cat"])
+            dev = float(np.abs(got - want).max())
+            tol = _PAYLOAD_TOL[dtypes[n]]
+            if dev > tol:       # explicit raise: asserts vanish under -O
+                raise SystemExit(
+                    f"model {n!r}: {dtypes[n]} payload predictions "
+                    f"deviate {dev:.4f} from the f32 reference "
+                    f"(tolerance {tol})")
+            print(f"[{n}] {dtypes[n]} payload within {tol} of the f32 "
+                  f"reference rebuild (max abs dev {dev:.5f})")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -292,6 +361,13 @@ def main():
     ap.add_argument("--cache-capacity", type=int, default=None,
                     help="per-model L1 rows (default: 2048 for a single "
                          "model; hotness-proportional for ensembles)")
+    ap.add_argument("--payload-dtype", default=None,
+                    choices=("f32", "f16", "int8"),
+                    help="L1 payload storage precision: baked into the "
+                         "bundle in demo mode, or an override when "
+                         "serving an existing --config bundle; non-f32 "
+                         "modes additionally cross-check one prediction "
+                         "per model against an f32-reference rebuild")
     ap.add_argument("--deploy-dir", default=None)
     ap.add_argument("--sanitize", action="store_true",
                     help="arm the hot-path sanitizer over the measured "
@@ -309,11 +385,17 @@ def main():
             ap.error(f"unknown arch(es) {bad}; choose from {known}")
         deploy_dir = args.deploy_dir or tempfile.mkdtemp(prefix="hps_")
         ps_path = _train_and_deploy(archs, args.train_steps, args.batch,
-                                    deploy_dir, args.cache_capacity)
+                                    deploy_dir, args.cache_capacity,
+                                    payload_dtype=args.payload_dtype
+                                    or "f32")
         print(f"deployment bundle: {deploy_dir}")
+        payload_override = None          # the bundle already carries it
+    else:
+        payload_override = args.payload_dtype
 
     _serve_bundle(ps_path, args.requests, args.batch,
-                  sanitize=args.sanitize)
+                  sanitize=args.sanitize,
+                  payload_dtype=payload_override)
 
 
 if __name__ == "__main__":

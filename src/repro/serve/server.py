@@ -44,7 +44,7 @@ import queue
 import threading
 import time
 from collections import deque
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +126,11 @@ class InferenceServer:
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
         self.latencies_ms: List[float] = []
+        #: control-plane hook run at the end of every ``_refresh_tick``
+        #: (the ensemble budget rebalancer registers itself here); must
+        #: be cheap or internally rate-limited — it runs on the serve
+        #: loop between pipeline stages
+        self.on_tick: Optional[Callable[[], None]] = None
 
     def _record_latency(self, t0: float) -> None:
         ms = (time.perf_counter() - t0) * 1e3
@@ -211,6 +216,8 @@ class InferenceServer:
             with self._stats_lock:
                 self.updates_applied += applied
                 self.rows_refreshed += refreshed
+        if self.on_tick is not None:
+            self.on_tick()
 
     # -- queued/batched path --------------------------------------------------------
 
@@ -418,18 +425,51 @@ class MultiModelServer:
     another's tables at any level. Predictions are bit-exact with
     per-model in-process servers: sharing storage shares bytes, not
     values.
+
+    With ``cache_budget`` AND ``rebalance_interval_s`` set, the shared
+    L1 row budget is periodically RE-SPLIT from observed per-model miss
+    pressure (the deploy-time split is static declared hotness —
+    ``api.hotness_cache_capacities``): each member's serve loop tick
+    calls into the rebalancer, which at most once per interval re-splits
+    the budget proportional to each model's L1 miss delta since the last
+    split and resizes the member caches (hottest rows retained). Opt-in
+    because a resize recompiles the pooled gather for the new payload
+    shape — leave it off when the hot-path sanitizer's zero-recompile
+    contract matters more than cache efficiency.
     """
+
+    # Checked by `python -m repro.analysis`: rebalance bookkeeping is
+    # touched from every member's serve loop, so it lives behind the
+    # rebalance lock (acquired non-blocking — serving never waits on it).
+    _GUARDED_BY = {
+        "_last_counts": "_rebalance_lock",
+        "_last_rebalance": "_rebalance_lock",
+        "rebalances": "_rebalance_lock",
+    }
 
     def __init__(self, servers: Mapping[str, InferenceServer], *,
                  vdb: Optional[VolatileDB] = None,
                  pdb: Optional[PersistentDB] = None,
-                 bus: Optional[MessageBus] = None):
+                 bus: Optional[MessageBus] = None,
+                 cache_budget: Optional[int] = None,
+                 rebalance_interval_s: Optional[float] = None,
+                 rebalance_floor: int = 64):
         if not servers:
             raise ValueError("MultiModelServer needs at least one model")
         self.servers: Dict[str, InferenceServer] = dict(servers)
         self.vdb = vdb
         self.pdb = pdb
         self.bus = bus
+        self.cache_budget = cache_budget
+        self.rebalance_interval_s = rebalance_interval_s
+        self.rebalance_floor = rebalance_floor
+        self.rebalances = 0
+        self._rebalance_lock = threading.Lock()
+        self._last_counts: Dict[str, Tuple[int, int]] = {}
+        self._last_rebalance = time.monotonic()
+        if cache_budget is not None and rebalance_interval_s is not None:
+            for s in self.servers.values():
+                s.on_tick = self._rebalance_tick
 
     @property
     def models(self) -> List[str]:
@@ -453,6 +493,67 @@ class MultiModelServer:
                cat: np.ndarray) -> "queue.Queue":
         return self._server(model).submit(dense, cat)
 
+    # -- observed-hit-rate budget rebalance ----------------------------------
+
+    def _rebalance_tick(self) -> None:
+        """Serve-loop hook: re-split the shared L1 budget at most once
+        per ``rebalance_interval_s``. Non-blocking — if another member's
+        loop is mid-rebalance, this tick just returns."""
+        if not self._rebalance_lock.acquire(blocking=False):
+            return
+        try:  # the non-blocking acquire above holds the lock through here
+            now = time.monotonic()
+            # lock-ok: LOCK001 inside acquire(blocking=False)/finally-release — held, just not a with-block
+            if now - self._last_rebalance < self.rebalance_interval_s:
+                return
+            # lock-ok: LOCK001 inside acquire(blocking=False)/finally-release — held, just not a with-block
+            self._last_rebalance = now
+            # lock-ok: LOCK004 inside acquire(blocking=False)/finally-release — held, just not a with-block
+            self._rebalance_locked()
+        finally:
+            self._rebalance_lock.release()
+
+    def rebalance_now(self) -> Dict[str, int]:
+        """Force one budget re-split immediately (tests / operators);
+        returns the per-model capacities now in effect."""
+        with self._rebalance_lock:
+            self._last_rebalance = time.monotonic()
+            self._rebalance_locked()
+        return {name: s.hps.cache_capacity
+                for name, s in self.servers.items()}
+
+    def _rebalance_locked(self) -> None:
+        """Split ``cache_budget`` proportional to each model's observed
+        L1 miss delta since the last split (+1 smoothing so an idle
+        member keeps a foothold), floored so a cold member still serves,
+        and resize members whose share moved more than 10% — small
+        drifts are not worth the resize's gather recompile."""
+        demand: Dict[str, int] = {}
+        for name, s in self.servers.items():
+            hits = misses = 0
+            for c in s.hps.caches.values():
+                cnt = c.counters()
+                hits += cnt["hits"]
+                misses += cnt["misses"]
+            _, pm = self._last_counts.get(name, (0, 0))
+            self._last_counts[name] = (hits, misses)
+            demand[name] = (misses - pm) + 1
+        total = sum(demand.values())
+        moved = 0
+        for name, d in demand.items():
+            s = self.servers[name]
+            floor = max(self.rebalance_floor, s.hps.cache_shards)
+            cap = max(floor, int(round(self.cache_budget * d / total)))
+            cur = s.hps.cache_capacity
+            if abs(cap - cur) <= max(1, int(0.1 * cur)):
+                continue
+            s.hps.resize_caches(cap)
+            if s.wide_hps is not None:
+                s.wide_hps.resize_caches(cap)
+            moved += 1
+        if moved:
+            self.rebalances += 1
+
     def start(self):
         for s in self.servers.values():
             s.start()
@@ -467,7 +568,16 @@ class MultiModelServer:
         for name, s in self.servers.items():
             c = s.counters()
             out[name] = {"hps": s.hps.stats(),
+                         "cache_capacity": s.hps.cache_capacity,
                          "latency_ms": s.latency_percentiles(),
                          "updates_applied": c["updates_applied"],
                          "rows_refreshed": c["rows_refreshed"]}
         return out
+
+    def rebalance_stats(self) -> Dict:
+        """Budget-rebalancer picture: splits performed + current split."""
+        with self._rebalance_lock:
+            n = self.rebalances
+        return {"rebalances": n, "cache_budget": self.cache_budget,
+                "capacities": {name: s.hps.cache_capacity
+                               for name, s in self.servers.items()}}

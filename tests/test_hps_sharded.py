@@ -84,6 +84,64 @@ def test_sharded_store_scatter_gather_roundtrip():
         assert (out[-1] == 0).all()
 
 
+@pytest.mark.parametrize("n_stripes,cl,d,n", [(2, 24, 8, 7), (4, 16, 32, 64)])
+def test_sharded_dequant_gather_matches_ref(n_stripes, cl, d, n):
+    """Striped int8 stripes + per-row scales through the same flat-remap
+    and kernel entry points, vs the dequantizing oracle."""
+    rng = np.random.default_rng(n_stripes * 10 + n)
+    stripes = jnp.asarray(
+        rng.integers(-127, 128, size=(n_stripes, cl, d)).astype(np.int8))
+    scales = jnp.asarray(
+        rng.uniform(0.01, 2.0, size=(n_stripes, cl)).astype(np.float32))
+    slots = rng.integers(-1, n_stripes * cl, size=n)
+    want = ref.dequant_sharded_gather_ref(stripes, scales,
+                                          jnp.asarray(slots))
+    got = ops.sharded_cache_gather(stripes, slots, scales=scales)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    got_k = ops.sharded_cache_gather(stripes, slots, scales=scales,
+                                     use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", ["f16", "int8"])
+def test_sharded_store_compressed_roundtrip(dtype):
+    """Striped compressed store: scatter quantizes, gather dequantizes
+    in-kernel; every shard count serves the same values within the
+    mode's bound, and the -1 sentinel row stays exactly zero."""
+    rng = np.random.default_rng(6)
+    slots = np.arange(0, 60, 3, dtype=np.int64)
+    rows = rng.normal(size=(len(slots), 8)).astype(np.float32)
+    bound = 1e-2 if dtype == "f16" else \
+        float(np.abs(rows).max()) / 254.0 + 1e-6
+    for shards in (1, 3, 4):
+        st = ShardedPayloadStore(60, 8, shards=shards, payload_dtype=dtype)
+        st.scatter(slots, rows)
+        probe = np.concatenate([slots, [-1]])
+        out = np.asarray(st.gather(st.snapshot(), jnp.asarray(probe)))
+        assert out.dtype == np.float32
+        assert np.abs(out[:-1] - rows).max() <= bound
+        assert (out[-1] == 0).all()
+
+
+def test_sharded_hps_compressed_matches_f32_oracle(tmp_path):
+    """Striped + compressed end-to-end: HPS with cache_shards=4 and an
+    int8 L1 vs the same-stream f32 striped oracle."""
+    h32 = _hps(tmp_path, "c32", cache_capacity=32, cache_shards=4)
+    h8 = _hps(tmp_path, "c8", cache_capacity=32, cache_shards=4,
+              payload_dtype="int8")
+    rng = np.random.default_rng(14)
+    for _ in range(6):
+        cat = rng.integers(-1, 120, size=(8, 3, 4)).astype(np.int32)
+        a = np.asarray(h32.lookup(cat))
+        b = np.asarray(h8.lookup(cat))
+        assert np.abs(a - b).max() <= 1e-1
+    # identical index decisions: compression changes bytes, not policy
+    assert {k: c.hits for k, c in h32.caches.items()} == \
+        {k: c.hits for k, c in h8.caches.items()}
+
+
 def test_sharded_store_validation():
     with pytest.raises(ValueError, match="shards"):
         ShardedPayloadStore(4, 8, shards=8)
@@ -122,6 +180,14 @@ rows = rng.normal(size=(len(sl), 8)).astype(np.float32)
 st.scatter(sl, rows)
 out = np.asarray(st.gather(st.snapshot(), jnp.asarray(sl)))
 np.testing.assert_array_equal(out, rows)
+# compressed stripes over the same mesh: scales shard with their
+# stripes through the one-psum path, values stay within the int8 bound
+sq = ShardedPayloadStore(120, 8, shards=8, mesh=mesh,
+                         payload_dtype="int8")
+sq.scatter(sl, rows)
+qout = np.asarray(sq.gather(sq.snapshot(), jnp.asarray(sl)))
+assert qout.dtype == np.float32
+assert np.abs(qout - rows).max() <= np.abs(rows).max() / 254.0 + 1e-6
 print("multi-device striped gather OK")
 """
     code = ("import os\nos.environ['XLA_FLAGS'] = "

@@ -281,6 +281,119 @@ def test_lookup_overflow_path_exact(tmp_path):
                                rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# compressed L1 payloads: parity-tolerance tiers (f32 bit-exact;
+# f16/int8 bounded max-abs error against the f32 oracle)
+# ---------------------------------------------------------------------------
+
+# max-abs tolerance per pooled output element for normal(0,1) rows with
+# hotness <= 4: f16 keeps ~3 decimal digits; int8 per-element error is
+# bounded by absmax/254 per row, summed over the pool
+_PAYLOAD_TOL = {"f16": 2e-2, "int8": 1e-1}
+
+
+def test_quantize_rows_roundtrip_bound():
+    from repro.core.hps.payload_store import quantize_rows
+    rng = np.random.default_rng(11)
+    rows = rng.normal(size=(50, 8)).astype(np.float32)
+    rows[7] = 0.0                                  # zero row edge case
+    q, scales = quantize_rows(rows, "int8")
+    assert q.dtype == np.int8 and scales.dtype == np.float32
+    assert scales[7] == 1.0 and not q[7].any()
+    deq = q.astype(np.float32) * scales[:, None]
+    bound = np.abs(rows).max(axis=1) / 254.0 + 1e-7
+    assert (np.abs(deq - rows).max(axis=1) <= bound).all()
+    h, none = quantize_rows(rows, "f16")
+    assert h.dtype == np.float16 and none is None
+    f, none = quantize_rows(rows, "f32")
+    np.testing.assert_array_equal(f, rows)
+    assert none is None
+
+
+@pytest.mark.parametrize("n,c,d", [(7, 24, 8), (64, 512, 32), (200, 100, 4)])
+def test_dequant_gather_kernel_matches_ref(n, c, d):
+    """The fused dequantize-gather Pallas kernel (scale folded into the
+    one-hot before the MXU pass) vs the plain take-then-scale oracle."""
+    rng = np.random.default_rng(c + 1)
+    payload = jnp.asarray(
+        rng.integers(-127, 128, size=(c, d)).astype(np.int8))
+    scales = jnp.asarray(rng.uniform(0.01, 2.0, size=c).astype(np.float32))
+    slots = rng.integers(-1, c, size=n)
+    got = ops.cache_gather(payload, slots, scales=scales, use_kernel=True)
+    want = ref.dequant_gather_ref(payload, scales, jnp.asarray(slots))
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", ["f32", "f16", "int8"])
+def test_payload_dtype_cache_parity(dtype):
+    """DeviceEmbeddingCache in each storage mode vs the backing store:
+    f32 stays bit-exact; compressed modes stay within the tier bound —
+    across hits, misses, eviction churn and overflow batches."""
+    store = _store(vocab=200, dim=8)
+    c = DeviceEmbeddingCache(16, 8, fetch_fn=lambda ids: store[ids],
+                             payload_dtype=dtype)
+    rng = np.random.default_rng(13)
+    for _ in range(15):
+        ids = rng.integers(0, 200, size=rng.integers(1, 40))
+        got = np.asarray(c.query(ids))
+        if dtype == "f32":
+            np.testing.assert_array_equal(got, store[ids])
+        else:
+            assert np.abs(got - store[ids]).max() <= _PAYLOAD_TOL[dtype]
+
+
+@pytest.mark.parametrize("dtype", ["f32", "f16", "int8"])
+def test_payload_dtype_lookup_parity(tmp_path, dtype):
+    """End-to-end HPS.lookup (multi-table, multi-hot, pooled) in each
+    payload mode vs the f32 oracle."""
+    pdb = PersistentDB(str(tmp_path / "pdb"))
+    dim, vocab = 8, 80
+    tabs = []
+    for i, name in enumerate(("x", "y")):
+        pdb.create_table("m", name, vocab, dim,
+                         initial=_store(vocab, dim, seed=20 + i))
+    tabs = [EmbeddingTableConfig(n, vocab, dim, hotness=4)
+            for n in ("x", "y")]
+    hps = HPS("m", tabs, pdb, cache_capacity=32, payload_dtype=dtype)
+    oracle = HPS("m", tabs, pdb, cache_capacity=32)
+    rng = np.random.default_rng(17)
+    for _ in range(4):
+        cat = rng.integers(-1, vocab, size=(6, 2, 4)).astype(np.int32)
+        got = np.asarray(hps.lookup(cat))
+        want = np.asarray(oracle.lookup(cat))
+        if dtype == "f32":
+            np.testing.assert_array_equal(got, want)
+        else:
+            assert np.abs(got - want).max() <= _PAYLOAD_TOL[dtype]
+
+
+@pytest.mark.parametrize("dtype", ["f16", "int8"])
+def test_payload_dtype_online_update_refresh(tmp_path, dtype):
+    """A dirty-row refresh requantizes from the full-precision lower
+    levels: after an online update the compressed L1 serves the NEW
+    value within the mode's bound, not the stale cached row."""
+    from repro.core.hps.message_bus import MessageBus, Producer
+    pdb, _ = _pdb_with_table(tmp_path)
+    bus = MessageBus()
+    hps = HPS("m", [EmbeddingTableConfig("t0", 100, 4)], pdb,
+              cache_capacity=64, bus=bus, payload_dtype=dtype)
+    cat = np.full((1, 1, 2), -1, np.int32)
+    cat[0, 0, 0] = 5
+    hps.lookup(cat)                                # cache id 5
+    new_row = np.linspace(-9.0, 21.0, 4).astype(np.float32)
+    prod = Producer(bus, "m")
+    prod.send("t0", np.asarray([5]), new_row[None, :])
+    prod.flush()
+    assert hps.apply_updates() == 1
+    hps.refresh_caches()
+    after = np.asarray(hps.lookup(cat))[0, 0]
+    tol = (np.abs(new_row).max() / 254.0 + 1e-6 if dtype == "int8"
+           else np.abs(new_row).max() * 1e-3)
+    assert np.abs(after - new_row).max() <= tol
+
+
 def test_lookup_batched_matches_reference(tmp_path):
     """Multi-table, multi-hot batched lookup vs a direct numpy oracle."""
     pdb = PersistentDB(str(tmp_path / "pdb"))

@@ -300,6 +300,48 @@ def test_ensemble_l1_sized_from_table_hotness(tmp_path):
     assert caps["hot-model"] == want["hot-model"]    # hotness share
 
 
+def test_ensemble_rebalance_tracks_observed_misses(tmp_path):
+    """Observed-hit-rate budget re-split: after one member takes all
+    the L1 misses, the shared row budget shifts toward it (the idle
+    member drops to the floor), and the resized members keep serving
+    bit-identical predictions — survivors and refills both come from
+    the full-precision lower levels."""
+    from repro.api import deploy_ensemble
+    hot = _tiny_graph_model("hot-m", hotness=4)
+    cold = _tiny_graph_model("cold-m", hotness=4)
+    server = deploy_ensemble([hot, cold], str(tmp_path / "reb"),
+                             cache_budget=1024,
+                             rebalance_interval_s=3600.0)
+    try:
+        batches = {m.name: SyntheticCTR(m.cfg, 8, seed=3).batch(7)
+                   for m in (hot, cold)}
+        for m in (hot, cold):
+            b = batches[m.name]
+            server.predict(m.name, b["dense"], b["cat"])
+        # absorb warmup misses into the baseline counters
+        server.rebalance_now()
+        bc = batches["cold-m"]
+        before_cold = server.predict("cold-m", bc["dense"], bc["cat"])
+
+        # drive many distinct ids through hot-m only
+        ds = SyntheticCTR(hot.cfg, 16)
+        for step in range(12):
+            b = ds.batch(step)
+            server.predict("hot-m", b["dense"], b["cat"])
+        caps = server.rebalance_now()
+        assert caps["hot-m"] > caps["cold-m"]
+        assert caps["cold-m"] >= 64                    # floored, not starved
+        assert sum(caps.values()) <= 1024 + 2 * 64     # budget conserved
+        st = server.rebalance_stats()
+        assert st["rebalances"] >= 1
+        assert st["capacities"] == caps
+
+        after_cold = server.predict("cold-m", bc["dense"], bc["cat"])
+        np.testing.assert_array_equal(after_cold, before_cold)
+    finally:
+        server.stop()
+
+
 def test_rebuild_with_cache_capacity_override(tmp_path):
     """launch.serve honors an operator-side per-model L1 override when
     standing a bundle back up."""
