@@ -43,6 +43,14 @@ one group behind) against the stage-synchronous submit path and the old
 blocking drain loop — the pipelining claim at the prediction, not the
 embedding.
 
+``slo_latency_sweep`` drives the ADMISSION-CONTROLLED endpoint with a
+seeded open-loop workload (the ``repro.loadgen`` harness — submission on
+schedule, no coordinated omission) at an under-capacity and a ~3x
+overload point: an unbounded legacy arm against a bounded-queue fixed
+``max_batch`` arm against the full deadline-aware controller. The
+headline row requires the deadline arm's delivered p99 to undercut
+fixed-batch coalescing at overload.
+
 ``run`` also dumps the serving rows to ``artifacts/hps_lookup.json`` so
 the roofline report re-surfaces them — a serving-path regression shows
 up in ``artifacts/bench_results.csv`` even when only the roofline bench
@@ -357,6 +365,184 @@ def serve_throughput(report: Report, tmp_root: str):
                f"x={vs_sync:.2f}")
 
 
+def slo_latency_sweep(report: Report, tmp_root: str):
+    """qps-vs-p99 with admission control ON vs OFF, remote-L2 regime.
+
+    Three identically-provisioned stream servers (fresh HPS each, every
+    coalesced miss fetch pays the same Redis-style ``RTT_S``) take the
+    SAME seeded open-loop Zipf workload through the
+    :class:`~repro.loadgen.driver.OpenLoopDriver` (submission on
+    schedule, latency measured from the scheduled arrival — overload
+    cannot hide in coordinated omission):
+
+      admission_off — unbounded queue, no SLO: the legacy endpoint.
+                      Under overload the queue grows without bound and
+                      delivered p99 is the backlog, not the service.
+      fixed_batch   — bounded queue + declared SLO, but fixed
+                      ``max_batch`` coalescing: sheds at the bound, yet
+                      admitted requests wait out the whole queue.
+      deadline      — the full admission controller: deadline-aware
+                      batch sizing (cut the group early when the oldest
+                      request's slack is short) + expired-at-drain
+                      shedding, so capacity is never spent on requests
+                      already past their deadline.
+
+    Offered rates adapt to the measured group service time (a moderate
+    under-capacity point and a ~3x overload point), so the sweep lands
+    in the same regime on any machine. The headline
+    ``overload.deadline_vs_fixed`` row is the acceptance claim: at
+    overload the deadline arm's delivered p99 must undercut fixed-batch
+    coalescing (ratio > 1).
+    """
+    from repro.loadgen.driver import OpenLoopDriver
+    from repro.loadgen.workload import ModelShape, Workload, WorkloadConfig
+
+    vocab, dim, T, H = 30000, 32, 4, 4
+    # 64-row requests: enough submits/s to overload the queue, few
+    # enough that the open-loop submit thread never lags the schedule
+    # by more than a few ms (submit lag would charge BOTH bounded arms
+    # identically and mask the queue-wait difference under test)
+    rows, max_co = 64, 4
+    capacity, zipf_a = 4096, 1.6
+    RTT_S = 3e-3          # remote-L2 round trip per coalesced miss fetch
+    QUEUE_DEPTH = 128
+    rng = np.random.default_rng(0)
+    pdb = PersistentDB(tmp_root)
+    tabs = []
+    for i in range(T):
+        data = rng.normal(size=(vocab, dim)).astype(np.float32)
+        pdb.create_table("slo", f"t{i}", vocab, dim, initial=data)
+        tabs.append(EmbeddingTableConfig(f"t{i}", vocab, dim, hotness=H,
+                                         strategy="data_parallel"))
+    cfg = dataclasses.replace(
+        RECSYS_ARCHS["dlrm-criteo"], tables=tuple(tabs),
+        embedding_dim=dim, bottom_mlp=(64, dim), top_mlp=(128, 64, 1))
+    shape = ModelShape(vocab_sizes=(vocab,) * T, hotness=(H,) * T,
+                       num_dense=cfg.num_dense_features)
+    max_batch = rows * max_co
+
+    # (queue_depth, use_slo, deadline_batching) per arm
+    ARMS = {"admission_off": (None, False, False),
+            "fixed_batch": (QUEUE_DEPTH, True, False),
+            "deadline": (QUEUE_DEPTH, True, True)}
+
+    mesh = make_test_mesh((1, 1))
+    with mesh:
+        model = RecsysModel(cfg, mesh, global_batch=max_batch)
+        params = model.init(jax.random.PRNGKey(0))
+        dense_params = {k: v for k, v in params.items()
+                        if k != "embedding"}
+        servers = {}
+        for arm in ARMS:
+            hps = HPS("slo", tabs, pdb, cache_capacity=capacity)
+            for c in hps.caches.values():  # same simulated remote L2
+                c.fetch_fn = (lambda orig: lambda ids:
+                              (time.sleep(RTT_S), orig(ids))[1])(c.fetch_fn)
+            servers[arm] = InferenceServer(model, dense_params, hps,
+                                           max_batch=max_batch,
+                                           engine="stream")
+
+        # identical warmup per arm: jit every group shape the coalescer
+        # can form, pull the Zipf hot set into L1, then warm the serve
+        # loop's own (stream) path — all before admission is armed, so
+        # no cold compile can expire a request
+        warm_reqs = list(Workload(
+            WorkloadConfig(qps=400.0, duration_s=0.1, rows=rows,
+                           arrival="constant", seed=7, zipf_a=zipf_a),
+            {"m": shape}))
+        for s in servers.values():
+            base = warm_reqs[0]
+            for k in range(1, max_co + 1):
+                s.predict(np.concatenate([base.dense] * k),
+                          np.concatenate([base.cat] * k))
+            for r in warm_reqs:
+                s.predict(r.dense, r.cat)
+            s.start()
+            for rd in range(2):
+                hs = [s.submit(r.dense, r.cat)
+                      for r in warm_reqs[rd * 4:(rd + 1) * 4]]
+                for h in hs:
+                    out = h.get(timeout=600)
+                    if isinstance(out, Exception):
+                        raise out
+            s.stop()
+
+        # calibrate capacity by bursting requests through every STARTED
+        # arm (identical bursts, so all three caches evolve through the
+        # same state): the drain rate of the SECOND burst — hot head
+        # cached, fresh Zipf tail still missing, exactly the live
+        # regime — is the real serve capacity here, with coalescing,
+        # RTT miss fetches, serve-loop overhead and GIL contention all
+        # charged, none of which a bare hot-cache predict() would pay
+        t_per_req = []
+        for s in servers.values():
+            s.start()
+            for cal_seed, record in ((9, False), (10, True)):
+                cal = list(Workload(
+                    WorkloadConfig(qps=1000.0, duration_s=0.12,
+                                   rows=rows, arrival="constant",
+                                   seed=cal_seed, zipf_a=zipf_a),
+                    {"m": shape}))
+                t0 = time.perf_counter()
+                hs = [s.submit(r.dense, r.cat) for r in cal]
+                for h in hs:
+                    out = h.get(timeout=600)
+                    if isinstance(out, Exception):
+                        raise out
+                if record:
+                    t_per_req.append(
+                        (time.perf_counter() - t0) / len(cal))
+            s.stop()
+        per_req = sorted(t_per_req)[len(t_per_req) // 2]
+        cap_rps = 1.0 / per_req
+        group_ms = 1e3 * per_req * max_co             # per-group service
+        slo_ms = max(30.0, 5 * group_ms)
+        rates = {"moderate": 0.3 * cap_rps, "overload": 2.5 * cap_rps}
+
+        for arm, s in servers.items():
+            depth, use_slo, dead = ARMS[arm]
+            s.set_admission(queue_depth=depth,
+                            slo_ms=slo_ms if use_slo else None,
+                            deadline_batching=dead)
+            s.reset_serving_stats()
+            s.start()
+
+        p99s: Dict = {}
+        for phase, qps in rates.items():
+            dur = 2.5 if phase == "moderate" else 2.0
+            # one pre-materialized stream, replayed identically per arm
+            # (generation cost never lags the submission schedule)
+            wl = list(Workload(
+                WorkloadConfig(qps=qps, duration_s=dur, rows=rows,
+                               seed=11 if phase == "moderate" else 13,
+                               zipf_a=zipf_a),
+                {"m": shape}))
+            for arm, s in servers.items():
+                drv = OpenLoopDriver(
+                    (lambda srv: lambda _m, d, c: srv.submit(d, c))(s),
+                    slo_ms=slo_ms, poll_s=4e-3, drain_timeout_s=120.0)
+                res = drv.run(wl)["models"]["m"]
+                cnt = s.counters()
+                shed = cnt["requests_shed"] + cnt["requests_expired"]
+                s.reset_serving_stats()
+                p99 = res["latency_ms"]["p99"]
+                p99s[(phase, arm)] = p99
+                report.add(
+                    f"hps_slo.{phase}.{arm}", p99 * 1e-3,
+                    f"p99_ms={p99:.1f} offered_qps={qps:.0f} "
+                    f"delivered_qps={res['delivered'] / dur:.0f} "
+                    f"shed={shed} viol={cnt['slo_violations']} "
+                    f"lost={res['lost']}")
+        for s in servers.values():
+            s.stop()
+            s.hps.close()
+    ratio = p99s[("overload", "fixed_batch")] \
+        / max(p99s[("overload", "deadline")], 1e-9)
+    report.add("hps_slo.overload.deadline_vs_fixed", ratio,
+               f"x={ratio:.2f} fixed_batch p99 over deadline p99 "
+               f"(>1 = deadline batching wins at overload)")
+
+
 def budget_capacity_sweep(report: Report):
     """Fixed-HBM-budget L1 across payload dtypes — the compression
     claim measured where it pays: the SAME byte budget buys 2x (f16) /
@@ -424,7 +610,7 @@ def dump_l1_artifact(report: Report) -> None:
     for row in report.rows:
         name, us, derived = row.split(",", 2)
         if name.startswith(("hps_lookup.", "hps_pipeline.",
-                            "hps_serve.", "hps_budget.")):
+                            "hps_serve.", "hps_budget.", "hps_slo.")):
             rows.append({"name": name, "us_per_call": float(us),
                          "derived": derived})
     if rows:
@@ -487,6 +673,7 @@ def run(report: Report, tmp_root: str = "artifacts/bench_hps"):
     budget_capacity_sweep(report)
     pipeline_throughput(report, tmp_root + "_pipe")
     serve_throughput(report, tmp_root + "_serve")
+    slo_latency_sweep(report, tmp_root + "_slo")
     dump_l1_artifact(report)
     cfg0 = RECSYS_ARCHS["dlrm-criteo"]
     tables = tuple(dataclasses.replace(

@@ -86,12 +86,45 @@ def l1_lookup_rows(path: str = "artifacts/hps_lookup.json") -> List[Dict]:
         return json.load(f)
 
 
+def loadtest_rows(path: str = "artifacts/loadtest.json") -> List[Dict]:
+    """Flatten the last ``launch.loadtest`` run (empty if never run):
+    one row per (phase, model) with the delivered latency picture and
+    the admission counters, so SLO serving regressions ride along in
+    ``bench_results.csv`` like the L1 serving numbers do."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    rows = []
+    for phase, ph in sorted(data.get("phases", {}).items()):
+        for model, m in sorted(ph.get("client", {})
+                               .get("models", {}).items()):
+            lat = m.get("latency_ms", {})
+            srv = ph.get("server", {}).get(model, {})
+            shed = srv.get("requests_shed", 0) \
+                + srv.get("requests_expired", 0)
+            rows.append({
+                "name": f"{phase}.{model}",
+                "p99_ms": lat.get("p99", 0.0),
+                "derived": (f"p50_ms={lat.get('p50', 0):.1f} "
+                            f"p999_ms={lat.get('p999', 0):.1f} "
+                            f"delivered={m.get('delivered', 0)} "
+                            f"shed={shed} "
+                            f"slo_viol="
+                            f"{srv.get('slo_violations', 0)}"),
+            })
+    return rows
+
+
 def run(report):
     for row in l1_lookup_rows():
         # re-emit under the roofline namespace so the serving numbers
         # land in bench_results.csv alongside the step-time bounds
         report.add(f"roofline.l1.{row['name']}",
                    row["us_per_call"] * 1e-6, row["derived"])
+    for row in loadtest_rows():
+        report.add(f"roofline.loadtest.{row['name']}",
+                   row["p99_ms"] * 1e-3, row["derived"])
     recs = load_records()
     ok = [r for r in recs if r.get("status") == "ok"]
     if not ok:

@@ -1,0 +1,29 @@
+"""Production traffic harness: open-loop load generation against the
+serving stack.
+
+Three layers (see the module docstrings for the contracts):
+
+- :mod:`repro.loadgen.workload` — seeded open-loop request generators
+  (Poisson / constant-rate arrivals, Zipf-skewed id popularity with
+  hot-set drift, multi-model traffic mixes) and a JSONL trace
+  record/replay format so any run is exactly reproducible.
+- :mod:`repro.loadgen.metrics` — bounded-memory mergeable latency
+  histogram (log-bucketed p50/p99/p999) and windowed delivered-qps
+  counters.
+- :mod:`repro.loadgen.driver` — the open-loop driver: submits on
+  schedule WITHOUT waiting for completions, so late responses count
+  against latency (coordinated-omission-free), and collects per-model
+  delivered/shed/violation statistics.
+
+The CLI front door is ``python -m repro.launch.loadtest``.
+"""
+from repro.loadgen.metrics import LatencyHistogram, WindowedRate
+from repro.loadgen.workload import (ModelShape, Request, WorkloadConfig,
+                                    Workload, record_trace, replay_trace)
+from repro.loadgen.driver import OpenLoopDriver
+
+__all__ = [
+    "LatencyHistogram", "WindowedRate", "ModelShape", "Request",
+    "WorkloadConfig", "Workload", "record_trace", "replay_trace",
+    "OpenLoopDriver",
+]

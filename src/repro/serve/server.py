@@ -22,6 +22,30 @@ work behind the host) and ``"stage_sync"`` (every device stage blocked
 before the next host stage — the no-overlap baseline the benchmarks
 measure against).
 
+ADMISSION CONTROL (the submit path's QoS layer, off by default so the
+bare server behaves exactly as before): a server constructed — or
+configured via ``set_admission`` — with ``queue_depth`` and/or
+``slo_ms`` becomes an admission-controlled endpoint:
+
+- **Bounded queue + graceful shedding.** ``submit`` beyond
+  ``queue_depth`` outstanding requests — or after ``close()`` — never
+  enqueues: the caller's handle receives a typed
+  :class:`ServerOverloaded` IMMEDIATELY (counted in
+  ``requests_shed``), so overload degrades into fast typed rejections
+  instead of unbounded queueing or hung callers.
+- **Deadline-aware dynamic batching.** With ``slo_ms`` declared, the
+  batcher sizes each request group from the OLDEST queued request's
+  remaining slack (:func:`deadline_batch_target`: grow toward
+  ``max_batch`` while the predicted completion fits the SLO, cut early
+  when slack is short), and a request whose deadline already passed at
+  drain time is shed (``requests_expired``) rather than served late —
+  serving it would burn capacity that fresher requests still have a
+  chance of using. Delivered requests that still missed the SLO count
+  in ``slo_violations``.
+- **close() never strands a handle.** ``close()`` refuses new
+  admissions, lets the serve loop finish in-flight groups, then drains
+  every still-queued handle with the typed rejection.
+
 The serve loop also drives update propagation (no bare timer threads):
 between pipeline stages it polls the message bus into L2/L3, marks the
 touched L1 rows dirty, and drains one bounded hotness-ordered refresh
@@ -44,7 +68,8 @@ import queue
 import threading
 import time
 from collections import deque
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +80,51 @@ from repro.core.hps.hps import HPS
 from repro.core.hps.message_bus import MessageBus
 from repro.core.hps.persistent_db import PersistentDB
 from repro.core.hps.volatile_db import VolatileDB
+from repro.loadgen.metrics import LatencyHistogram
 
 ENGINES = ("stream", "sync", "stage_sync")
+
+
+class ServerOverloaded(Exception):
+    """Typed rejection delivered to a request handle instead of a
+    prediction: the admission queue was full, the request's deadline
+    expired before it could be served, or the server was closed.
+    Callers distinguish it from a prediction (and from a failed-group
+    exception) by type — a shed is an expected overload outcome, not a
+    serving bug."""
+
+
+def deadline_batch_target(oldest_age_ms: float, slo_ms: float,
+                          max_batch: int,
+                          service_ms_per_row: Optional[float]) -> int:
+    """Rows a forming request group may grow to before its OLDEST
+    member risks the latency SLO.
+
+    The decision never exceeds the declared budget: the returned
+    ``target`` satisfies ``oldest_age_ms + target * service_ms_per_row
+    <= slo_ms`` whenever a service estimate exists — or is the floor
+    ``1`` (the oldest request always ships; a sub-SLO completion is
+    impossible, so ship the smallest group now rather than hold it).
+    With plenty of slack the target grows toward ``max_batch``
+    (coalescing amortizes the per-group overhead); with no estimate yet
+    (cold server) the full ``max_batch`` is allowed until the deadline
+    itself has passed.
+    """
+    if oldest_age_ms >= slo_ms:
+        return 1
+    if service_ms_per_row is None or service_ms_per_row <= 0:
+        return max_batch
+    slack = slo_ms - oldest_age_ms
+    return max(1, min(max_batch, int(slack / service_ms_per_row)))
+
+
+class _Req(NamedTuple):
+    """One queued request: arrays, the caller's handle, and the
+    admission timestamp the SLO accounting measures from."""
+    dense: np.ndarray
+    cat: np.ndarray
+    done: "queue.Queue"
+    t_enq: float
 
 
 def deploy_from_training(model, params: Dict, pdb: PersistentDB,
@@ -83,12 +151,21 @@ def deploy_from_training(model, params: Dict, pdb: PersistentDB,
 class InferenceServer:
 
     # Checked by `python -m repro.analysis`: serving counters and the
-    # latency samples are written by the serve-loop thread and read by
-    # stats/benchmark callers, so they live behind _stats_lock.
+    # latency histogram are written by the serve-loop thread and read by
+    # stats/benchmark callers, so they live behind _stats_lock; the
+    # admission gate (closed flag + shed counter) is touched from every
+    # SUBMITTING thread, so it has its own lock — the two are never
+    # nested.
     _GUARDED_BY = {
         "updates_applied": "_stats_lock",
         "rows_refreshed": "_stats_lock",
-        "latencies_ms": "_stats_lock",
+        "latency_hist": "_stats_lock",
+        "requests_delivered": "_stats_lock",
+        "requests_expired": "_stats_lock",
+        "slo_violations": "_stats_lock",
+        "_service_ms_per_row": "_stats_lock",
+        "_closed": "_admit_lock",
+        "requests_shed": "_admit_lock",
     }
 
     def __init__(self, model, dense_params: Dict, hps: HPS, *,
@@ -97,7 +174,10 @@ class InferenceServer:
                  hotness: Optional[Sequence[int]] = None,
                  refresh_budget: int = 512,
                  refresh_poll_s: Optional[float] = None,
-                 engine: str = "stream"):
+                 engine: str = "stream",
+                 queue_depth: Optional[int] = None,
+                 slo_ms: Optional[float] = None,
+                 deadline_batching: bool = True):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {engine!r}")
@@ -114,28 +194,79 @@ class InferenceServer:
         self.refresh_budget = refresh_budget
         #: period of the full-mark sweep (None = only bus-marked rows)
         self.refresh_poll_s = refresh_poll_s
+        #: admission policy (None = unbounded / no SLO — legacy behavior)
+        self.queue_depth = queue_depth
+        self.slo_ms = slo_ms
+        self.deadline_batching = deadline_batching
         self._stats_lock = threading.Lock()
         self.updates_applied = 0
         self.rows_refreshed = 0
+        #: bounded-memory per-group latency store (mergeable log-bucketed
+        #: histogram — a soak test costs the same KiBs as a smoke run)
+        self.latency_hist = LatencyHistogram()
+        self.requests_delivered = 0
+        self.requests_expired = 0
+        self.slo_violations = 0
+        #: EWMA of observed service time per delivered row, feeding the
+        #: deadline batcher's cut decision (None until the first group)
+        self._service_ms_per_row: Optional[float] = None
+        self._admit_lock = threading.Lock()
+        self._closed = False
+        self.requests_shed = 0
         self._last_poll = time.monotonic()
         self._predict = jax.jit(
             lambda p, d, e, w: model.apply_dense(p, d, e, w))
         self._predict_nowide = jax.jit(
             lambda p, d, e: model.apply_dense(p, d, e, None))
-        self._q: queue.Queue = queue.Queue()
+        self._q: queue.Queue = queue.Queue(maxsize=queue_depth or 0)
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
-        self.latencies_ms: List[float] = []
         #: control-plane hook run at the end of every ``_refresh_tick``
         #: (the ensemble budget rebalancer registers itself here); must
         #: be cheap or internally rate-limited — it runs on the serve
         #: loop between pipeline stages
         self.on_tick: Optional[Callable[[], None]] = None
 
-    def _record_latency(self, t0: float) -> None:
+    def set_admission(self, *, queue_depth: Optional[int] = None,
+                      slo_ms: Optional[float] = None,
+                      deadline_batching: bool = True) -> None:
+        """Declare (or replace) the admission policy on an idle server —
+        the request queue is swapped for one with the new bound, so this
+        must run before ``start()`` / concurrent submits. Requests
+        already queued carry over; any overflow beyond the new bound is
+        shed with the typed rejection."""
+        if self._worker is not None:
+            raise RuntimeError("set_admission() requires a stopped "
+                               "server: call it before start()")
+        self.queue_depth = queue_depth
+        self.slo_ms = slo_ms
+        self.deadline_batching = deadline_batching
+        newq: queue.Queue = queue.Queue(maxsize=queue_depth or 0)
+        shed = 0
+        while True:
+            try:
+                req = self._q.get_nowait()
+            except queue.Empty:
+                break
+            try:
+                newq.put_nowait(req)
+            except queue.Full:
+                self._put_rejection(req, "queue bound shrank")
+                shed += 1
+        self._q = newq
+        if shed:
+            with self._admit_lock:
+                self.requests_shed += shed
+
+    def _record_latency(self, t0: float, rows: int = 0) -> None:
         ms = (time.perf_counter() - t0) * 1e3
         with self._stats_lock:
-            self.latencies_ms.append(ms)
+            self.latency_hist.record(ms)
+            if rows > 0:        # feed the deadline batcher's estimate
+                obs = ms / rows
+                self._service_ms_per_row = obs \
+                    if self._service_ms_per_row is None \
+                    else 0.8 * self._service_ms_per_row + 0.2 * obs
 
     # -- synchronous path ---------------------------------------------------------
 
@@ -161,7 +292,7 @@ class InferenceServer:
                 cat, self.hotness,
                 pipelined=len(self.wide_hps.tables) > 1)
         out = np.asarray(self._dense_forward(dense, emb, wide))
-        self._record_latency(t0)
+        self._record_latency(t0, rows=dense.shape[0])
         return out
 
     def _predict_stage_sync(self, dense: np.ndarray,
@@ -181,7 +312,7 @@ class InferenceServer:
             out = self._predict_nowide(self.dense_params,
                                        jnp.asarray(dense), emb)
         out = np.asarray(jax.nn.sigmoid(jax.block_until_ready(out)))
-        self._record_latency(t0)
+        self._record_latency(t0, rows=dense.shape[0])
         return out
 
     # -- refresh scheduling (runs on the serve loop, between batches) -------------
@@ -223,49 +354,115 @@ class InferenceServer:
 
     def submit(self, dense: np.ndarray, cat: np.ndarray) -> "queue.Queue":
         """Queue a request; the returned handle's ``get()`` yields the
-        prediction rows (or the exception that failed its batch)."""
+        prediction rows (or the exception that failed its batch).
+
+        With admission control on, a full queue or a closed server
+        delivers a typed :class:`ServerOverloaded` to the handle
+        IMMEDIATELY — the caller never blocks on a request the server
+        already decided not to serve."""
         done: queue.Queue = queue.Queue(maxsize=1)
-        self._q.put((dense, cat, done))
+        req = _Req(dense, cat, done, time.perf_counter())
+        rejection = None
+        with self._admit_lock:
+            if self._closed:
+                self.requests_shed += 1
+                rejection = "server closed"
+            else:
+                try:
+                    self._q.put_nowait(req)
+                except queue.Full:
+                    self.requests_shed += 1
+                    rejection = (f"admission queue full "
+                                 f"(depth {self.queue_depth})")
+        if rejection is not None:
+            self._put_rejection(req, rejection)
         return done
+
+    @staticmethod
+    def _put_rejection(req: _Req, why: str) -> None:
+        try:
+            req.done.put_nowait(ServerOverloaded(why))
+        except queue.Full:
+            pass
+
+    def _expired(self, req: _Req) -> bool:
+        """Deadline shedding applies only with an SLO declared AND
+        deadline batching on — the fixed-coalescing reference arm serves
+        everything it admitted, however late."""
+        if self.slo_ms is None or not self.deadline_batching:
+            return False
+        return (time.perf_counter() - req.t_enq) * 1e3 >= self.slo_ms
+
+    def _batch_target(self, first: _Req) -> int:
+        if self.slo_ms is None or not self.deadline_batching:
+            return self.max_batch
+        age_ms = (time.perf_counter() - first.t_enq) * 1e3
+        with self._stats_lock:
+            est = self._service_ms_per_row
+        return deadline_batch_target(age_ms, self.slo_ms,
+                                     self.max_batch, est)
 
     def _coalesce(self, first
                   ) -> Optional[Tuple[list, np.ndarray, np.ndarray]]:
         """Drain the queue behind ``first`` into one coalesced request
-        group of up to ``max_batch`` rows (the batcher of the paper's
-        Figure 2 — one group is one device batch). Requests that cannot
-        be concatenated (mismatched widths) get the error delivered to
+        group (the batcher of the paper's Figure 2 — one group is one
+        device batch), bounded by ``max_batch`` rows or, with an SLO
+        declared, by the oldest request's remaining slack
+        (:func:`deadline_batch_target`; the group may overshoot the
+        target by at most the last drained request, since a drained
+        request is never re-queued). An expired head is shed with the
+        typed rejection instead of served late. Requests that cannot be
+        concatenated (mismatched widths) get the error delivered to
         their handles here and ``None`` comes back — the serve loop must
         keep running."""
+        while self._expired(first):
+            self._put_rejection(first, f"deadline expired "
+                                       f"(slo {self.slo_ms}ms)")
+            with self._stats_lock:
+                self.requests_expired += 1
+            try:
+                first = self._q.get_nowait()
+            except queue.Empty:
+                return None
         reqs = [first]
-        rows = first[0].shape[0]
-        while rows < self.max_batch:
+        rows = first.dense.shape[0]
+        target = self._batch_target(first)
+        while rows < target:
             try:
                 nxt = self._q.get_nowait()
             except queue.Empty:
                 break
             reqs.append(nxt)
-            rows += nxt[0].shape[0]
+            rows += nxt.dense.shape[0]
         try:
-            dense = np.concatenate([r[0] for r in reqs])
-            cat = np.concatenate([r[1] for r in reqs])
+            dense = np.concatenate([r.dense for r in reqs])
+            cat = np.concatenate([r.cat for r in reqs])
         except Exception as exc:
             self._deliver_error(reqs, exc)
             return None
         return reqs, dense, cat
 
-    @staticmethod
-    def _deliver(reqs: list, preds: np.ndarray) -> None:
+    def _deliver(self, reqs: list, preds: np.ndarray) -> None:
         off = 0
+        now = time.perf_counter()
+        delivered = violations = 0
         for r in reqs:
-            n = r[0].shape[0]
-            r[2].put(preds[off:off + n])
+            n = r.dense.shape[0]
+            r.done.put(preds[off:off + n])
             off += n
+            delivered += 1
+            if self.slo_ms is not None and \
+                    (now - r.t_enq) * 1e3 > self.slo_ms:
+                violations += 1
+        with self._stats_lock:
+            self.requests_delivered += delivered
+            self.slo_violations += violations
 
     @staticmethod
     def _deliver_error(reqs: list, exc: BaseException) -> None:
         for r in reqs:
             try:
-                r[2].put_nowait(exc)
+                r.done.put_nowait(exc)
             except queue.Full:
                 pass
 
@@ -347,7 +544,7 @@ class InferenceServer:
         except Exception as exc:            # deferred device error: this
             self._deliver_error(reqs, exc)  # group's handles first, the
             raise                           # burst handler does the rest
-        self._record_latency(t0)
+        self._record_latency(t0, rows=len(preds))
         self._deliver(reqs, preds)
 
     # -- serve loop -----------------------------------------------------------------
@@ -379,6 +576,9 @@ class InferenceServer:
             self._refresh_tick()         # interleave refresh with serving
 
     def start(self):
+        with self._admit_lock:
+            if self._closed:
+                raise RuntimeError("server is closed")
         self._worker = threading.Thread(target=self._serve_loop, daemon=True)
         self._worker.start()
 
@@ -389,27 +589,65 @@ class InferenceServer:
             self._worker = None
         self._stop.clear()
 
+    def close(self):
+        """Terminal shutdown that never strands a caller: refuse new
+        admissions (submits from here on get the typed rejection), let
+        the serve loop finish the groups it already pulled, then deliver
+        :class:`ServerOverloaded` to every handle still in the queue —
+        after ``close()`` returns, every handle ever issued holds a
+        prediction or an exception."""
+        with self._admit_lock:
+            self._closed = True
+        self.stop()
+        shed = 0
+        while True:         # no racing producers: _closed gates submit
+            try:
+                req = self._q.get_nowait()
+            except queue.Empty:
+                break
+            self._put_rejection(req, "server closed")
+            shed += 1
+        if shed:
+            with self._admit_lock:
+                self.requests_shed += shed
+
     def latency_percentiles(self) -> Dict[str, float]:
         with self._stats_lock:
-            arr = np.asarray(self.latencies_ms)
-        if len(arr) == 0:
+            hist = self.latency_hist.snapshot()
+        if hist.count == 0:
             return {}
-        return {"p50": float(np.percentile(arr, 50)),
-                "p95": float(np.percentile(arr, 95)),
-                "p99": float(np.percentile(arr, 99)),
-                "mean": float(arr.mean())}
+        s = hist.summary()
+        return {"p50": s["p50"], "p95": s["p95"], "p99": s["p99"],
+                "p999": s["p999"], "mean": s["mean"]}
 
     def reset_latencies(self) -> None:
         """Drop accumulated latency samples (benchmark warmup reset)."""
         with self._stats_lock:
-            self.latencies_ms = []
+            self.latency_hist.reset()
+
+    def reset_serving_stats(self) -> None:
+        """Zero latency samples AND admission counters — the load-test
+        harness calls this between warmup and the measured phase."""
+        with self._stats_lock:
+            self.latency_hist.reset()
+            self.requests_delivered = 0
+            self.requests_expired = 0
+            self.slo_violations = 0
+        with self._admit_lock:
+            self.requests_shed = 0
 
     def counters(self) -> Dict[str, int]:
         """Lock-consistent snapshot of the serving counters."""
         with self._stats_lock:
-            return {"updates_applied": self.updates_applied,
-                    "rows_refreshed": self.rows_refreshed,
-                    "groups_served": len(self.latencies_ms)}
+            out = {"updates_applied": self.updates_applied,
+                   "rows_refreshed": self.rows_refreshed,
+                   "groups_served": self.latency_hist.count,
+                   "requests_delivered": self.requests_delivered,
+                   "requests_expired": self.requests_expired,
+                   "slo_violations": self.slo_violations}
+        with self._admit_lock:
+            out["requests_shed"] = self.requests_shed
+        return out
 
 
 class MultiModelServer:
@@ -436,6 +674,10 @@ class MultiModelServer:
     because a resize recompiles the pooled gather for the new payload
     shape — leave it off when the hot-path sanitizer's zero-recompile
     contract matters more than cache efficiency.
+
+    Admission control is per member: declare each model's SLO and queue
+    bound via ``server[name].set_admission(...)`` — the members' shed /
+    violation counters surface in ``stats()``.
     """
 
     # Checked by `python -m repro.analysis`: rebalance bookkeeping is
@@ -562,8 +804,15 @@ class MultiModelServer:
         for s in self.servers.values():
             s.stop()
 
+    def close(self):
+        """Close every member: refuse new work, finish in-flight groups,
+        reject every still-queued handle — no caller blocks forever."""
+        for s in self.servers.values():
+            s.close()
+
     def stats(self) -> Dict[str, Dict]:
-        """Per-model serving picture: L1/L2/L3 + refresh + latency."""
+        """Per-model serving picture: L1/L2/L3 + refresh + latency +
+        admission (shed / expired / SLO-violation counts)."""
         out = {}
         for name, s in self.servers.items():
             c = s.counters()
@@ -571,7 +820,11 @@ class MultiModelServer:
                          "cache_capacity": s.hps.cache_capacity,
                          "latency_ms": s.latency_percentiles(),
                          "updates_applied": c["updates_applied"],
-                         "rows_refreshed": c["rows_refreshed"]}
+                         "rows_refreshed": c["rows_refreshed"],
+                         "requests_delivered": c["requests_delivered"],
+                         "requests_shed": c["requests_shed"],
+                         "requests_expired": c["requests_expired"],
+                         "slo_violations": c["slo_violations"]}
         return out
 
     def rebalance_stats(self) -> Dict:

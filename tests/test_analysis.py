@@ -218,7 +218,8 @@ def test_guard_contracts_declared_on_serving_classes():
                       (PersistentDB, "_maps"),
                       (MessageBus, "_topics"),
                       (HPS, "_l3_fetch_calls"),
-                      (InferenceServer, "latencies_ms")]:
+                      (InferenceServer, "latency_hist"),
+                      (InferenceServer, "requests_shed")]:
         assert attr in cls._GUARDED_BY, cls.__name__
     assert "fetch_fn" in DeviceEmbeddingCache._LOCKS_OF
 
@@ -366,7 +367,7 @@ def test_server_counters_thread_safe():
         t.join()
     assert s.counters()["groups_served"] == n_threads * per
     pct = s.latency_percentiles()
-    assert set(pct) == {"p50", "p95", "p99", "mean"}
+    assert set(pct) == {"p50", "p95", "p99", "p999", "mean"}
     s.reset_latencies()
     assert s.counters()["groups_served"] == 0
     assert s.latency_percentiles() == {}

@@ -144,6 +144,40 @@ def test_stream_engine_one_sync_per_group_zero_recompiles(served):
     assert summ["compiles"] == 0, summ  # ZERO post-warmup recompiles
 
 
+def test_admission_control_preserves_hotpath_contract(served):
+    """Arming the admission controller (bounded queue + declared SLO +
+    deadline batching) must not change the hot path: the batch-cut
+    decision is pure host arithmetic, so the one-sync-per-group /
+    zero-recompile contract holds with admission ON. Request rows are
+    pinned to ``max_batch`` so every delivered group keeps one shape."""
+    m, server = served
+    ctl = InferenceServer(m.model, m.dense_params(), server.hps,
+                          wide_hps=server.wide_hps, max_batch=8,
+                          engine="stream", queue_depth=64,
+                          slo_ms=10_000.0, deadline_batching=True)
+    rows, k = 8, 5
+    ctl.start()
+    try:
+        for i in range(3):             # warm THIS server's jit wrappers
+            d = SyntheticCTR(m.cfg, rows, seed=600 + i).batch(i)
+            out = ctl.submit(d["dense"], d["cat"]).get(timeout=120)
+            assert not isinstance(out, Exception)
+        ctl.reset_serving_stats()
+        with HotPathMonitor("stream+admission") as mon:
+            for i in range(k):
+                d = SyntheticCTR(m.cfg, rows, seed=950 + i).batch(i)
+                out = ctl.submit(d["dense"], d["cat"]).get(timeout=120)
+                assert not isinstance(out, Exception)
+    finally:
+        ctl.stop()
+    c = ctl.counters()
+    assert c["groups_served"] == k and c["requests_delivered"] == k
+    assert c["requests_shed"] == 0 and c["requests_expired"] == 0
+    summ = mon.summary()
+    assert summ["syncs"] == k, summ     # ONE host sync per group
+    assert summ["compiles"] == 0, summ  # ZERO recompiles, admission on
+
+
 def test_stage_sync_reference_syncs_more(served):
     """Positive control: the no-overlap engine blocks every device
     stage, so the monitor must see MANY more syncs than groups — proof

@@ -1,0 +1,226 @@
+"""The load-generation layer: workload determinism (same seed => the
+same bit-exact request stream), trace record/replay, hot-set drift, and
+the bounded-memory serving metrics (mergeable log-bucketed latency
+histogram + windowed delivered-rate series)."""
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.loadgen import (LatencyHistogram, ModelShape, WindowedRate,
+                           Workload, WorkloadConfig, record_trace,
+                           replay_trace)
+
+SHAPE = ModelShape(vocab_sizes=(4000, 600), hotness=(4, 1), num_dense=3)
+
+
+def _stream(cfg, shapes=None):
+    return list(Workload(cfg, shapes or {"m": SHAPE}))
+
+
+# ---------------------------------------------------------------------------
+# workload determinism
+# ---------------------------------------------------------------------------
+
+def test_same_seed_identical_stream():
+    cfg = WorkloadConfig(qps=200, duration_s=1.0, rows=4, seed=3)
+    a, b = _stream(cfg), _stream(cfg)
+    assert len(a) == len(b) > 50
+    for ra, rb in zip(a, b):
+        assert ra.t == rb.t
+        assert ra.model == rb.model
+        assert ra.dense.dtype == np.float32 and ra.cat.dtype == np.int32
+        np.testing.assert_array_equal(ra.dense, rb.dense)
+        np.testing.assert_array_equal(ra.cat, rb.cat)
+
+
+def test_different_seed_different_stream():
+    mk = lambda s: WorkloadConfig(qps=200, duration_s=1.0, seed=s)
+    a, b = _stream(mk(0)), _stream(mk(1))
+    assert [r.t for r in a] != [r.t for r in b]
+
+
+def test_arrivals_monotone_and_bounded():
+    for arrival in ("poisson", "constant"):
+        cfg = WorkloadConfig(qps=100, duration_s=2.0, arrival=arrival)
+        ts = [r.t for r in _stream(cfg)]
+        assert ts == sorted(ts)
+        assert all(0 < t <= cfg.duration_s for t in ts)
+        # offered rate lands near the target (exactly, for constant)
+        assert len(ts) == pytest.approx(200, rel=0.3)
+
+
+def test_request_shapes_and_padding():
+    cfg = WorkloadConfig(qps=50, duration_s=0.5, rows=6)
+    for r in _stream(cfg):
+        assert r.dense.shape == (6, SHAPE.num_dense)
+        assert r.cat.shape == (6, SHAPE.num_tables, SHAPE.max_hot)
+        # table 1 has hotness 1: the rest of its slots are -1 padded
+        assert (r.cat[:, 1, 1:] == -1).all()
+        assert (r.cat[:, 0, :] >= 0).all()
+        assert (r.cat[:, 0, :] < SHAPE.vocab_sizes[0]).all()
+
+
+def test_mix_routes_by_weight():
+    shapes = {"a": SHAPE, "b": SHAPE}
+    cfg = WorkloadConfig(qps=2000, duration_s=1.0, rows=1, seed=5,
+                         mix={"a": 3.0, "b": 1.0})
+    counts = Counter(r.model for r in _stream(cfg, shapes))
+    assert counts["a"] / counts["b"] == pytest.approx(3.0, rel=0.25)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        WorkloadConfig(qps=1, duration_s=1, arrival="burst")
+    with pytest.raises(ValueError, match="zipf_a"):
+        WorkloadConfig(qps=1, duration_s=1, zipf_a=1.0)
+    with pytest.raises(ValueError, match="positive"):
+        WorkloadConfig(qps=0, duration_s=1)
+    with pytest.raises(ValueError, match="unknown models"):
+        Workload(WorkloadConfig(qps=1, duration_s=1, mix={"nope": 1.0}),
+                 {"m": SHAPE})
+
+
+# ---------------------------------------------------------------------------
+# hot-set drift
+# ---------------------------------------------------------------------------
+
+def _hot_ids(reqs, top=20):
+    """The top-N most frequent ids of table 0 across a request window."""
+    c = Counter()
+    for r in reqs:
+        c.update(int(x) for x in r.cat[:, 0, :].ravel())
+    return {i for i, _ in c.most_common(top)}
+
+
+@pytest.mark.parametrize("drift,max_overlap,min_overlap", [
+    (0.0, 1.0, 0.5),      # stationary: early and late hot sets agree
+    (0.4, 0.25, 0.0),     # drifting: the late hot set has moved on
+])
+def test_drift_moves_hot_set(drift, max_overlap, min_overlap):
+    cfg = WorkloadConfig(qps=150, duration_s=2.0, rows=8, seed=11,
+                         arrival="constant", zipf_a=1.5,
+                         drift_per_s=drift)
+    reqs = _stream(cfg)
+    early = _hot_ids([r for r in reqs if r.t < 0.3])
+    late = _hot_ids([r for r in reqs if r.t > cfg.duration_s - 0.3])
+    overlap = len(early & late) / len(early | late)
+    assert min_overlap <= overlap <= max_overlap, overlap
+
+
+def test_drift_preserves_id_range():
+    cfg = WorkloadConfig(qps=100, duration_s=1.0, drift_per_s=0.9)
+    for r in _stream(cfg):
+        assert (r.cat[:, 0, :] >= 0).all()
+        assert (r.cat[:, 0, :] < SHAPE.vocab_sizes[0]).all()
+
+
+# ---------------------------------------------------------------------------
+# trace record / replay
+# ---------------------------------------------------------------------------
+
+def test_trace_roundtrip_bit_exact(tmp_path):
+    cfg = WorkloadConfig(qps=100, duration_s=0.5, rows=3, seed=9,
+                         mix=None)
+    path = str(tmp_path / "trace.jsonl")
+    orig = _stream(cfg)
+    n = record_trace(path, orig)
+    back = list(replay_trace(path))
+    assert n == len(orig) == len(back)
+    for a, b in zip(orig, back):
+        assert a.t == b.t and a.model == b.model
+        assert b.dense.dtype == np.float32 and b.cat.dtype == np.int32
+        np.testing.assert_array_equal(a.dense, b.dense)
+        np.testing.assert_array_equal(a.cat, b.cat)
+
+
+def test_trace_rejects_foreign_file(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"format": "something-else"}\n')
+    with pytest.raises(ValueError, match="repro-loadtrace-v1"):
+        list(replay_trace(path))
+
+
+# ---------------------------------------------------------------------------
+# latency histogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_within_bucket_error():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=2.0, sigma=0.8, size=20_000)
+    h = LatencyHistogram()
+    for s in samples:
+        h.record(float(s))
+    assert h.count == len(samples)
+    assert h.mean == pytest.approx(float(samples.mean()), rel=1e-9)
+    for q in (50, 95, 99, 99.9):
+        want = float(np.percentile(samples, q))
+        # bucket width is ~2% relative: allow a few buckets of slack
+        assert h.percentile(q) == pytest.approx(want, rel=0.05)
+
+
+def test_histogram_merge_equals_combined():
+    rng = np.random.default_rng(1)
+    a_ms, b_ms = rng.exponential(5.0, 500), rng.exponential(40.0, 500)
+    ha, hb, hall = (LatencyHistogram() for _ in range(3))
+    for v in a_ms:
+        ha.record(float(v))
+        hall.record(float(v))
+    for v in b_ms:
+        hb.record(float(v))
+        hall.record(float(v))
+    merged = ha.snapshot().merge(hb)
+    np.testing.assert_array_equal(merged.counts, hall.counts)
+    assert merged.sum_ms == pytest.approx(hall.sum_ms)
+    assert merged.percentile(99) == hall.percentile(99)
+    # snapshot().merge left the original untouched
+    assert ha.count == 500
+
+
+def test_histogram_merge_rejects_layout_mismatch():
+    with pytest.raises(ValueError, match="bucket layouts"):
+        LatencyHistogram().merge(LatencyHistogram(growth=1.1))
+
+
+def test_histogram_dict_roundtrip_exact():
+    h = LatencyHistogram()
+    for v in (0.0005, 0.1, 3.0, 250.0, 1e7):   # under/over-flow included
+        h.record(v)
+    back = LatencyHistogram.from_dict(h.to_dict())
+    np.testing.assert_array_equal(back.counts, h.counts)
+    assert back.sum_ms == h.sum_ms
+    assert back.summary() == h.summary()
+
+
+def test_histogram_empty_and_reset():
+    h = LatencyHistogram()
+    assert h.percentile(99) == 0.0 and h.mean == 0.0
+    h.record(5.0)
+    assert h.count == 1
+    h.reset()
+    assert h.count == 0 and h.sum_ms == 0.0
+
+
+# ---------------------------------------------------------------------------
+# windowed delivered-rate
+# ---------------------------------------------------------------------------
+
+def test_windowed_rate_series_and_peak():
+    r = WindowedRate(window_s=1.0)
+    for t in (0.1, 0.2, 0.9, 1.5, 3.2, 3.3, 3.4):
+        r.record(t)
+    assert r.total == 7
+    assert r.series() == [(0.0, 3.0), (1.0, 1.0), (3.0, 3.0)]
+    assert r.peak() == 3.0
+
+
+def test_windowed_rate_merge():
+    a, b = WindowedRate(), WindowedRate()
+    a.record(0.5, n=2)
+    b.record(0.7)
+    b.record(2.1)
+    a.merge(b)
+    assert dict(a.series()) == {0.0: 3.0, 2.0: 1.0}
+    with pytest.raises(ValueError, match="window"):
+        a.merge(WindowedRate(window_s=2.0))
