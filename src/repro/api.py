@@ -73,10 +73,37 @@ needed.
 ====================  =====================================================
 
 The graph must end in exactly ONE terminal tensor (produced, never
-consumed): a ``sigmoid`` layer, or a logit-shaped tensor. WDL/DeepFM —
-and any novel graph wanting a first-order branch — declare TWO
-``SparseEmbedding`` groups: the deep one plus a dim-1 wide twin
-(same vocab sizes, ``combiner="sum"``).
+consumed): a ``sigmoid`` layer, or a logit-shaped tensor.
+
+**N-group embeddings.** A model may declare ANY number of
+``SparseEmbedding`` groups, each with its own dim / vocab sizes /
+hotness — the NeuMF/two-tower shape with separate user and item
+embedding dims. The first declared group is the primary collection;
+every further group lowers to its own ``EmbeddingCollection`` (param
+key ``embedding@<top_name>``), its own column span in the ``cat``
+input (columns follow declaration order: primary tables first, then
+each group's), and its own HPS table set at deploy time. Table names
+must be globally unique; a group without explicit ``table_names``
+defaults to ``<top_name>_f<i>`` (the primary keeps ``f<i>``). One
+special case is kept for the paper recipes: exactly two groups where
+one is the dim-1 exact twin of the other (same vocab sizes,
+``combiner="sum"``) lower as deep + wide branch — WDL/DeepFM and any
+novel graph wanting a first-order term.
+
+**Model parallelism.** ``Solver`` carries the mesh intent and
+``fit()`` honors it end to end: ``mesh_shape=(r, c)`` lays the visible
+devices out as a ``("data", "model")`` mesh (validated up front
+against the visible device count), embeddings shard over the mesh per
+the placement planner while the dense net stays data-parallel, and the
+sharded train step runs under either ``mode="gspmd"`` (XLA inserts the
+collectives) or ``mode="manual"`` (explicit psum, compressed gradient
+all-reduce via ``grad_allreduce_dtype``). ``comm`` picks the embedding
+exchange per collection: ``"allgather_rs"``, ``"all_to_all"``, or
+``"auto"`` (the default — all-to-all only for groups of large one-hot
+tables, threshold ``a2a_threshold``; pooled or small tables keep
+allgather + reduce-scatter). Checkpoints store mesh-independent
+logical arrays, so ``save()`` on one mesh and ``load()`` on another
+just works.
 
 ``graph_to_json`` embeds a hash of the lowered config;
 ``Model.from_json`` re-lowers and verifies it. ``deploy(directory)``
@@ -99,12 +126,13 @@ import numpy as np
 
 from repro.configs.base import (
     EmbeddingTableConfig, EnsembleConfig, HPSConfig, RecsysConfig,
-    TrainConfig, ensemble_config_to_dict, hps_config_to_dict,
-    recsys_config_hash,
+    SparseGroupConfig, TrainConfig, ensemble_config_to_dict,
+    hps_config_to_dict, recsys_config_hash,
 )
 
 from repro.models.recsys.dense_graph import (
-    GraphError, compile_layers, graph_spec, spec_from_layer,
+    GraphError, RESERVED_NAMES, compile_layers, graph_spec,
+    spec_from_layer,
 )
 
 GRAPH_FORMAT = "repro-graph-v1"
@@ -131,12 +159,43 @@ class Solver:
     mode: str = "gspmd"                       # "gspmd" | "manual"
     #: None = size the mesh to the visible devices; (r, c) = test mesh
     mesh_shape: Optional[Tuple[int, ...]] = None
+    #: embedding exchange per collection: "auto" picks all_to_all for
+    #: groups of large one-hot tables (>= a2a_threshold rows) and
+    #: allgather_rs otherwise; or pin "allgather_rs" / "all_to_all"
+    comm: str = "auto"
+    a2a_threshold: int = 65536
     ckpt_interval: int = 50
     seed: int = 0
 
     def __post_init__(self):
+        if self.mode not in ("gspmd", "manual"):
+            raise GraphError(
+                f"Solver.mode must be 'gspmd' or 'manual', got "
+                f"{self.mode!r}")
+        if self.comm not in ("auto", "allgather_rs", "all_to_all"):
+            raise GraphError(
+                f"Solver.comm must be 'auto', 'allgather_rs' or "
+                f"'all_to_all', got {self.comm!r}")
         if self.mesh_shape is not None:
-            self.mesh_shape = tuple(self.mesh_shape)
+            shape = tuple(self.mesh_shape)
+            if not shape or any(not isinstance(s, int) or
+                                isinstance(s, bool) or s <= 0
+                                for s in shape):
+                raise GraphError(
+                    f"Solver.mesh_shape must be a non-empty tuple of "
+                    f"positive ints, got {self.mesh_shape!r}")
+            want = 1
+            for s in shape:
+                want *= s
+            visible = len(jax.devices())
+            if want > visible:
+                raise GraphError(
+                    f"Solver.mesh_shape={shape} asks for {want} devices "
+                    f"but only {visible} are visible; shrink the mesh "
+                    f"or force host devices with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={want} "
+                    "(set before jax initializes)")
+            self.mesh_shape = shape
 
     def to_train_config(self) -> TrainConfig:
         return TrainConfig(
@@ -206,9 +265,10 @@ class SparseEmbedding:
                     f"{len(self.table_names)} table_names for "
                     f"{len(self.vocab_sizes)} vocab_sizes")
 
-    def to_tables(self) -> Tuple[EmbeddingTableConfig, ...]:
+    def to_tables(self, *, default_prefix: str = ""
+                  ) -> Tuple[EmbeddingTableConfig, ...]:
         names = self.table_names or tuple(
-            f"f{i}" for i in range(len(self.vocab_sizes)))
+            f"{default_prefix}f{i}" for i in range(len(self.vocab_sizes)))
         hot = self.hotness if not isinstance(self.hotness, int) else \
             (self.hotness,) * len(self.vocab_sizes)
         return tuple(
@@ -289,29 +349,38 @@ def _check_embeddings(inp: Input, embs: List[SparseEmbedding]) -> None:
                 f"{inp.sparse_name!r}")
         if e.top_name in produced:
             raise GraphError(f"duplicate tensor name {e.top_name!r}")
+        if e.top_name in RESERVED_NAMES or \
+                e.top_name.startswith("embedding@"):
+            raise GraphError(
+                f"SparseEmbedding top_name {e.top_name!r} is reserved "
+                "for the embedding parameter groups")
         produced.add(e.top_name)
 
 
 def _split_embeddings(embs: List[SparseEmbedding]
-                      ) -> Tuple[SparseEmbedding, Optional[SparseEmbedding]]:
+                      ) -> Tuple[SparseEmbedding,
+                                 Optional[SparseEmbedding],
+                                 List[SparseEmbedding]]:
+    """Split declared groups into (deep, wide, extras).
+
+    The one shape the paper recipes rely on is preserved: exactly TWO
+    groups where one is the dim-1 exact twin of the other (same vocab
+    sizes, ``combiner="sum"``) classify as deep + wide branch. Every
+    other combination lowers as N independent groups: the first
+    declared is the primary collection, the rest are extras with their
+    own dims, collections and HPS table sets.
+    """
     if len(embs) == 1:
-        return embs[0], None
-    wides = [e for e in embs if e.dim == 1]
-    if len(wides) != 1:
-        raise GraphError(
-            "with two SparseEmbedding groups exactly one must be the "
-            f"dim-1 wide branch; got dims "
-            f"{[e.dim for e in embs]}")
-    wide = wides[0]
-    deep = next(e for e in embs if e is not wide)
-    if wide.vocab_sizes != deep.vocab_sizes:
-        raise GraphError(
-            "the wide branch must mirror the deep tables: vocab_sizes "
-            f"differ ({len(wide.vocab_sizes)} vs "
-            f"{len(deep.vocab_sizes)} tables or unequal sizes)")
-    if wide.combiner != "sum":
-        raise GraphError("the wide branch pools with combiner='sum'")
-    return deep, wide
+        return embs[0], None, []
+    if len(embs) == 2:
+        wides = [e for e in embs if e.dim == 1]
+        if len(wides) == 1:
+            wide = wides[0]
+            deep = next(e for e in embs if e is not wide)
+            if wide.vocab_sizes == deep.vocab_sizes and \
+                    wide.combiner == "sum":
+                return deep, wide, []
+    return embs[0], None, list(embs[1:])
 
 
 # -- canonical-recipe recognition -------------------------------------------
@@ -530,29 +599,48 @@ def lower_graph(name: str, inp: Optional[Input],
         raise GraphError("the graph needs an Input layer")
     if not embs:
         raise GraphError("the graph needs at least one SparseEmbedding")
-    if len(embs) > 2:
-        raise GraphError("at most two SparseEmbedding groups (deep + "
-                         f"wide) are supported, got {len(embs)}")
     _check_embeddings(inp, embs)
-    deep, wide = _split_embeddings(embs)
+    deep, wide, extras = _split_embeddings(embs)
     specs = [spec_from_layer(l) for l in layers]
+    extra_embs = {e.top_name: (len(e.vocab_sizes), e.dim)
+                  for e in extras}
     # the generic compile IS the validation: every graph must pass it
     compile_layers(
         specs, dense_name=inp.dense_name, num_dense=inp.dense_dim,
         emb_name=deep.top_name, num_tables=len(deep.vocab_sizes),
         emb_dim=deep.dim,
-        wide_name=wide.top_name if wide is not None else None)
-    cfg = _classify_canonical(name, inp, deep, wide, layers)
-    if cfg is not None:
-        return cfg
+        wide_name=wide.top_name if wide is not None else None,
+        extra_embs=extra_embs)
+    if not extras:
+        cfg = _classify_canonical(name, inp, deep, wide, layers)
+        if cfg is not None:
+            return cfg
+    extra_groups = tuple(
+        SparseGroupConfig(
+            name=e.top_name,
+            tables=e.to_tables(default_prefix=f"{e.top_name}_"),
+            dim=e.dim)
+        for e in extras)
+    all_names = [t.name for t in deep.to_tables()] \
+        + [t.name for g in extra_groups for t in g.tables]
+    seen = set()
+    for tn in all_names:
+        if tn in seen:
+            raise GraphError(
+                f"table name {tn!r} is used by more than one "
+                "SparseEmbedding group; table names must be globally "
+                "unique (set table_names explicitly)")
+        seen.add(tn)
     return RecsysConfig(
         name=name, model="graph", tables=deep.to_tables(),
         num_dense_features=inp.dense_dim, bottom_mlp=(), top_mlp=(),
         embedding_dim=deep.dim,
         dense_graph=graph_spec(
             inp.dense_name, deep.top_name,
-            wide.top_name if wide is not None else None, specs),
-        wide_branch=wide is not None)
+            wide.top_name if wide is not None else None, specs,
+            extras=tuple(e.top_name for e in extras)),
+        wide_branch=wide is not None,
+        extra_groups=extra_groups)
 
 
 # ---------------------------------------------------------------------------
@@ -566,6 +654,48 @@ def _auto_mesh(mesh_shape: Optional[Tuple[int, ...]]):
     n_dev = len(jax.devices())
     return make_test_mesh((n_dev, 1)) if n_dev < 256 \
         else make_production_mesh()
+
+
+def _validate_mesh_fit(cfg: RecsysConfig, mesh, batch_size: int) -> None:
+    """Up-front mesh / batch / table divisibility validation.
+
+    Everything checked here used to surface as an inscrutable shape
+    error deep inside ``shard_map`` on the first ``fit()`` step; now it
+    raises a :class:`GraphError` at ``compile()`` naming the offending
+    axis or table group.
+    """
+    axes = tuple(mesh.axis_names)
+    model_axis = "model" if "model" in axes else axes[-1]
+    dp_axes = tuple(a for a in axes if a != model_axis)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    n_dev = int(np.prod(mesh.devices.shape))
+    if batch_size % max(1, n_dp) != 0:
+        raise GraphError(
+            f"batch_size={batch_size} is not divisible by the data-"
+            f"parallel device count {n_dp} (mesh axes {dp_axes} of mesh "
+            f"shape {dict(mesh.shape)}); batches shard over the data "
+            "axes, so pick a batch size the data extent divides")
+    from repro.core.embedding.planner import resolve_strategies
+    from repro.launch.mesh import mesh_config_for
+    from repro.models.recsys.model import wide_tables
+    groups = [("emb", cfg.tables)]
+    if cfg.model in ("wdl", "deepfm") or \
+            (cfg.model == "graph" and cfg.wide_branch):
+        groups.append(("wide", wide_tables(cfg)))
+    for g in cfg.extra_groups:
+        groups.append((g.name, g.tables))
+    mc = mesh_config_for(mesh)
+    for gname, tabs in groups:
+        resolved = resolve_strategies(tabs, mc, batch_size)
+        loc = [t for t in resolved if t.strategy == "localized"]
+        if loc and len(loc) % n_dev != 0:
+            raise GraphError(
+                f"embedding group {gname!r}: {len(loc)} localized "
+                f"table(s) {[t.name for t in loc]} cannot spread evenly "
+                f"over {n_dev} devices; localized placement needs the "
+                "table count divisible by the device count")
 
 
 class Model:
@@ -630,9 +760,12 @@ class Model:
         self.batch_size = self.solver.batch_size
         self.mesh = mesh or self._mesh_override \
             or _auto_mesh(self.solver.mesh_shape)
+        _validate_mesh_fit(self.cfg, self.mesh, self.batch_size)
         with self.mesh:
-            self._model = RecsysModel(self.cfg, self.mesh,
-                                      global_batch=self.batch_size)
+            self._model = RecsysModel(
+                self.cfg, self.mesh, global_batch=self.batch_size,
+                comm=self.solver.comm,
+                a2a_threshold=self.solver.a2a_threshold)
         self._apply_jit = None        # one jitted forward, built lazily
         return self
 
@@ -846,8 +979,9 @@ class Model:
     # -- deployment -------------------------------------------------------------------
 
     def dense_params(self) -> Dict:
+        from repro.train.train_step import is_sparse_key
         return {k: v for k, v in self._params.items()
-                if k not in ("embedding", "wide_embedding")}
+                if not is_sparse_key(k)}
 
     def _write_bundle_member(self, pdb, bundle_dir: str, sub: str, *,
                              cache_capacity: int, cache_shards: int,
@@ -902,8 +1036,17 @@ class Model:
                            cache_capacity=hcfg.cache_capacity,
                            cache_shards=hcfg.cache_shards,
                            payload_dtype=hcfg.payload_dtype)
+        # one HPS per extra N-group collection — its tables are derived
+        # from the lowered config, so the ps.json schema is unchanged
+        extra_hps = {
+            g.name: HPS(self.name, g.tables, pdb, vdb=vdb, bus=bus,
+                        cache_capacity=hcfg.cache_capacity,
+                        cache_shards=hcfg.cache_shards,
+                        payload_dtype=hcfg.payload_dtype)
+            for g in self.cfg.extra_groups}
         return InferenceServer(self._model, dense, hps,
                                wide_hps=wide_hps,
+                               extra_hps=extra_hps or None,
                                max_batch=hcfg.max_batch,
                                refresh_budget=hcfg.refresh_budget)
 
@@ -971,7 +1114,7 @@ def hotness_cache_capacities(models: Sequence["Model"],
     """Split one total L1 row ``budget`` across ensemble members in
     proportion to their table-hotness working sets (each model gets at
     least 64 rows so a cold member still serves)."""
-    demand = {m.name: _hotness_demand(m.cfg.tables) for m in models}
+    demand = {m.name: _hotness_demand(m.cfg.all_tables) for m in models}
     total = sum(demand.values())
     return {name: max(64, int(round(budget * d / total)))
             for name, d in demand.items()}

@@ -42,6 +42,21 @@ class EmbeddingTableConfig:
         return self.vocab_size * self.dim
 
 
+@dataclasses.dataclass(frozen=True)
+class SparseGroupConfig:
+    """One extra N-group embedding collection beyond the primary tables.
+
+    The graph API lowers each independently-dimensioned
+    ``SparseEmbedding`` group past the first to one of these; every
+    group becomes its own ``EmbeddingCollection`` at build time and its
+    own HPS table set at deploy time. ``name`` is the group's graph
+    tensor name (its top); all tables in a group share ``dim``.
+    """
+    name: str
+    tables: Tuple[EmbeddingTableConfig, ...]
+    dim: int
+
+
 # ---------------------------------------------------------------------------
 # Recsys models (DLRM / DCN / DeepFM / WDL)
 # ---------------------------------------------------------------------------
@@ -65,14 +80,27 @@ class RecsysConfig:
     #: model == "graph" only: whether a dim-1 wide twin branch exists
     #: (wdl/deepfm imply it via their model name)
     wide_branch: bool = False
+    #: model == "graph" only: extra independently-dimensioned embedding
+    #: groups beyond the primary ``tables`` (N-group SparseEmbedding
+    #: lowering). Canonical recipes keep ().
+    extra_groups: Tuple[SparseGroupConfig, ...] = ()
 
     @property
     def num_tables(self) -> int:
         return len(self.tables)
 
     @property
+    def all_tables(self) -> Tuple[EmbeddingTableConfig, ...]:
+        """Primary tables plus every extra group's tables, in the
+        declared order — the full ``cat`` column layout."""
+        out = tuple(self.tables)
+        for g in self.extra_groups:
+            out += tuple(g.tables)
+        return out
+
+    @property
     def total_embedding_params(self) -> int:
-        return sum(t.param_count for t in self.tables)
+        return sum(t.param_count for t in self.all_tables)
 
 
 def recsys_config_to_dict(cfg: RecsysConfig) -> Dict:
@@ -87,6 +115,8 @@ def recsys_config_to_dict(cfg: RecsysConfig) -> Dict:
         del d["dense_graph"]
     if not d["wide_branch"]:
         del d["wide_branch"]
+    if not d["extra_groups"]:
+        del d["extra_groups"]
     return d
 
 
@@ -98,6 +128,14 @@ def recsys_config_from_dict(d: Dict) -> RecsysConfig:
     if rest.get("dense_graph"):
         from repro.models.recsys.dense_graph import dense_graph_from_jsonable
         rest["dense_graph"] = dense_graph_from_jsonable(rest["dense_graph"])
+    if rest.get("extra_groups"):
+        rest["extra_groups"] = tuple(
+            SparseGroupConfig(
+                name=g["name"],
+                tables=tuple(EmbeddingTableConfig(**t)
+                             for t in g["tables"]),
+                dim=g["dim"])
+            for g in rest["extra_groups"])
     return RecsysConfig(tables=tables, **rest)
 
 

@@ -183,7 +183,8 @@ RECSYS_ARCHS: Dict[str, RecsysConfig] = {
 RECSYS_RECIPES: Dict[str, str] = {
     arch: "repro.configs." + arch.replace("-", "_")
     for arch in ("dlrm-criteo", "dcn-criteo", "deepfm-criteo",
-                 "wdl-criteo", "twotower-criteo", "crossdeep-criteo")
+                 "wdl-criteo", "twotower-criteo", "crossdeep-criteo",
+                 "neumf-criteo")
 }
 
 

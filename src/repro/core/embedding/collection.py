@@ -342,11 +342,24 @@ class EmbeddingCollection:
 
     def import_logical(self, logical: Dict[str, jax.Array]
                        ) -> Dict[str, jax.Array]:
-        """Inverse of :meth:`export_logical` for THIS mesh size."""
+        """Inverse of :meth:`export_logical` for THIS mesh size.
+
+        The incoming array may carry a DIFFERENT mesh's padding (a
+        checkpoint is unpadded, but callers sometimes hand back a
+        to_logical() from another collection): everything past the
+        group's logical rows is dropped and the pad stripe is freshly
+        zeroed, so stale pad garbage from the writing mesh can never
+        reach a lookup on this one.
+        """
         out = {}
         for k, v in logical.items():
             if k in ("dist", "cold"):
                 g = self.groups[k]
+                if v.shape[0] < g.total_rows:
+                    raise ValueError(
+                        f"embedding group {k!r}: checkpoint has "
+                        f"{v.shape[0]} rows, need {g.total_rows}")
+                v = v[:g.total_rows]
                 rpad = self._padded_rows(g)
                 v = jnp.pad(v, ((0, rpad - v.shape[0]), (0, 0)))
             out[k] = v

@@ -94,6 +94,25 @@ def _mem(t: EmbeddingTableConfig, strategy: str, n: int, s: int) -> float:
     return full
 
 
+def choose_comm(tables: Sequence[EmbeddingTableConfig], *,
+                threshold: int = 65536) -> str:
+    """Pick the embedding-collection comm pattern for one table group.
+
+    The hybrid recipe (Mudigere et al., cited from the paper's §4):
+    ``all_to_all`` only pays off for LARGE one-hot tables, where each
+    device requests exactly the rows it needs instead of allgathering a
+    shard-padded block. Pooled (hotness > 1) or small tables keep
+    ``allgather_rs`` — pooling happens shard-side before any exchange
+    and small tables cost next to nothing to allgather.
+    """
+    if not tables:
+        return "allgather_rs"
+    if all(t.hotness == 1 for t in tables) and \
+            max(t.vocab_size for t in tables) >= threshold:
+        return "all_to_all"
+    return "allgather_rs"
+
+
 def resolve_strategies(tables: Sequence[EmbeddingTableConfig],
                        mesh: MeshConfig, global_batch: int,
                        ) -> Tuple[EmbeddingTableConfig, ...]:

@@ -25,12 +25,15 @@ class SyntheticCTR:
         self.batch_size = batch_size
         self.seed = seed
         self.zipf_a = zipf_a
-        self.max_hot = max(t.hotness for t in cfg.tables)
+        #: cat column layout covers EVERY embedding group (primary tables
+        #: first, then each extra group's, in declaration order)
+        self.tables = tuple(getattr(cfg, "all_tables", cfg.tables))
+        self.max_hot = max(t.hotness for t in self.tables)
         # planted logistic model so training has signal
         rng = np.random.default_rng(seed + 7777)
         self._w_dense = rng.normal(size=cfg.num_dense_features) * 0.5
         self._w_cat = [rng.normal(size=t.vocab_size) * 0.5
-                       for t in cfg.tables]
+                       for t in self.tables]
 
     def _zipf_ids(self, rng, vocab: int, size) -> np.ndarray:
         """Frequency-sorted Zipf draw truncated to [0, vocab)."""
@@ -43,10 +46,10 @@ class SyntheticCTR:
     def batch(self, step: int) -> Dict[str, np.ndarray]:
         rng = np.random.default_rng((self.seed, step))
         cfg = self.cfg
-        b, t, h = self.batch_size, cfg.num_tables, self.max_hot
+        b, t, h = self.batch_size, len(self.tables), self.max_hot
         cat = np.full((b, t, h), -1, np.int32)
         score = np.zeros(b)
-        for i, tab in enumerate(cfg.tables):
+        for i, tab in enumerate(self.tables):
             ids = self._zipf_ids(rng, tab.vocab_size, (b, tab.hotness))
             cat[:, i, :tab.hotness] = ids
             score += self._w_cat[i][ids].sum(axis=1) / tab.hotness

@@ -111,6 +111,19 @@ def export_recsys(model, params: Dict, directory: str,
                       "attrs": {"tables": wide_table_names,
                                 "combiners": ["sum"] * len(
                                     wide_table_names)}})
+    # N-group models: one gather per extra group, reading its own cat
+    # column span (col_start; absent/0 on legacy single-group graphs)
+    cols = model.group_columns()
+    for gname, coll in model.extra.items():
+        key = f"embedding@{gname}"
+        for name, full in logical_tables(coll, params[key]).items():
+            weights[f"table/{name}"] = full
+        nodes.append({"op": "gather_sum", "inputs": ["cat"],
+                      "output": gname,
+                      "attrs": {"tables": [t.name for t in coll.tables],
+                                "combiners": [t.combiner
+                                              for t in coll.tables],
+                                "col_start": cols[key][0]}})
 
     # -- dense graph: one walk of the compiled program ---------------------
     for node in program.nodes:
@@ -194,6 +207,8 @@ def export_recsys(model, params: Dict, directory: str,
     from repro.models.recsys.model import wide_tables
     all_tables = cfg.tables + (wide_tables(cfg)
                                if model.wide is not None else ())
+    for g in getattr(cfg, "extra_groups", ()):
+        all_tables = all_tables + tuple(g.tables)
     graph = {
         "format": "repro-portable-v1",
         "model": model_name,
@@ -245,9 +260,10 @@ def run_exported(graph: Dict, weights: Dict[str, np.ndarray],
                 graph["tables"][ti]["combiner"]
                 for ti in range(len(a["tables"]))]
             outs = []
+            col0 = a.get("col_start", 0)
             for ti, tname in enumerate(a["tables"]):
                 tab = weights[f"table/{tname}"]
-                ids = cat[:, ti, :]
+                ids = cat[:, col0 + ti, :]
                 valid = ids >= 0
                 rows = tab[np.clip(ids, 0, None)]
                 rows = rows * valid[..., None]

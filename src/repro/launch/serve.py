@@ -63,6 +63,7 @@ def _build_model_server(base: str, hcfg: HPSConfig, pdb, *, mesh=None,
     from repro.api import Model
     from repro.models.recsys.model import wide_tables
     from repro.train import checkpoint as ck
+    from repro.train.train_step import is_sparse_key
 
     import jax
 
@@ -89,14 +90,16 @@ def _build_model_server(base: str, hcfg: HPSConfig, pdb, *, mesh=None,
     with m.mesh:
         dummy = jax.eval_shape(
             lambda: m.model.init(jax.random.PRNGKey(0)))
-    template = {k: v for k, v in dummy.items()
-                if k not in ("embedding", "wide_embedding")}
+    template = {k: v for k, v in dummy.items() if not is_sparse_key(k)}
     dense = ck.unflatten_like(template, flat)
 
     for t in hcfg.tables:
         pdb.open_table(hcfg.model, t.name)
     if hcfg.wide:
         for t in wide_tables(m.cfg):
+            pdb.open_table(hcfg.model, t.name)
+    for g in m.cfg.extra_groups:        # N-group models: one table set
+        for t in g.tables:              # (and later one HPS) per group
             pdb.open_table(hcfg.model, t.name)
     return m._build_server(pdb, hcfg, dense, vdb=vdb, bus=bus), m
 

@@ -35,6 +35,11 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-interval", type=int, default=50)
     ap.add_argument("--mode", default="gspmd", choices=["gspmd", "manual"])
+    ap.add_argument("--comm", default="auto",
+                    choices=["auto", "allgather_rs", "all_to_all"],
+                    help="embedding collective recipe: 'auto' picks "
+                         "all_to_all for one-hot models with large "
+                         "tables and allgather_rs otherwise")
     ap.add_argument("--grad-ar-dtype", default="f32",
                     choices=["f32", "bf16"],
                     help="bf16 = compressed gradient all-reduce")
@@ -68,7 +73,7 @@ def main():
         recipe = importlib.import_module(RECSYS_RECIPES[args.arch])
         solver = Solver(batch_size=args.batch, lr=args.lr,
                         grad_allreduce_dtype=args.grad_ar_dtype,
-                        mode=args.mode,
+                        mode=args.mode, comm=args.comm,
                         ckpt_interval=args.ckpt_interval)
         model = recipe.build_model(smoke=args.smoke or n_dev == 1,
                                    solver=solver, mesh=mesh)

@@ -84,11 +84,18 @@ def spec_from_layer(layer) -> LayerSpec:
 # -- serializable spec (RecsysConfig.dense_graph) ---------------------------
 
 def graph_spec(dense_name: str, emb_name: str, wide_name: Optional[str],
-               specs: Sequence[LayerSpec]) -> Tuple:
+               specs: Sequence[LayerSpec],
+               extras: Sequence[str] = ()) -> Tuple:
     """The hashable tuple form embedded in ``RecsysConfig.dense_graph``:
     one ``("inputs", dense, emb, wide)`` header + one
-    ``(type, bottoms, top, attrs)`` tuple per layer."""
-    out: List[Tuple] = [("inputs", dense_name, emb_name, wide_name or "")]
+    ``(type, bottoms, top, attrs)`` tuple per layer. N-group models
+    append a 5th header element naming the extra embedding inputs —
+    omitted when there are none, so legacy specs (and their config
+    hashes) are unchanged."""
+    head: Tuple = ("inputs", dense_name, emb_name, wide_name or "")
+    if extras:
+        head = head + (tuple(extras),)
+    out: List[Tuple] = [head]
     for s in specs:
         attrs: List[Tuple] = []
         if s.type == "mlp":
@@ -103,11 +110,16 @@ def graph_spec(dense_name: str, emb_name: str, wide_name: Optional[str],
 
 
 def spec_layers(dense_graph: Tuple) -> Tuple[str, str, Optional[str],
-                                             List[LayerSpec]]:
-    """Inverse of :func:`graph_spec`."""
+                                             List[LayerSpec],
+                                             Tuple[str, ...]]:
+    """Inverse of :func:`graph_spec`. The last return value is the
+    tuple of extra embedding input names (() for legacy 4-field
+    headers)."""
     if not dense_graph or dense_graph[0][0] != "inputs":
         raise GraphError("dense_graph spec is missing its inputs header")
-    _, dense_name, emb_name, wide_name = dense_graph[0]
+    head = dense_graph[0]
+    _, dense_name, emb_name, wide_name = head[:4]
+    extras = tuple(head[4]) if len(head) > 4 else ()
     specs = []
     for typ, bottoms, top, attrs in dense_graph[1:]:
         kw = dict(attrs)
@@ -117,14 +129,17 @@ def spec_layers(dense_graph: Tuple) -> Tuple[str, str, Optional[str],
             num_layers=int(kw.get("num_layers", 0)),
             final_activation=bool(kw.get("final_activation", False)),
             start=int(kw.get("start", 0)), stop=int(kw.get("stop", 0))))
-    return dense_name, emb_name, (wide_name or None), specs
+    return dense_name, emb_name, (wide_name or None), specs, extras
 
 
 def dense_graph_from_jsonable(g) -> Tuple:
     """Rebuild the tuple spec from its JSON (lists) form."""
     if not g:
         return ()
-    out: List[Tuple] = [tuple(g[0])]
+    head = list(g[0])
+    if len(head) > 4:              # N-group header carries extras names
+        head[4] = tuple(head[4])
+    out: List[Tuple] = [tuple(head)]
     for typ, bottoms, top, attrs in g[1:]:
         out.append((typ, tuple(bottoms), top,
                     tuple((k, tuple(v) if isinstance(v, (list, tuple))
@@ -312,14 +327,19 @@ class DenseGraphProgram:
 
     # -- execution -------------------------------------------------------------
 
-    def make_env(self, dense, emb, wide, compute_dtype) -> Dict:
+    def make_env(self, dense, emb, wide, compute_dtype,
+                 extras: Optional[Dict] = None) -> Dict:
         """Input environment with the canonical entry casts: dense f32,
         the deep embedding block in compute dtype, the wide block as
-        delivered (the first-order term pools it in its own dtype)."""
+        delivered (the first-order term pools it in its own dtype).
+        ``extras`` maps extra embedding group names to their pooled
+        blocks (N-group models); they get the deep cast."""
         env = {self.inputs["dense"]: dense.astype(jnp.float32),
                self.inputs["emb"]: emb.astype(compute_dtype)}
         if self.inputs.get("wide") and wide is not None:
             env[self.inputs["wide"]] = wide
+        for name in self.inputs.get("extras", ()):
+            env[name] = extras[name].astype(compute_dtype)
         return env
 
     def apply(self, params: Dict, env: Dict, compute_dtype) -> jax.Array:
@@ -403,21 +423,30 @@ class DenseGraphProgram:
 def compile_layers(specs: Sequence[LayerSpec], *, dense_name: str,
                    num_dense: int, emb_name: str, num_tables: int,
                    emb_dim: int, wide_name: Optional[str] = None,
+                   extra_embs: Optional[Dict[str, Tuple[int, int]]] = None,
                    use_kernels: bool = False) -> DenseGraphProgram:
     """Validate + toposort + shape-infer the layer DAG and emit the
     program. Every failure is a :class:`GraphError` naming the offending
-    layer or tensor."""
+    layer or tensor. ``extra_embs`` maps extra embedding group names to
+    their per-sample ``(num_tables, dim)`` shapes (N-group models)."""
     specs = list(specs)
+    extra_embs = dict(extra_embs or {})
     inputs: Dict[str, Tuple[int, ...]] = {dense_name: (num_dense,),
                                           emb_name: (num_tables, emb_dim)}
     if wide_name:
         inputs[wide_name] = (num_tables, 1)
+    for name, (t_n, d_n) in extra_embs.items():
+        if name in inputs:
+            raise GraphError(
+                f"extra SparseEmbedding group name {name!r} collides "
+                "with another graph input")
+        inputs[name] = (t_n, d_n)
 
     produced = set(inputs)
     for s in specs:
         if s.top in produced:
             raise GraphError(f"duplicate tensor name {s.top!r}")
-        if s.top in RESERVED_NAMES:
+        if s.top in RESERVED_NAMES or s.top.startswith("embedding@"):
             raise GraphError(
                 f"tensor name {s.top!r} is reserved for the embedding "
                 "parameter groups")
@@ -448,7 +477,9 @@ def compile_layers(specs: Sequence[LayerSpec], *, dense_name: str,
             f"the graph must end in exactly one terminal tensor, got "
             f"{len(terminals)}: {names} are all unconsumed — unused "
             "layers must be removed or wired in")
-    for name in (emb_name,) + ((wide_name,) if wide_name else ()):
+    must_read = (emb_name,) + ((wide_name,) if wide_name else ()) \
+        + tuple(extra_embs)
+    for name in must_read:
         if name not in consumed:
             raise GraphError(
                 f"SparseEmbedding output {name!r} is never read by any "
@@ -512,7 +543,8 @@ def compile_layers(specs: Sequence[LayerSpec], *, dense_name: str,
 
     return DenseGraphProgram(
         nodes, shapes,
-        {"dense": dense_name, "emb": emb_name, "wide": wide_name},
+        {"dense": dense_name, "emb": emb_name, "wide": wide_name,
+         "extras": tuple(extra_embs)},
         logit_bottoms, use_kernels=use_kernels)
 
 
@@ -588,9 +620,18 @@ def program_for(cfg, *, use_kernels: bool = False) -> DenseGraphProgram:
     historical params; ``model == "graph"`` compiles ``cfg.dense_graph``."""
     if cfg.model != "graph":
         return canonical_program(cfg, use_kernels=use_kernels)
-    dense_name, emb_name, wide_name, specs = spec_layers(cfg.dense_graph)
+    dense_name, emb_name, wide_name, specs, extras = \
+        spec_layers(cfg.dense_graph)
+    by_name = {g.name: g for g in getattr(cfg, "extra_groups", ())}
+    missing = [n for n in extras if n not in by_name]
+    if missing:
+        raise GraphError(
+            f"dense_graph header names extra embedding inputs {missing} "
+            "with no matching extra_groups entry in the config")
+    extra_embs = {n: (len(by_name[n].tables), by_name[n].dim)
+                  for n in extras}
     return compile_layers(
         specs, dense_name=dense_name, num_dense=cfg.num_dense_features,
         emb_name=emb_name, num_tables=len(cfg.tables),
         emb_dim=cfg.embedding_dim, wide_name=wide_name,
-        use_kernels=use_kernels)
+        extra_embs=extra_embs, use_kernels=use_kernels)

@@ -45,24 +45,18 @@ def export_logical_params(model, params: Dict) -> Dict:
     """Param tree with embedding groups in LOGICAL (mesh-independent)
     layout — the checkpoint format shared by Trainer and api.Model."""
     out = dict(params)
-    if "embedding" in out:
-        out["embedding"] = model.embedding.export_logical(
-            out["embedding"])
-    if "wide_embedding" in out:
-        out["wide_embedding"] = model.wide.export_logical(
-            out["wide_embedding"])
+    for key, coll in model.collections().items():
+        if key in out:
+            out[key] = coll.export_logical(out[key])
     return out
 
 
 def import_logical_params(model, params: Dict) -> Dict:
     """Inverse of :func:`export_logical_params` for ``model``'s mesh."""
     out = dict(params)
-    if "embedding" in out:
-        out["embedding"] = model.embedding.import_logical(
-            out["embedding"])
-    if "wide_embedding" in out:
-        out["wide_embedding"] = model.wide.import_logical(
-            out["wide_embedding"])
+    for key, coll in model.collections().items():
+        if key in out:
+            out[key] = coll.import_logical(out[key])
     return out
 
 
@@ -99,6 +93,7 @@ class RecsysModel:
     def __init__(self, cfg: RecsysConfig, mesh: Mesh, *,
                  global_batch: int,
                  comm: str = "allgather_rs",
+                 a2a_threshold: int = 65536,
                  embed_shard_axes: str = "all",
                  use_kernels: bool = False,
                  dense_executor: str = "graph"):
@@ -118,12 +113,22 @@ class RecsysModel:
             raise ValueError(
                 "the reference executor only covers the four canonical "
                 "recipes; model='graph' always runs the compiled program")
-        tables = resolve_strategies(cfg.tables, mesh_config_for(mesh),
-                                    global_batch)
+        mesh_cfg = mesh_config_for(mesh)
+        tables = resolve_strategies(cfg.tables, mesh_cfg, global_batch)
         cd = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
         pool = kops.kernel_pool if use_kernels else None
+
+        def pick_comm(group_tables):
+            # "auto" resolves PER COLLECTION: each independently-
+            # dimensioned group gets the comm pattern its table sizes
+            # want (hybrid recipe — all_to_all only for large one-hot).
+            if comm != "auto":
+                return comm
+            from repro.core.embedding.planner import choose_comm
+            return choose_comm(group_tables, threshold=a2a_threshold)
+
         self.embedding = EmbeddingCollection(
-            tables, mesh, comm=comm, compute_dtype=cd,
+            tables, mesh, comm=pick_comm(tables), compute_dtype=cd,
             shard_axes=embed_shard_axes, pool_fn=pool)
         self.compute_dtype = cd
         self.use_kernels = use_kernels
@@ -136,8 +141,38 @@ class RecsysModel:
         self.wide: Optional[EmbeddingCollection] = None
         if cfg.model in ("wdl", "deepfm") or \
                 (cfg.model == "graph" and cfg.wide_branch):
-            self.wide = EmbeddingCollection(wide_tables(cfg), mesh,
-                                            comm=comm, compute_dtype=cd)
+            wt = wide_tables(cfg)
+            self.wide = EmbeddingCollection(wt, mesh, comm=pick_comm(wt),
+                                            compute_dtype=cd)
+        #: extra N-group collections, param-tree key "embedding@<name>"
+        self.extra: Dict[str, EmbeddingCollection] = {}
+        for g in getattr(cfg, "extra_groups", ()):
+            gt = resolve_strategies(g.tables, mesh_cfg, global_batch)
+            self.extra[g.name] = EmbeddingCollection(
+                gt, mesh, comm=pick_comm(gt), compute_dtype=cd,
+                shard_axes=embed_shard_axes, pool_fn=pool)
+        #: cat column span per collection key, in declared order —
+        #: batches lay out cat as [primary tables | group1 | group2 ...]
+        cols: Dict[str, tuple] = {"embedding": (0, len(cfg.tables))}
+        off = len(cfg.tables)
+        for g in getattr(cfg, "extra_groups", ()):
+            cols[f"embedding@{g.name}"] = (off, off + len(g.tables))
+            off += len(g.tables)
+        self._group_cols = cols
+
+    def collections(self) -> Dict[str, EmbeddingCollection]:
+        """Every embedding collection keyed by its param-tree key."""
+        out: Dict[str, EmbeddingCollection] = {"embedding": self.embedding}
+        if self.wide is not None:
+            out["wide_embedding"] = self.wide
+        for name, coll in self.extra.items():
+            out[f"embedding@{name}"] = coll
+        return out
+
+    def group_columns(self) -> Dict[str, tuple]:
+        """``cat`` column ``(start, stop)`` per lookup key (the wide
+        twin reads the primary columns, so it is not listed)."""
+        return dict(self._group_cols)
 
     # -- init ----------------------------------------------------------------
 
@@ -147,6 +182,9 @@ class RecsysModel:
         params: Dict = {"embedding": self.embedding.init(k_emb)}
         if self.wide is not None:
             params["wide_embedding"] = self.wide.init(k_wide)
+        for i, (name, coll) in enumerate(sorted(self.extra.items())):
+            params[f"embedding@{name}"] = coll.init(
+                jax.random.fold_in(k_emb, i + 1))
         d, t = cfg.embedding_dim, cfg.num_tables
         nd = cfg.num_dense_features
         if cfg.model == "graph":
@@ -185,9 +223,8 @@ class RecsysModel:
     def param_shardings(self) -> Dict:
         """NamedShardings: embeddings per strategy, dense replicated (DP)."""
         rep = NamedSharding(self.mesh, P())
-        shardings: Dict = {"embedding": self.embedding.param_shardings()}
-        if self.wide is not None:
-            shardings["wide_embedding"] = self.wide.param_shardings()
+        shardings: Dict = {key: coll.param_shardings()
+                           for key, coll in self.collections().items()}
         # structure only — eval_shape, NEVER a real init (tables can be
         # tens of GB; allocating them here stalled the dry-run for 20 min)
         dummy = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
@@ -196,7 +233,7 @@ class RecsysModel:
             return jax.tree.map(lambda _: rep, tree)
 
         for k, v in dummy.items():
-            if k in ("embedding", "wide_embedding"):
+            if k in shardings:
                 continue
             shardings[k] = fill(v)
         return shardings
@@ -205,16 +242,32 @@ class RecsysModel:
 
     def apply(self, params: Dict, batch: Dict, *,
               manual: bool = False) -> jax.Array:
-        emb = self.embedding.lookup(params["embedding"], batch["cat"],
+        cat = batch["cat"]
+        # single-group models keep the whole-cat trace they always had;
+        # N-group models slice each collection's column span
+        cat_p = cat if not self.extra \
+            else cat[:, slice(*self._group_cols["embedding"]), :]
+        emb = self.embedding.lookup(params["embedding"], cat_p,
                                     manual=manual)
         wide = None
         if self.wide is not None:
-            wide = self.wide.lookup(params["wide_embedding"], batch["cat"],
+            wide = self.wide.lookup(params["wide_embedding"], cat_p,
                                     manual=manual)       # [B, T, 1]
-        return self.apply_dense(params, batch["dense"], emb, wide)
+        extras = None
+        if self.extra:
+            extras = {}
+            for name, coll in self.extra.items():
+                key = f"embedding@{name}"
+                s = slice(*self._group_cols[key])
+                extras[name] = coll.lookup(params[key], cat[:, s, :],
+                                           manual=manual)
+        return self.apply_dense(params, batch["dense"], emb, wide,
+                                extras=extras)
 
     def apply_dense(self, params: Dict, dense: jax.Array, emb: jax.Array,
-                    wide: Optional[jax.Array] = None) -> jax.Array:
+                    wide: Optional[jax.Array] = None, *,
+                    extras: Optional[Dict[str, jax.Array]] = None
+                    ) -> jax.Array:
         """Dense-only forward from precomputed pooled embeddings.
 
         This is the inference entry point: the HPS resolves ``emb`` (and
@@ -228,7 +281,8 @@ class RecsysModel:
         """
         if self.dense_executor == "reference":
             return self.apply_dense_reference(params, dense, emb, wide)
-        env = self.program.make_env(dense, emb, wide, self.compute_dtype)
+        env = self.program.make_env(dense, emb, wide, self.compute_dtype,
+                                    extras=extras)
         return self.program.apply(params, env, self.compute_dtype)
 
     def apply_dense_reference(self, params: Dict, dense: jax.Array,

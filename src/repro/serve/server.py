@@ -131,18 +131,14 @@ def deploy_from_training(model, params: Dict, pdb: PersistentDB,
                          model_name: str) -> None:
     """Export trained embedding tables into the PDB (ground truth copy).
 
-    Wide models (wdl/deepfm) export BOTH table sets: the deep tables and
-    their dim-1 ``*_wide`` twins, so the serving side can stand up the
-    second HPS the wide branch needs.
+    EVERY collection exports: the deep tables, the dim-1 ``*_wide``
+    twins of wide models (wdl/deepfm), and each extra N-group
+    collection's tables — so the serving side can stand up one HPS per
+    dim class from the PDB alone.
     """
     from repro.models.recsys.model import logical_tables
-    for name, full in logical_tables(model.embedding,
-                                     params["embedding"]).items():
-        pdb.create_table(model_name, name, full.shape[0], full.shape[1],
-                         initial=full)
-    if getattr(model, "wide", None) is not None:
-        for name, full in logical_tables(model.wide,
-                                         params["wide_embedding"]).items():
+    for key, coll in model.collections().items():
+        for name, full in logical_tables(coll, params[key]).items():
             pdb.create_table(model_name, name, full.shape[0],
                              full.shape[1], initial=full)
     pdb.flush()
@@ -171,6 +167,7 @@ class InferenceServer:
     def __init__(self, model, dense_params: Dict, hps: HPS, *,
                  max_batch: int = 1024, needs_wide: bool = False,
                  wide_hps: Optional[HPS] = None,
+                 extra_hps: Optional[Dict[str, HPS]] = None,
                  hotness: Optional[Sequence[int]] = None,
                  refresh_budget: int = 512,
                  refresh_poll_s: Optional[float] = None,
@@ -184,8 +181,18 @@ class InferenceServer:
         self.model = model
         self.hps = hps
         self.wide_hps = wide_hps
+        #: one HPS per extra N-group embedding collection, keyed by group
+        #: name — each reads its own cat column span (see ``_cols``)
+        self.extra_hps: Dict[str, HPS] = dict(extra_hps or {})
+        #: cat column span per embedding group. Populated only for
+        #: N-group models (extras present); single-group servers keep it
+        #: empty and every lookup sees the full cat block, exactly as
+        #: before.
+        self._cols: Dict[str, Tuple[int, int]] = \
+            dict(model.group_columns()) if self.extra_hps else {}
         #: optional per-table hotness forwarded to HPS.lookup (validated
-        #: there against the request shape)
+        #: there against the request shape); covers ALL cat columns in
+        #: group order and is sliced per group alongside cat
         self.hotness = list(hotness) if hotness is not None else None
         self.dense_params = dense_params
         self.max_batch = max_batch
@@ -214,10 +221,18 @@ class InferenceServer:
         self._closed = False
         self.requests_shed = 0
         self._last_poll = time.monotonic()
-        self._predict = jax.jit(
-            lambda p, d, e, w: model.apply_dense(p, d, e, w))
-        self._predict_nowide = jax.jit(
-            lambda p, d, e: model.apply_dense(p, d, e, None))
+        if self.extra_hps:
+            self._predict = jax.jit(
+                lambda p, d, e, w, x: model.apply_dense(p, d, e, w,
+                                                        extras=x))
+            self._predict_nowide = jax.jit(
+                lambda p, d, e, x: model.apply_dense(p, d, e, None,
+                                                     extras=x))
+        else:
+            self._predict = jax.jit(
+                lambda p, d, e, w: model.apply_dense(p, d, e, w))
+            self._predict_nowide = jax.jit(
+                lambda p, d, e: model.apply_dense(p, d, e, None))
         self._q: queue.Queue = queue.Queue(maxsize=queue_depth or 0)
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
@@ -270,28 +285,57 @@ class InferenceServer:
 
     # -- synchronous path ---------------------------------------------------------
 
+    def _group_cat(self, cat: np.ndarray, key: str) -> np.ndarray:
+        """Column slice of a request's cat block for one embedding group
+        (identity for single-group servers)."""
+        if not self._cols:
+            return cat
+        lo, hi = self._cols[key]
+        return cat[:, lo:hi, :]
+
+    def _group_hot(self, key: str) -> Optional[List[int]]:
+        if not self._cols or self.hotness is None:
+            return self.hotness
+        lo, hi = self._cols[key]
+        return self.hotness[lo:hi]
+
     def _dense_forward(self, dense: np.ndarray, emb: jax.Array,
-                       wide: Optional[jax.Array]) -> jax.Array:
+                       wide: Optional[jax.Array],
+                       extras: Optional[Dict[str, jax.Array]] = None
+                       ) -> jax.Array:
         """The one jitted dense-net dispatch + host-side sigmoid — shared
         by every engine so outputs are bit-identical across them."""
-        if wide is not None:
-            out = self._predict(self.dense_params, jnp.asarray(dense),
-                                emb, wide)
+        d = jnp.asarray(dense)
+        if self.extra_hps:
+            if wide is not None:
+                out = self._predict(self.dense_params, d, emb, wide,
+                                    extras or {})
+            else:
+                out = self._predict_nowide(self.dense_params, d, emb,
+                                           extras or {})
+        elif wide is not None:
+            out = self._predict(self.dense_params, d, emb, wide)
         else:
-            out = self._predict_nowide(self.dense_params,
-                                       jnp.asarray(dense), emb)
+            out = self._predict_nowide(self.dense_params, d, emb)
         return jax.nn.sigmoid(out)
 
     def predict(self, dense: np.ndarray, cat: np.ndarray) -> np.ndarray:
         t0 = time.perf_counter()
-        pipelined = len(self.hps.tables) > 1
-        emb = self.hps.lookup(cat, self.hotness, pipelined=pipelined)
+        dcat = self._group_cat(cat, "embedding")
+        dhot = self._group_hot("embedding")
+        emb = self.hps.lookup(dcat, dhot,
+                              pipelined=len(self.hps.tables) > 1)
         wide = None
-        if self.wide_hps is not None:
-            wide = self.wide_hps.lookup(
-                cat, self.hotness,
+        if self.wide_hps is not None:       # wide twins share the deep
+            wide = self.wide_hps.lookup(    # group's cat columns
+                dcat, dhot,
                 pipelined=len(self.wide_hps.tables) > 1)
-        out = np.asarray(self._dense_forward(dense, emb, wide))
+        extras = {
+            name: hps.lookup(self._group_cat(cat, f"embedding@{name}"),
+                             self._group_hot(f"embedding@{name}"),
+                             pipelined=len(hps.tables) > 1)
+            for name, hps in self.extra_hps.items()}
+        out = np.asarray(self._dense_forward(dense, emb, wide, extras))
         self._record_latency(t0, rows=dense.shape[0])
         return out
 
@@ -301,16 +345,29 @@ class InferenceServer:
         before the next host stage, the dense net blocks before the
         sigmoid — nothing is left to XLA's async dispatch."""
         t0 = time.perf_counter()
-        emb = self.hps.lookup_stage_sync(cat, self.hotness)
+        dcat = self._group_cat(cat, "embedding")
+        dhot = self._group_hot("embedding")
+        emb = self.hps.lookup_stage_sync(dcat, dhot)
         wide = None
         if self.wide_hps is not None:
-            wide = self.wide_hps.lookup_stage_sync(cat, self.hotness)
-        if wide is not None:
-            out = self._predict(self.dense_params, jnp.asarray(dense),
-                                emb, wide)
+            wide = self.wide_hps.lookup_stage_sync(dcat, dhot)
+        extras = {
+            name: hps.lookup_stage_sync(
+                self._group_cat(cat, f"embedding@{name}"),
+                self._group_hot(f"embedding@{name}"))
+            for name, hps in self.extra_hps.items()}
+        d = jnp.asarray(dense)
+        if self.extra_hps:
+            if wide is not None:
+                out = self._predict(self.dense_params, d, emb, wide,
+                                    extras)
+            else:
+                out = self._predict_nowide(self.dense_params, d, emb,
+                                           extras)
+        elif wide is not None:
+            out = self._predict(self.dense_params, d, emb, wide)
         else:
-            out = self._predict_nowide(self.dense_params,
-                                       jnp.asarray(dense), emb)
+            out = self._predict_nowide(self.dense_params, d, emb)
         out = np.asarray(jax.nn.sigmoid(jax.block_until_ready(out)))
         self._record_latency(t0, rows=dense.shape[0])
         return out
@@ -334,8 +391,9 @@ class InferenceServer:
                 self._last_poll = now
                 sweep = True
         applied = refreshed = 0            # the bus/refresh IO runs
-        for hps in (self.hps, self.wide_hps):   # unlocked; counters
-            if hps is None:                     # update in one step below
+        for hps in (self.hps, self.wide_hps,    # unlocked; counters
+                    *self.extra_hps.values()):  # update in one step below
+            if hps is None:
                 continue
             if hps.consumer is not None:
                 applied += hps.apply_updates()
@@ -504,24 +562,39 @@ class InferenceServer:
                 fifo.append((reqs, dense, time.perf_counter()))
                 yield cat
 
-        if self.wide_hps is not None:
-            deep_src, wide_src = itertools.tee(cats())
-            pairs = zip(
-                self.hps.lookup_stream(deep_src, self.hotness,
-                                       materialize=False),
-                self.wide_hps.lookup_stream(wide_src, self.hotness,
-                                            materialize=False))
-        else:
-            pairs = ((emb, None) for emb in
-                     self.hps.lookup_stream(cats(), self.hotness,
-                                            materialize=False))
+        def group_src(src, key):
+            """Wrap one tee branch with the group's column slice (the
+            identity for single-group servers)."""
+            if not self._cols:
+                return src
+            lo, hi = self._cols[key]
+            return (c[:, lo:hi, :] for c in src)
+
+        extra_names = list(self.extra_hps)
+        n_wide = 1 if self.wide_hps is not None else 0
+        srcs = iter(itertools.tee(cats(), 1 + n_wide + len(extra_names)))
+        streams = [self.hps.lookup_stream(
+            group_src(next(srcs), "embedding"),
+            self._group_hot("embedding"), materialize=False)]
+        if self.wide_hps is not None:       # wide twins read the deep
+            streams.append(self.wide_hps.lookup_stream(  # group's columns
+                group_src(next(srcs), "embedding"),
+                self._group_hot("embedding"), materialize=False))
+        for name in extra_names:
+            key = f"embedding@{name}"
+            streams.append(self.extra_hps[name].lookup_stream(
+                group_src(next(srcs), key), self._group_hot(key),
+                materialize=False))
 
         in_flight: deque = deque()          # (reqs, t0, device preds)
         current = None                      # group between fifo/in_flight
         try:
-            for emb, wide in pairs:
+            for vals in zip(*streams):
+                emb = vals[0]
+                wide = vals[1] if n_wide else None
+                extras = dict(zip(extra_names, vals[1 + n_wide:]))
                 current = fifo.popleft()    # (reqs, dense, t0)
-                out = self._dense_forward(current[1], emb, wide)
+                out = self._dense_forward(current[1], emb, wide, extras)
                 in_flight.append((current[0], current[2], out))
                 current = None
                 self._refresh_tick()        # between pipeline stages
@@ -792,6 +865,8 @@ class MultiModelServer:
             s.hps.resize_caches(cap)
             if s.wide_hps is not None:
                 s.wide_hps.resize_caches(cap)
+            for ehps in s.extra_hps.values():
+                ehps.resize_caches(cap)
             moved += 1
         if moved:
             self.rebalances += 1

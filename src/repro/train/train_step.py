@@ -38,9 +38,15 @@ from repro.optim.optimizers import clip_by_global_norm
 SPARSE_KEYS = ("embedding", "wide_embedding")
 
 
+def is_sparse_key(k: str) -> bool:
+    """True for param-tree keys owned by an embedding collection: the
+    two legacy keys plus the N-group ``embedding@<group>`` keys."""
+    return k in SPARSE_KEYS or k.startswith("embedding@")
+
+
 def split_params(params: Dict) -> Tuple[Dict, Dict]:
-    sparse = {k: v for k, v in params.items() if k in SPARSE_KEYS}
-    dense = {k: v for k, v in params.items() if k not in SPARSE_KEYS}
+    sparse = {k: v for k, v in params.items() if is_sparse_key(k)}
+    dense = {k: v for k, v in params.items() if not is_sparse_key(k)}
     return sparse, dense
 
 
@@ -162,9 +168,8 @@ def build_manual_train_step(model, tcfg: TrainConfig, mesh) -> Callable:
     ar_dtype = jnp.bfloat16 if tcfg.grad_allreduce_dtype == "bf16" \
         else jnp.float32
 
-    emb_specs = {"embedding": model.embedding.param_specs()}
-    if getattr(model, "wide", None) is not None:
-        emb_specs["wide_embedding"] = model.wide.param_specs()
+    emb_specs = {key: coll.param_specs()
+                 for key, coll in model.collections().items()}
 
     def param_specs(params):
         specs = {}

@@ -25,6 +25,7 @@ from repro.data.pipeline import put_batch
 from repro.train import checkpoint as ckpt_lib
 from repro.train.train_step import (
     build_manual_train_step, build_train_step, init_opt_state,
+    jit_train_step,
 )
 
 
@@ -43,18 +44,35 @@ class Trainer:
         self.straggler_factor = straggler_factor
         self.step_times: List[float] = []
         self.stragglers = 0
+        n_dev = int(np.prod(mesh.devices.shape))
+        #: model-parallel placement: on a real multi-device mesh the
+        #: params live in their per-strategy shardings and the step is
+        #: jitted with explicit in/out shardings, so the embedding
+        #: collectives actually span devices (ROADMAP item: MP training
+        #: through the graph API)
+        self._shardings = model.param_shardings() \
+            if n_dev > 1 and hasattr(model, "param_shardings") else None
         if mode == "manual":
             step_fn = build_manual_train_step(model, tcfg, mesh)
+            self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        elif self._shardings is not None:
+            self._step = jit_train_step(model, tcfg, mesh)
         else:
             step_fn = build_train_step(model, tcfg)
-        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+            self._step = jax.jit(step_fn, donate_argnums=(0, 1))
         #: test hook: callable(step) that may raise to simulate a failure
         self.failure_injector: Optional[Callable[[int], None]] = None
 
     # -- state ----------------------------------------------------------------
 
+    def _place(self, params):
+        """Move params into their MP shardings (no-op on one device)."""
+        if self._shardings is None:
+            return params
+        return jax.device_put(params, self._shardings)
+
     def init_state(self, seed: int = 0):
-        params = self.model.init(jax.random.PRNGKey(seed))
+        params = self._place(self.model.init(jax.random.PRNGKey(seed)))
         opt_state = init_opt_state(params, self.tcfg)
         return params, opt_state
 
@@ -89,7 +107,7 @@ class Trainer:
             "opt": opt_template,
         }
         tree = ckpt_lib.unflatten_like(template, flat)
-        params = self._import(tree["params"])
+        params = self._place(self._import(tree["params"]))
         return step, params, tree["opt"]
 
     # -- loop -----------------------------------------------------------------
@@ -102,6 +120,7 @@ class Trainer:
         in ``ckpt_dir`` still takes precedence."""
         if initial_state is not None:
             params, opt_state = initial_state
+            params = self._place(params)
             if opt_state is None:
                 opt_state = init_opt_state(params, self.tcfg)
         else:

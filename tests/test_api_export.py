@@ -98,10 +98,12 @@ def _smoke_cfg(arch):
 
 @pytest.mark.parametrize("arch", ["dlrm-criteo", "dcn-criteo",
                                   "deepfm-criteo", "wdl-criteo",
-                                  "twotower-criteo", "crossdeep-criteo"])
+                                  "twotower-criteo", "crossdeep-criteo",
+                                  "neumf-criteo"])
 def test_export_numpy_parity(arch, tmp_path):
     """The exported graph run by PURE NUMPY matches the JAX forward —
-    the wide models' two-table-set graphs AND novel generic graphs
+    the wide models' two-table-set graphs, novel generic graphs, AND
+    N-group models whose extra gathers carry a cat column offset
     (the export is a walk of the compiled program, no per-arch code)."""
     from repro.export import export_recsys, load_exported, run_exported
     from repro.launch.mesh import make_test_mesh
@@ -124,7 +126,7 @@ def test_export_numpy_parity(arch, tmp_path):
 
 
 @pytest.mark.parametrize("arch", ["dlrm-criteo", "wdl-criteo",
-                                  "twotower-criteo"])
+                                  "twotower-criteo", "neumf-criteo"])
 def test_export_artifact_is_self_describing(arch, tmp_path):
     from repro.export import export_recsys, load_exported
     from repro.launch.mesh import make_test_mesh

@@ -84,3 +84,98 @@ def test_async_saver_snapshots_before_mutation(tmp_path):
     saver.wait()
     flat, _ = ck.load(d, 3)
     np.testing.assert_array_equal(flat["x"], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Logical (mesh-independent) embedding checkpoints: pad-row hygiene
+# ---------------------------------------------------------------------------
+
+def test_import_logical_truncates_and_rejects_short_ckpt():
+    """``import_logical`` must size the physical arrays from the
+    COLLECTION, not the checkpoint: over-long checkpoints (e.g. written
+    by a buggy exporter that kept a foreign mesh's pad rows) are
+    truncated to the logical row count, and short ones raise naming the
+    row counts instead of mis-striping silently."""
+    from repro.configs.base import EmbeddingTableConfig
+    from repro.core.embedding.collection import EmbeddingCollection
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((1, 1))
+    tables = [EmbeddingTableConfig("t0", 101, 8, hotness=1,
+                                   strategy="distributed")]
+    with mesh:
+        coll = EmbeddingCollection(tables, mesh, shard_axes="all")
+        clean = {"dist": np.random.default_rng(0)
+                 .normal(size=(101, 8)).astype(np.float32)}
+        p_clean = coll.import_logical(clean)
+        overlong = {"dist": np.concatenate(
+            [clean["dist"], np.full((3, 8), 777.0, np.float32)])}
+        p_over = coll.import_logical(overlong)
+        for k in p_clean:
+            np.testing.assert_array_equal(np.asarray(p_clean[k]),
+                                          np.asarray(p_over[k]))
+        with pytest.raises(ValueError, match="100 rows, need 101"):
+            coll.import_logical({"dist": clean["dist"][:100]})
+
+
+def test_import_logical_mesh_round_trip_zeroes_pads():
+    """Regression for the elastic-resume bug: a checkpoint written on
+    mesh (1,1) and imported on (2,2) (whose sharded layout rounds rows
+    UP per shard) must land with every physical pad row exactly zero —
+    logical AND physical round trips are bit-exact in both directions."""
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    body = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+import jax
+import numpy as np
+from repro.configs.base import EmbeddingTableConfig
+from repro.core.embedding.collection import EmbeddingCollection
+from repro.launch.mesh import make_test_mesh
+
+tables = [EmbeddingTableConfig(f"t{i}", 1001, 8, hotness=1,
+                               strategy="distributed") for i in range(2)]
+colls = {}
+for name, shape in (("22", (2, 2)), ("11", (1, 1))):
+    mesh = make_test_mesh(shape)
+    with mesh:
+        colls[name] = (mesh, EmbeddingCollection(tables, mesh,
+                                                 shard_axes="all"))
+(m22, c22), (m11, c11) = colls["22"], colls["11"]
+with m22:
+    p22 = c22.init(jax.random.PRNGKey(0))
+log = {k: np.asarray(v) for k, v in c22.export_logical(p22).items()}
+assert log["dist"].shape[0] == 2002, log["dist"].shape
+
+# (2,2) -> (1,1): logical payloads survive the mesh change bit-exactly
+with m11:
+    p11 = c11.import_logical(log)
+log11 = {k: np.asarray(v) for k, v in c11.export_logical(p11).items()}
+for k in log:
+    np.testing.assert_array_equal(log[k], log11[k])
+
+# (1,1) -> (2,2): physical arrays (pad rows INCLUDED) match a fresh
+# import of the same logical state — pads are provably zeroed, never
+# stale garbage from whatever the checkpoint carried
+with m22:
+    p22a = c22.import_logical(log)
+    p22b = c22.import_logical(log11)
+for k in p22a:
+    a, b = np.asarray(p22a[k]), np.asarray(p22b[k])
+    assert a.shape == b.shape and a.shape[0] == 2004, (k, a.shape)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, np.asarray(p22[k]))
+print("PAD_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", body], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout}"
+        f"\nSTDERR:\n{proc.stderr}")
+    assert "PAD_OK" in proc.stdout

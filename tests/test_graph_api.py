@@ -101,12 +101,73 @@ def test_unknown_tensor_is_rejected():
         m.to_recsys_config()
 
 
-def test_two_deep_embeddings_rejected():
-    m = Model(name="bad")
+def _ngroup_model(name="ngroup", batch=16):
+    """Three SparseEmbedding groups with three distinct dims."""
+    m = Model(Solver(batch_size=batch, lr=1e-2),
+              DataReaderParams(num_dense_features=4), name=name)
     m.add(Input(dense_dim=4))
-    m.add(SparseEmbedding(vocab_sizes=[10], dim=4, top_name="a"))
-    m.add(SparseEmbedding(vocab_sizes=[10], dim=8, top_name="b"))
-    with pytest.raises(GraphError, match="dim-1 wide"):
+    m.add(SparseEmbedding(vocab_sizes=[300, 100], dim=8, top_name="a"))
+    m.add(SparseEmbedding(vocab_sizes=[60], dim=4, top_name="b"))
+    m.add(SparseEmbedding(vocab_sizes=[40, 20, 10], dim=2, top_name="c"))
+    m.add(DenseLayer("concat", ["dense", "a", "b", "c"], ["flat"]))
+    m.add(DenseLayer("mlp", ["flat"], ["logit"], units=(16, 1)))
+    m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
+    return m
+
+
+def test_n_group_embeddings_lower_and_train():
+    """Multiple independently-dimensioned deep groups are a first-class
+    lowering now (formerly a GraphError): the first group is the primary
+    collection, each further group gets its own param key and cat column
+    span, and fit/predict run through the generic program."""
+    m = _ngroup_model()
+    cfg = m.to_recsys_config()
+    assert cfg.model == "graph"
+    assert [(g.name, g.dim, len(g.tables)) for g in cfg.extra_groups] \
+        == [("b", 4, 1), ("c", 2, 3)]
+    # cat layout: primary tables first, then each group's, in order
+    assert [t.name for t in cfg.all_tables] \
+        == ["f0", "f1", "b_f0", "c_f0", "c_f1", "c_f2"]
+    m.compile()
+    assert set(m.model.collections()) == \
+        {"embedding", "embedding@b", "embedding@c"}
+    assert m.model.group_columns() == \
+        {"embedding": (0, 2), "embedding@b": (2, 3), "embedding@c": (3, 6)}
+    data = SyntheticCTR(m.cfg, 16)
+    hist = m.fit(data.batch, steps=2)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    preds = m.predict(data.batch(7))
+    assert preds.shape == (16,) and ((preds > 0) & (preds < 1)).all()
+
+
+def test_n_group_json_round_trip(tmp_path):
+    m = _ngroup_model()
+    p = str(tmp_path / "g.json")
+    m.graph_to_json(p)
+    m2 = Model.from_json(p)
+    assert m2.to_recsys_config() == m.to_recsys_config()
+
+
+def test_n_group_duplicate_table_names_rejected():
+    m = Model(name="dup")
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[30], dim=8, top_name="a",
+                          table_names=["t"]))
+    m.add(SparseEmbedding(vocab_sizes=[30], dim=4, top_name="b",
+                          table_names=["t"]))
+    m.add(DenseLayer("concat", ["dense", "a", "b"], ["flat"]))
+    m.add(DenseLayer("mlp", ["flat"], ["logit"], units=(1,)))
+    with pytest.raises(GraphError, match="globally.*unique|'t'"):
+        m.to_recsys_config()
+
+
+def test_extra_group_name_may_not_shadow_param_keys():
+    m = Model(name="shadow")
+    m.add(Input(dense_dim=4))
+    m.add(SparseEmbedding(vocab_sizes=[30], dim=8, top_name="a"))
+    m.add(SparseEmbedding(vocab_sizes=[30], dim=4,
+                          top_name="wide_embedding"))
+    with pytest.raises(GraphError, match="reserved"):
         m.to_recsys_config()
 
 

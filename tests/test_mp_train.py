@@ -1,0 +1,252 @@
+"""Model-parallel training through the graph API (the PR 9 tentpole).
+
+``Solver(mesh_shape=...)`` must carry all the way into ``fit()``: the
+loss trajectory on a forced-host (2,2) mesh has to match the
+single-device run (gspmd mode is bit-exact up to one f32 ulp per
+reduction; we allow 1e-5), checkpoints must move between mesh sizes,
+and the N-group models must deploy and serve from a mesh-trained state.
+
+Multi-device runs live in subprocesses (XLA_FLAGS set before the jax
+import); the pytest process keeps its single real device. Validation
+errors are cheap and run in-process.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(body: str, n_devices: int = 4, timeout: int = 600):
+    code = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        + body
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# fit() parity: (2,2) mesh vs single device
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["dlrm_criteo", "wdl_criteo",
+                                  "twotower_criteo"])
+def test_mp_fit_matches_single_device(arch):
+    out = run_with_devices(rf"""
+import importlib
+from repro.api import Solver
+
+mod = importlib.import_module("repro.configs.{arch}")
+losses = {{}}
+for shape in ((1, 1), (2, 2)):
+    m = mod.build_model(smoke=True, solver=Solver(
+        batch_size=32, lr=1e-2, mesh_shape=shape))
+    m.compile()
+    losses[shape] = [h["loss"] for h in m.fit(steps=4)]
+dev = max(abs(a - b)
+          for a, b in zip(losses[(1, 1)], losses[(2, 2)]))
+assert dev <= 1e-5, (dev, losses)
+print("PARITY_OK", dev)
+""")
+    assert "PARITY_OK" in out
+
+
+def test_mp_manual_mode_tracks_gspmd():
+    """manual mode (explicit psum, one shard_map) on the (2,2) mesh
+    stays within fp tolerance of the single-device gspmd run."""
+    out = run_with_devices(r"""
+import importlib
+from repro.api import Solver
+
+mod = importlib.import_module("repro.configs.dlrm_criteo")
+ref = mod.build_model(smoke=True, solver=Solver(batch_size=32, lr=1e-2))
+ref.compile()
+href = [h["loss"] for h in ref.fit(steps=4)]
+m = mod.build_model(smoke=True, solver=Solver(
+    batch_size=32, lr=1e-2, mesh_shape=(2, 2), mode="manual"))
+m.compile()
+hm = [h["loss"] for h in m.fit(steps=4)]
+dev = max(abs(a - b) for a, b in zip(href, hm))
+assert dev <= 5e-3, (dev, href, hm)
+print("MANUAL_OK", dev)
+""")
+    assert "MANUAL_OK" in out
+
+
+def test_mp_comm_choices_agree():
+    """Both embedding exchange recipes produce the same training run —
+    comm changes the collective schedule, never the math."""
+    out = run_with_devices(r"""
+import importlib
+from repro.api import Solver
+
+mod = importlib.import_module("repro.configs.dlrm_criteo")
+runs = {}
+for comm in ("allgather_rs", "all_to_all"):
+    m = mod.build_model(smoke=True, solver=Solver(
+        batch_size=32, lr=1e-2, mesh_shape=(2, 2), comm=comm))
+    m.compile()
+    runs[comm] = [h["loss"] for h in m.fit(steps=4)]
+dev = max(abs(a - b) for a, b in
+          zip(runs["allgather_rs"], runs["all_to_all"]))
+assert dev <= 1e-5, (dev, runs)
+print("COMM_OK", dev)
+""")
+    assert "COMM_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Elastic checkpoints + N-group deploy from a mesh-trained state
+# ---------------------------------------------------------------------------
+
+def test_mp_save_load_resumes_across_mesh_sizes(tmp_path):
+    out = run_with_devices(rf"""
+import importlib
+import numpy as np
+from repro.api import Model, Solver
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.mesh import make_test_mesh
+
+mod = importlib.import_module("repro.configs.neumf_criteo")
+m = mod.build_model(smoke=True, solver=Solver(batch_size=32, lr=1e-2,
+                                              mesh_shape=(2, 2)))
+m.compile()
+m.fit(steps=3)
+b = SyntheticCTR(m.cfg, 8).batch(0)
+p_mp = m.predict(b)
+ck = {str(tmp_path)!r}
+m.save(ck)
+
+# load the (2,2)-trained weights onto a single device...
+m1 = Model.load(ck, mesh=make_test_mesh((1, 1)))
+np.testing.assert_array_equal(m1.predict(b), p_mp)
+# ...and keep training there
+h1 = m1.fit(steps=2)
+assert all(np.isfinite(x["loss"]) for x in h1)
+
+# and back onto a (4,1) mesh
+m4 = Model.load(ck, mesh=make_test_mesh((4, 1)))
+np.testing.assert_array_equal(m4.predict(b), p_mp)
+print("ELASTIC_OK")
+""")
+    assert "ELASTIC_OK" in out
+
+
+def test_mp_ngroup_fit_deploy_serve(tmp_path):
+    """Three embedding groups of three dims, trained on a (2,2) mesh,
+    deployed, and served from the rebuilt bundle — the acceptance bar
+    for N-group lowering riding the MP trainer."""
+    out = run_with_devices(rf"""
+import importlib, os
+import numpy as np
+from repro.api import Solver
+from repro.data.synthetic import SyntheticCTR
+from repro.launch.serve import build_server_from_config
+
+mod = importlib.import_module("repro.configs.neumf_criteo")
+m = mod.build_model(smoke=True, solver=Solver(batch_size=32, lr=1e-2,
+                                              mesh_shape=(2, 2)))
+m.compile()
+assert len(m.cfg.extra_groups) == 2
+assert len({{m.cfg.embedding_dim}} |
+           {{g.dim for g in m.cfg.extra_groups}}) == 3
+m.fit(steps=3)
+b = SyntheticCTR(m.cfg, 8).batch(0)
+want = m.predict(b)
+
+dep = os.path.join({str(tmp_path)!r}, "dep")
+server = m.deploy(dep, cache_capacity=256)
+with m.mesh:
+    live = server.predict(b["dense"], b["cat"])
+np.testing.assert_array_equal(live, want)
+
+srv, m2 = build_server_from_config(os.path.join(dep, "ps.json"))
+with m2.mesh:
+    got = srv.predict(b["dense"], b["cat"])
+np.testing.assert_array_equal(got, want)
+print("NGROUP_MP_OK")
+""")
+    assert "NGROUP_MP_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Up-front validation (in-process: errors must fire before any device
+# work, so the single real device is all they need)
+# ---------------------------------------------------------------------------
+
+def test_solver_rejects_bad_mesh_shapes():
+    from repro.api import GraphError, Solver
+    with pytest.raises(GraphError, match="positive ints"):
+        Solver(batch_size=8, mesh_shape=(0, 2))
+    with pytest.raises(GraphError, match="positive ints"):
+        Solver(batch_size=8, mesh_shape=())
+    with pytest.raises(GraphError, match="positive ints"):
+        Solver(batch_size=8, mesh_shape=(True, 1))
+    with pytest.raises(GraphError, match="devices .* visible|only"):
+        Solver(batch_size=8, mesh_shape=(64, 64))
+    with pytest.raises(GraphError, match="mode"):
+        Solver(batch_size=8, mode="magic")
+    with pytest.raises(GraphError, match="comm"):
+        Solver(batch_size=8, comm="carrier-pigeon")
+
+
+def test_oversubscribed_mesh_error_names_the_fix():
+    from repro.api import GraphError, Solver
+    with pytest.raises(GraphError,
+                       match="xla_force_host_platform_device_count"):
+        Solver(batch_size=8, mesh_shape=(64, 64))
+
+
+def test_compile_rejects_indivisible_batch():
+    out = run_with_devices(r"""
+import importlib
+from repro.api import GraphError, Solver
+
+mod = importlib.import_module("repro.configs.dlrm_criteo")
+m = mod.build_model(smoke=True,
+                    solver=Solver(batch_size=30, mesh_shape=(4, 1)))
+try:
+    m.compile()
+    raise SystemExit("compile() accepted an indivisible batch")
+except GraphError as e:
+    msg = str(e)
+assert "batch_size=30" in msg and "4" in msg and "data" in msg, msg
+print("BATCH_DIV_OK")
+""")
+    assert "BATCH_DIV_OK" in out
+
+
+def test_compile_rejects_unsplittable_localized_group():
+    out = run_with_devices(r"""
+from repro.api import (DataReaderParams, DenseLayer, GraphError, Input,
+                       Model, SparseEmbedding, Solver)
+
+m = Model(Solver(batch_size=32, mesh_shape=(2, 2)),
+          DataReaderParams(num_dense_features=4), name="loc-bad")
+m.add(Input(dense_dim=4))
+# 3 localized tables cannot split over 4 devices
+m.add(SparseEmbedding(vocab_sizes=[64, 64, 64], dim=8,
+                      strategy="localized", top_name="emb"))
+m.add(DenseLayer("concat", ["dense", "emb"], ["flat"]))
+m.add(DenseLayer("mlp", ["flat"], ["logit"], units=(1,)))
+m.add(DenseLayer("sigmoid", ["logit"], ["prob"]))
+try:
+    m.compile()
+    raise SystemExit("compile() accepted an unsplittable localized group")
+except GraphError as e:
+    msg = str(e)
+assert "localized" in msg and "3" in msg and "4" in msg, msg
+print("LOC_DIV_OK")
+""")
+    assert "LOC_DIV_OK" in out
