@@ -1,0 +1,56 @@
+"""Paper §3 "Online model updating" — the train->serve freshness loop.
+
+Two claims measured:
+
+* **Update freshness lag** — wall time from a pass boundary publishing
+  its versioned update batch to the update being VISIBLE in live
+  predictions (consumer versions reached it and a probe moved onto the
+  freshly-trained oracle), via the full train-while-serving loop in
+  ``repro.launch.online_train``.
+* **ETC step overhead** — marginal seconds/step of ETC-staged training
+  (host staging + PS traffic) vs the in-memory trainer on the same
+  graph, jit compile cancelled out by differencing two run lengths.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Report
+
+
+def _fit_seconds(etc, steps: int) -> float:
+    from repro.launch.online_train import build_model
+    m = build_model(128)
+    if etc is not None:
+        m.solver.etc = etc
+    m.compile()
+    data_fn = m._reader_data_fn()
+    t0 = time.perf_counter()
+    m.fit(data_fn, steps=steps)
+    return time.perf_counter() - t0
+
+
+def run(report: Report):
+    from repro.configs.base import ETCParams
+    from repro.launch.online_train import run_online
+
+    metrics = run_online(base_steps=20, online_steps=20, passes=2,
+                         cache_rows=256, requests=5, verbose=False)
+    report.add(
+        "online.freshness_lag", metrics["freshness_lag_s"],
+        f"polls={metrics['freshness_polls']} "
+        f"versions={metrics['versions_published']} "
+        f"msgs_applied={metrics['updates_applied']} "
+        f"rows_refreshed={metrics['rows_refreshed']} "
+        f"final_dist={metrics['final_dist']:.1e}")
+
+    # marginal per-step cost: t(long) - t(short) cancels the compile
+    short, long = 10, 30
+    etc = ETCParams(cache_rows=256, passes=1)
+    etc_s = (_fit_seconds(etc, long) - _fit_seconds(etc, short)) \
+        / (long - short)
+    mem_s = (_fit_seconds(None, long) - _fit_seconds(None, short)) \
+        / (long - short)
+    report.add("online.train_step.etc", etc_s,
+               f"staging+ps_overhead_x={etc_s / max(mem_s, 1e-9):.2f}")
+    report.add("online.train_step.inmem", mem_s, "")

@@ -13,7 +13,8 @@ import sys
 
 from benchmarks.common import Report
 
-BENCHES = ("kernel", "train", "hps", "etc", "strategies", "roofline")
+BENCHES = ("kernel", "train", "hps", "etc", "online", "strategies",
+           "roofline")
 
 
 def main() -> None:
@@ -31,6 +32,9 @@ def main() -> None:
     if "etc" in which:
         from benchmarks import etc_staging
         etc_staging.run(report)
+    if "online" in which:
+        from benchmarks import online_freshness
+        online_freshness.run(report)
     if "strategies" in which:
         from benchmarks import embedding_strategies
         embedding_strategies.run(report)

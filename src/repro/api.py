@@ -125,9 +125,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (
-    EmbeddingTableConfig, EnsembleConfig, HPSConfig, RecsysConfig,
-    SparseGroupConfig, TrainConfig, ensemble_config_to_dict,
-    hps_config_to_dict, recsys_config_hash,
+    EmbeddingTableConfig, EnsembleConfig, ETCParams, HPSConfig,
+    RecsysConfig, SparseGroupConfig, TrainConfig,
+    ensemble_config_to_dict, hps_config_to_dict, recsys_config_hash,
 )
 
 from repro.models.recsys.dense_graph import (
@@ -166,8 +166,28 @@ class Solver:
     a2a_threshold: int = 65536
     ckpt_interval: int = 50
     seed: int = 0
+    #: ETC-staged training (HugeCTR's Embedding Training Cache): set to
+    #: ``ETCParams(cache_rows=..., ps="staged"|"cached", passes=N)`` and
+    #: ``fit()`` trains through a fixed-capacity device row cache backed
+    #: by a parameter server instead of full in-device tables —
+    #: ``cache_rows`` bounds device rows per table, ``ps`` picks the
+    #: durable tier ("cached" needs ``ps_root``, survives restarts and
+    #: fsyncs on flush), ``passes`` splits the run into keyset-staged
+    #: passes whose boundaries flush the cache and (via
+    #: ``repro.online``) publish versioned updates to live servers.
+    #: None (default) keeps the in-memory trainer.
+    etc: Optional[ETCParams] = None
 
     def __post_init__(self):
+        if self.etc is not None and not isinstance(self.etc, ETCParams):
+            if not isinstance(self.etc, dict):
+                raise GraphError(
+                    f"Solver.etc must be an ETCParams (or its dict "
+                    f"form), got {type(self.etc).__name__}")
+            try:                   # JSON round-trip: Solver(**d["solver"])
+                self.etc = ETCParams(**self.etc)
+            except (TypeError, ValueError) as e:
+                raise GraphError(f"Solver.etc: {e}")
         if self.mode not in ("gspmd", "manual"):
             raise GraphError(
                 f"Solver.mode must be 'gspmd' or 'manual', got "
@@ -721,6 +741,7 @@ class Model:
         self._params = None
         self._opt_state = None
         self._trainer = None
+        self._online = None           # OnlineTrainer after an ETC fit()
         self.stragglers = 0
 
     # -- graph construction ---------------------------------------------------
@@ -812,6 +833,10 @@ class Model:
         self._require_compiled()
         if data_fn is None:
             data_fn = self._reader_data_fn()
+        if self.solver.etc is not None:
+            return self._fit_etc(data_fn, steps, ckpt_dir=ckpt_dir,
+                                 log_every=log_every, seed=seed,
+                                 failure_injector=failure_injector)
         from repro.train.trainer import Trainer
         with self.mesh:
             self._trainer = Trainer(
@@ -830,6 +855,34 @@ class Model:
         self._opt_state = out["opt_state"]
         self.stragglers = out["stragglers"]
         return out["history"]
+
+    def _fit_etc(self, data_fn, steps, *, ckpt_dir, log_every, seed,
+                 failure_injector, publisher=None) -> List[Dict]:
+        """``fit()`` through the Embedding Training Cache (Solver.etc):
+        keyset-staged passes over a fixed-capacity device cache, the
+        parameter server as the durable tier, and — when ``publisher``
+        is attached — one versioned online update per pass boundary.
+        After training the PS contents are imported back into
+        ``params``, so predict/save/deploy see a normal model."""
+        if ckpt_dir is not None:
+            raise GraphError(
+                "ETC-staged fit() does not take ckpt_dir: durability "
+                "goes through the parameter server — use "
+                "ETCParams(ps='cached', ps_root=...) instead")
+        if failure_injector is not None:
+            raise GraphError(
+                "ETC-staged fit() does not support failure_injector")
+        from repro.online.trainer import OnlineTrainer
+        with self.mesh:
+            ot = OnlineTrainer(
+                self, self.solver.etc, publisher=publisher,
+                seed=self.solver.seed if seed is None else seed)
+            history = ot.fit(data_fn, steps, log_every=log_every)
+            self._params = ot.export_params()
+        self._opt_state = None
+        self._trainer = None
+        self._online = ot
+        return history
 
     # -- inference ----------------------------------------------------------------
 

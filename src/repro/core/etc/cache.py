@@ -4,19 +4,32 @@ The device holds a fixed-capacity row cache per table (``[C, D]`` params +
 ``[C]`` row-wise optimizer state). Before each step the host:
 
   1. collects the batch's unique ids per table,
-  2. evicts LRU rows to make space (writing params+state back to the PS),
-  3. pulls missing rows from the PS into free slots,
-  4. remaps batch ids -> cache slots.
+  2. evicts least-recently-used rows to make space (writing params+state
+     back to the PS in ONE batched push),
+  3. pulls missing rows from the PS in ONE batched pull into free slots
+     (one device scatter),
+  4. remaps batch ids -> cache slots with ONE ``np.searchsorted`` over
+     the whole ``[B, H]`` block.
+
+The staging step is fully vectorized — the per-table residency index is
+a pair of sorted NumPy arrays (ids / slots) plus an LRU timestamp per
+slot, the same batched-index design the HPS L1 cache uses — so staging
+cost is O(uniq log C) array ops per table, not a Python loop per id.
 
 The device step then runs on the cache arrays exactly like a normal
 (small) embedding table — the trainer is oblivious. ``flush()`` writes
 every resident row back, completing the incremental-training story; the
-same dirty-row stream feeds the online-update Producer (HPS §3).
+same dirty-row stream feeds the online-update publisher
+(``repro.online.UpdatePublisher``).
+
+Concurrency: the ETC is confined to the training thread (its arrays are
+mutated between jitted steps); nothing here is shared with the serving
+stack — published updates travel by value over the message bus.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,16 +42,42 @@ class EmbeddingTrainingCache:
 
     def __init__(self, tables: Sequence[EmbeddingTableConfig],
                  capacity: int, ps):
-        for t in tables:
-            if t.vocab_size < capacity:
-                pass  # cache larger than table is fine, just wasteful
+        max_vocab = max(t.vocab_size for t in tables)
+        if capacity > max_vocab:
+            warnings.warn(
+                f"ETC cache capacity {capacity} exceeds the largest "
+                f"table vocab {max_vocab}; clamping to {max_vocab} — a "
+                "cache row beyond a table's vocab can never be resident",
+                RuntimeWarning, stacklevel=2)
+            capacity = max_vocab
+        else:
+            small = [t.name for t in tables if t.vocab_size < capacity]
+            if small:
+                warnings.warn(
+                    f"table(s) {small} have vocab < ETC cache capacity "
+                    f"{capacity}: they fit entirely, the surplus rows "
+                    "stay unused", RuntimeWarning, stacklevel=2)
         self.tables = tuple(tables)
         self.capacity = capacity
         self.ps = ps
-        # per table: id -> slot (ordered = LRU), free slot list
-        self._lru: List[OrderedDict] = [OrderedDict() for _ in tables]
-        self._free: List[List[int]] = [list(range(capacity))[::-1]
-                                       for _ in tables]
+        # per-table residency state, all array-valued:
+        #   _slot_ids[ti][slot] = resident id (-1 free)
+        #   _last_used[ti][slot] = LRU stamp (prepare() clock)
+        #   _sorted_ids/_sorted_slots[ti] = the searchsorted index
+        self._slot_ids: List[np.ndarray] = [
+            np.full(capacity, -1, np.int64) for _ in tables]
+        self._last_used: List[np.ndarray] = [
+            np.zeros(capacity, np.int64) for _ in tables]
+        self._sorted_ids: List[np.ndarray] = [
+            np.empty(0, np.int64) for _ in tables]
+        self._sorted_slots: List[np.ndarray] = [
+            np.empty(0, np.int64) for _ in tables]
+        # ids staged since the last drain_touched() — the full keyset a
+        # training pass touched, INCLUDING rows evicted mid-pass (the
+        # resident set alone under-reports what an online update must
+        # publish)
+        self._touched: List[List[np.ndarray]] = [[] for _ in tables]
+        self._clock = 0
         self.evictions = 0
         self.pulls = 0
 
@@ -54,6 +93,31 @@ class EmbeddingTrainingCache:
                              jnp.float32),
         }
 
+    # -- residency index helpers ---------------------------------------------
+
+    def _rebuild_index(self, ti: int) -> None:
+        slot_ids = self._slot_ids[ti]
+        res = np.flatnonzero(slot_ids >= 0)
+        order = np.argsort(slot_ids[res], kind="stable")
+        self._sorted_ids[ti] = slot_ids[res][order]
+        self._sorted_slots[ti] = res[order]
+
+    def _residency(self, ti: int, uniq: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """(resident mask over ``uniq``, slots of the resident ids)."""
+        sids = self._sorted_ids[ti]
+        if sids.size == 0:
+            return np.zeros(uniq.size, bool), np.empty(0, np.int64)
+        pos = np.searchsorted(sids, uniq)
+        inb = pos < sids.size
+        mask = np.zeros(uniq.size, bool)
+        mask[inb] = sids[pos[inb]] == uniq[inb]
+        return mask, self._sorted_slots[ti][pos[mask]]
+
+    def resident_ids(self, table_idx: int) -> np.ndarray:
+        """Ids currently resident for one table (sorted)."""
+        return self._sorted_ids[table_idx].copy()
+
     # -- the host-side staging step -------------------------------------------
 
     def prepare(self, params: Dict[str, jax.Array], cat: np.ndarray
@@ -62,75 +126,105 @@ class EmbeddingTrainingCache:
         cache = params["cache"]
         acc = params["acc"]
         remapped = np.full_like(cat, -1)
-        host_cache = None  # lazily materialized for eviction writeback
+        self._clock += 1
+        host_cache = host_acc = None  # lazy, for eviction writeback
         for ti, t in enumerate(self.tables):
-            ids = cat[:, ti, :]
-            uniq = np.unique(ids[ids >= 0])
-            lru, free = self._lru[ti], self._free[ti]
-            missing = [i for i in map(int, uniq) if i not in lru]
-            if len(uniq) > self.capacity:
+            ids = np.asarray(cat[:, ti, :], np.int64)
+            valid = ids >= 0
+            uniq = np.unique(ids[valid])
+            if uniq.size > self.capacity:
                 raise ValueError(
-                    f"table {t.name}: batch needs {len(uniq)} unique rows "
+                    f"table {t.name}: batch needs {uniq.size} unique rows "
                     f"> cache capacity {self.capacity}")
-            # touch resident ids needed by THIS batch first, so the LRU
-            # eviction below cannot evict them (regression: KeyError on
-            # remap when a current-batch id was evicted to make room)
-            for i in map(int, uniq):
-                if i in lru:
-                    lru.move_to_end(i)
-            if len(missing) > len(free):
-                need = len(missing) - len(free)
+            if uniq.size:
+                self._touched[ti].append(uniq)
+            slot_ids = self._slot_ids[ti]
+            last = self._last_used[ti]
+            res_mask, res_slots = self._residency(ti, uniq)
+            missing = uniq[~res_mask]
+            # stamp resident ids needed by THIS batch first, so eviction
+            # below can never pick them (regression: a current-batch id
+            # evicted to make room broke the remap)
+            last[res_slots] = self._clock
+            free = np.flatnonzero(slot_ids < 0)
+            need = missing.size - free.size
+            if need > 0:
                 if host_cache is None:
                     host_cache = np.asarray(cache)
                     host_acc = np.asarray(acc)
-                evict_ids, evict_slots = [], []
-                for _ in range(need):
-                    old_id, old_slot = lru.popitem(last=False)
-                    evict_ids.append(old_id)
-                    evict_slots.append(old_slot)
-                    free.append(old_slot)
-                self.ps.push(t.name, np.asarray(evict_ids),
-                             host_cache[ti, evict_slots])
+                evictable = np.flatnonzero(
+                    (slot_ids >= 0) & (last < self._clock))
+                # deterministic victim choice: oldest stamp first, slot
+                # index breaking ties (lexsort: last key is primary)
+                order = np.lexsort((evictable, last[evictable]))
+                victims = evictable[order[:need]]
+                evict_ids = slot_ids[victims]
+                self.ps.push(t.name, evict_ids, host_cache[ti, victims])
                 if hasattr(self.ps, "push_state"):
-                    self.ps.push_state(t.name, np.asarray(evict_ids),
-                                       host_acc[ti, evict_slots])
+                    self.ps.push_state(t.name, evict_ids,
+                                       host_acc[ti, victims])
+                slot_ids[victims] = -1
+                last[victims] = 0
                 self.evictions += need
-            if missing:
-                slots = [free.pop() for _ in missing]
-                rows = self.ps.pull(t.name, np.asarray(missing))
-                cache = cache.at[ti, np.asarray(slots)].set(
-                    jnp.asarray(rows))
-                acc = acc.at[ti, np.asarray(slots)].set(0.0)
-                for i, s in zip(missing, slots):
-                    lru[i] = s
-                self.pulls += len(missing)
-            # touch + remap
-            for b in range(ids.shape[0]):
-                for h in range(ids.shape[1]):
-                    v = int(ids[b, h])
-                    if v >= 0:
-                        lru.move_to_end(v)
-                        remapped[b, ti, h] = lru[v]
+                free = np.flatnonzero(slot_ids < 0)
+            if missing.size:
+                slots = free[:missing.size]
+                rows = self.ps.pull(t.name, missing)
+                # ONE device scatter fills every pulled row
+                cache = cache.at[ti, slots].set(
+                    jnp.asarray(rows, jnp.float32))
+                if hasattr(self.ps, "pull_state"):
+                    st = self.ps.pull_state(t.name, missing)
+                    acc = acc.at[ti, slots].set(
+                        jnp.asarray(st, jnp.float32))
+                else:
+                    acc = acc.at[ti, slots].set(0.0)
+                slot_ids[slots] = missing
+                last[slots] = self._clock
+                self.pulls += missing.size
+            self._rebuild_index(ti)
+            # ONE searchsorted remaps the whole [B, H] block
+            sids = self._sorted_ids[ti]
+            if sids.size:
+                probe = np.where(valid, ids, sids[0])
+                pos = np.searchsorted(sids, probe)
+                slots_of = self._sorted_slots[ti][
+                    np.minimum(pos, sids.size - 1)]
+                remapped[:, ti, :] = np.where(valid, slots_of, -1)
         return {"cache": cache, "acc": acc}, remapped
 
     def flush(self, params: Dict[str, jax.Array]) -> None:
+        """Write every resident row (and optimizer state) back to the PS
+        — one batched push per table."""
         host = np.asarray(params["cache"])
+        host_acc = np.asarray(params["acc"])
         for ti, t in enumerate(self.tables):
-            lru = self._lru[ti]
-            if not lru:
+            ids = self._sorted_ids[ti]
+            if ids.size == 0:
                 continue
-            ids = np.fromiter(lru.keys(), np.int64, len(lru))
-            slots = np.fromiter(lru.values(), np.int64, len(lru))
+            slots = self._sorted_slots[ti]
             self.ps.push(t.name, ids, host[ti, slots])
+            if hasattr(self.ps, "push_state"):
+                self.ps.push_state(t.name, ids, host_acc[ti, slots])
+
+    def drain_touched(self, table_idx: int) -> np.ndarray:
+        """Sorted unique ids staged since the last drain — a pass's full
+        keyset. After ``flush()`` the PS holds every one of these ids'
+        trained value (evicted rows were written back at eviction time),
+        so ``ps.pull`` over this set is the complete online-update feed."""
+        if not self._touched[table_idx]:
+            return np.empty(0, np.int64)
+        out = np.unique(np.concatenate(self._touched[table_idx]))
+        self._touched[table_idx] = []
+        return out
 
     def dirty_rows(self, params: Dict[str, jax.Array], table_idx: int
                    ) -> Tuple[np.ndarray, np.ndarray]:
         """(ids, rows) currently resident — the online-update feed."""
         host = np.asarray(params["cache"])
-        lru = self._lru[table_idx]
-        ids = np.fromiter(lru.keys(), np.int64, len(lru))
-        slots = np.fromiter(lru.values(), np.int64, len(lru))
-        return ids, host[table_idx, slots]
+        ids = self._sorted_ids[table_idx]
+        slots = self._sorted_slots[table_idx]
+        return ids.copy(), host[table_idx, slots]
 
 
 def cached_lookup(params: Dict[str, jax.Array], remapped: jax.Array

@@ -16,21 +16,37 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
-def _serialize(ids: np.ndarray, rows: np.ndarray) -> bytes:
+def _serialize(ids: np.ndarray, rows: np.ndarray,
+               version: int = 0) -> bytes:
+    """Wire format: ``<IIQ`` (rows, dim, version) + int64 ids + f32 rows.
+
+    ``version`` is the producer-assigned update version (a monotonically
+    increasing pass/window counter) — consumers surface the last version
+    seen per topic so the freshness loop can measure publish->visible
+    lag end to end."""
     buf = io.BytesIO()
     n, d = rows.shape
-    buf.write(struct.pack("<II", n, d))
+    buf.write(struct.pack("<IIQ", n, d, version))
     buf.write(np.ascontiguousarray(ids, np.int64).tobytes())
     buf.write(np.ascontiguousarray(rows, np.float32).tobytes())
     return buf.getvalue()
 
 
+_HEADER = struct.calcsize("<IIQ")
+
+
 def _deserialize(data: bytes) -> Tuple[np.ndarray, np.ndarray]:
-    n, d = struct.unpack_from("<II", data, 0)
-    off = 8
+    ids, rows, _ = _deserialize_versioned(data)
+    return ids, rows
+
+
+def _deserialize_versioned(data: bytes
+                           ) -> Tuple[np.ndarray, np.ndarray, int]:
+    n, d, version = struct.unpack_from("<IIQ", data, 0)
+    off = _HEADER
     ids = np.frombuffer(data, np.int64, n, off)
     rows = np.frombuffer(data, np.float32, n * d, off + 8 * n).reshape(n, d)
-    return ids.copy(), rows.copy()
+    return ids.copy(), rows.copy(), version
 
 
 class MessageBus:
@@ -79,7 +95,8 @@ class Producer:
         if sum(len(i) for i, _ in pend) >= self.max_batch_rows:
             self.flush(table)
 
-    def flush(self, table: Optional[str] = None) -> None:
+    def flush(self, table: Optional[str] = None, *,
+              version: int = 0) -> None:
         tables = [table] if table else list(self._pending)
         for t in tables:
             pend = self._pending.pop(t, [])
@@ -88,16 +105,23 @@ class Producer:
             ids = np.concatenate([i for i, _ in pend])
             rows = np.concatenate([r for _, r in pend])
             self.bus.publish(self.bus.topic(self.model, t),
-                             _serialize(ids, rows))
+                             _serialize(ids, rows, version))
 
 
 class Consumer:
-    """Message Source API — subscribe + apply (inference side)."""
+    """Message Source API — subscribe + apply (inference side).
+
+    ``last_versions`` maps each table to the highest producer version
+    applied so far — the inference-side half of the freshness contract:
+    once ``last_versions[table] >= v``, every row of update ``v`` has
+    been applied to this consumer's L2/L3 (and its L1 rows marked
+    dirty)."""
 
     def __init__(self, bus: MessageBus, model: str):
         self.bus = bus
         self.model = model
         self._offsets: Dict[str, int] = {}
+        self.last_versions: Dict[str, int] = {}
 
     def discover(self) -> List[str]:
         prefix = f"hps.{self.model}."
@@ -112,7 +136,9 @@ class Consumer:
             msgs, off = self.bus.fetch(topic, off)
             self._offsets[topic] = off
             for m in msgs:
-                ids, rows = _deserialize(m)
+                ids, rows, version = _deserialize_versioned(m)
                 apply_fn(table, ids, rows)
+                if version > self.last_versions.get(table, -1):
+                    self.last_versions[table] = version
                 n += 1
         return n

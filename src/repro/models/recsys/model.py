@@ -88,6 +88,49 @@ def logical_tables(collection, emb_params) -> Dict[str, np.ndarray]:
     return out
 
 
+def import_logical_tables(collection, emb_params,
+                          tables: Dict[str, np.ndarray]) -> Dict:
+    """Inverse of :func:`logical_tables`: write per-table FULL weight
+    arrays back into the collection's logical layout and import for this
+    mesh. ``emb_params`` supplies the layout template (and the values of
+    any table absent from ``tables``) — the ETC trainer uses this to
+    fold parameter-server contents back into a servable param tree."""
+    logical = {}
+    for k, v in collection.export_logical(emb_params).items():
+        if isinstance(v, list):
+            logical[k] = [np.array(x) for x in v]
+        else:
+            logical[k] = np.array(v)
+    for gname, group in collection.groups.items():
+        if gname == "cold":
+            continue               # written through "hot" below
+        for i, (t, off) in enumerate(zip(group.tables, group.offsets)):
+            if t.name not in tables:
+                continue
+            full = np.asarray(tables[t.name], np.float32)
+            if full.shape != (t.vocab_size, t.dim):
+                raise ValueError(
+                    f"table {t.name}: got {full.shape}, want "
+                    f"({t.vocab_size}, {t.dim})")
+            end = group.offsets[i + 1] if i + 1 < group.num_tables \
+                else group.total_rows
+            if gname == "hot":
+                cg = collection.groups["cold"]
+                coff = cg.offsets[i]
+                cend = cg.offsets[i + 1] if i + 1 < cg.num_tables \
+                    else cg.total_rows
+                nhot = end - off
+                logical["hot"][off:end] = full[:nhot]
+                logical["cold"][coff:cend] = full[nhot:]
+            elif gname == "loc":
+                logical["loc"][i][:t.vocab_size] = full
+            else:
+                logical[gname][off:end] = full
+    return collection.import_logical(
+        {k: ([jnp.asarray(x) for x in v] if isinstance(v, list)
+             else jnp.asarray(v)) for k, v in logical.items()})
+
+
 class RecsysModel:
 
     def __init__(self, cfg: RecsysConfig, mesh: Mesh, *,

@@ -709,6 +709,18 @@ class InferenceServer:
         with self._admit_lock:
             self.requests_shed = 0
 
+    def update_versions(self) -> Dict[str, int]:
+        """Highest online-update version applied per table, across every
+        HPS this server reads from — the serving half of the freshness
+        contract (``repro.online.UpdatePublisher`` stamps the versions;
+        a freshness probe polls this until the published version lands)."""
+        out: Dict[str, int] = {}
+        for hps in (self.hps, self.wide_hps, *self.extra_hps.values()):
+            if hps is None or hps.consumer is None:
+                continue
+            out.update(hps.consumer.last_versions)
+        return out
+
     def counters(self) -> Dict[str, int]:
         """Lock-consistent snapshot of the serving counters."""
         with self._stats_lock:
